@@ -1,0 +1,124 @@
+"""Benchmarks mapped one-to-one to the paper's empirical artifacts.
+
+  table1    — §5.2 Table 1: fit time / billed GB-s / per-invocation duration
+              / response time (mean, min, max over repeats), 1024 MB,
+              per-split scaling, bonus data, K=5 x M=100 x L=2.
+  figure3   — §5.2 Fig. 3(a-d): time & cost vs memory x scaling level.
+  fusion    — DESIGN.md §2: fused task-batch vs sequential per-invocation
+              loop (the TPU-native replacement for FaaS concurrency).
+  kernelcmp — crossfit_gram Pallas (interpret) vs jnp oracle agreement +
+              oracle timing (the real-time path on CPU).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def table1(n_rep: int = 100, repeats: int = 5, memory_mb: int = 1024) -> Dict:
+    import jax
+    from repro.core import DoubleMLServerless
+    from repro.configs.dml_plr_bonus import PAPER_TABLE1, USD_PER_GB_S
+    from repro.data import make_bonus_data
+    from repro.serverless import PoolConfig
+
+    data = make_bonus_data()
+    fit, billed, per_inv, resp = [], [], [], []
+    for r in range(repeats):
+        est = DoubleMLServerless(
+            model="plr", n_folds=5, n_rep=n_rep, learner="ridge",
+            learner_params={"reg": 1.0}, scaling="n_rep",
+            pool=PoolConfig(n_workers=8, memory_mb=memory_mb), seed=42 + r)
+        res = est.fit(data)
+        s = res.report.summary()
+        fit.append(s["fit_time_s"])
+        billed.append(s["billed_gb_s"])
+        per_inv.append(s["avg_duration_s"])
+        resp.append(s["response_time_s"])
+
+    def stats(v):
+        return {"mean": float(np.mean(v)), "min": float(np.min(v)),
+                "max": float(np.max(v))}
+
+    out = {
+        "fit_time_s": stats(fit),
+        "billed_gb_s": stats(billed),
+        "avg_duration_per_invocation_s": stats(per_inv),
+        "total_response_time_s": stats(resp),
+        "usd": stats([b * USD_PER_GB_S for b in billed]),
+        "paper_reference": PAPER_TABLE1,
+        "n_invocations": 2 * n_rep,
+    }
+    return out
+
+
+def figure3(n_rep: int = 20, repeats: int = 3) -> List[Dict]:
+    import sys
+    sys.path.insert(0, ".")
+    from examples.serverless_scaling import run_sweep
+    rows = run_sweep(n_rep=n_rep, repeats=repeats, simulate=True)
+    return [{"scaling": s, "memory_mb": m, "time_s": t, "gb_s": c}
+            for s, m, t, c in rows]
+
+
+def fusion_speedup(n_tasks: int = 64) -> Dict:
+    """Fused batched cross-fit vs per-task loop (same math)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.learners import get_learner
+    from repro.data import make_bonus_data
+
+    data = make_bonus_data()
+    x = jnp.asarray(data["x"])
+    n = x.shape[0]
+    rng = np.random.default_rng(0)
+    w = jnp.asarray((rng.random((n_tasks, n)) > 0.2).astype(np.float32))
+    y = jnp.asarray(np.tile(data["y"], (n_tasks, 1)))
+    fn = get_learner("ridge", {"reg": 1.0})
+    key = jax.random.key(0)
+
+    fused = jax.jit(lambda: fn(x, y, w, key))
+    jax.block_until_ready(fused())
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(fused())
+    fused_s = (time.perf_counter() - t0) / 3
+
+    single = jax.jit(lambda yt, wt: fn(x, yt[None], wt[None], key))
+    jax.block_until_ready(single(y[0], w[0]))
+    t0 = time.perf_counter()
+    for t in range(n_tasks):
+        jax.block_until_ready(single(y[t], w[t]))
+    loop_s = time.perf_counter() - t0
+
+    return {"n_tasks": n_tasks, "fused_s": fused_s, "loop_s": loop_s,
+            "speedup": loop_s / fused_s}
+
+
+def kernel_compare() -> Dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.crossfit_gram import crossfit_gram_pallas
+
+    k = jax.random.key(0)
+    x = jax.random.normal(k, (5120, 18), jnp.float32)
+    w = (jax.random.uniform(jax.random.fold_in(k, 1), (64, 5120)) > 0.2) \
+        .astype(jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(k, 2), (64, 5120), jnp.float32)
+    g_p, b_p = crossfit_gram_pallas(
+        jnp.pad(x, ((0, 0), (0, 110))), w, y, block_t=8, block_n=512,
+        interpret=True)
+    g_r, b_r = ref.crossfit_gram_ref(x, w, y)
+    err = float(jnp.max(jnp.abs(g_p[:, :18, :18] - g_r)))
+
+    fn = jax.jit(lambda: ref.crossfit_gram_ref(x, w, y))
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(fn())
+    oracle_us = (time.perf_counter() - t0) / 10 * 1e6
+    return {"max_abs_err": err, "oracle_us_per_call": oracle_us,
+            "tasks": 64, "n_obs": 5120}

@@ -1,0 +1,76 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable (d)).
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only table1,fusion
+  PYTHONPATH=src python -m benchmarks.run --fast      # CI-sized
+
+CSV columns: name, us_per_call (wall time of the benchmarked unit),
+derived (the paper-relevant figure for that table).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import paper_tables as T
+
+    results = {}
+    rows = []
+
+    def want(name):
+        return only is None or name in only
+
+    if want("table1"):
+        n_rep = 10 if args.fast else 100
+        repeats = 2 if args.fast else 5
+        t1 = T.table1(n_rep=n_rep, repeats=repeats)
+        results["table1"] = t1
+        rows.append(("table1_fit_time", t1["fit_time_s"]["mean"] * 1e6,
+                     f"billed_gb_s={t1['billed_gb_s']['mean']:.2f}"))
+        rows.append(("table1_response_time",
+                     t1["total_response_time_s"]["mean"] * 1e6,
+                     f"avg_inv_s={t1['avg_duration_per_invocation_s']['mean']:.4f}"))
+
+    if want("figure3"):
+        f3 = T.figure3(n_rep=5 if args.fast else 20,
+                       repeats=2 if args.fast else 3)
+        results["figure3"] = f3
+        for row in f3:
+            rows.append((f"fig3_{row['scaling']}_{row['memory_mb']}mb",
+                         row["time_s"] * 1e6,
+                         f"gb_s={row['gb_s']:.2f}"))
+
+    if want("fusion"):
+        fu = T.fusion_speedup(n_tasks=16 if args.fast else 64)
+        results["fusion"] = fu
+        rows.append(("fusion_batched_crossfit", fu["fused_s"] * 1e6,
+                     f"speedup_vs_loop={fu['speedup']:.1f}x"))
+
+    if want("kernelcmp"):
+        kc = T.kernel_compare()
+        results["kernelcmp"] = kc
+        rows.append(("crossfit_gram_oracle", kc["oracle_us_per_call"],
+                     f"pallas_max_err={kc['max_abs_err']:.2e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Figure-3 reproduction: fit time and billed cost vs worker memory, for both
+scaling levels (paper §5.2).  Uses the simulated Lambda timing model for the
+memory/vCPU curve plus REAL measured wave compute on this host.
+
+Run:  PYTHONPATH=src python examples/serverless_scaling.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.dml_plr_bonus import FIG3_MEMORY_GRID, FIG3_SCALING_GRID, USD_PER_GB_S
+from repro.core import DoubleMLServerless
+from repro.data import make_bonus_data
+from repro.serverless import PoolConfig
+
+
+def run_sweep(n_rep: int = 20, repeats: int = 3, simulate: bool = True):
+    data = make_bonus_data()
+    rows = []
+    for scaling in FIG3_SCALING_GRID:
+        for mem in FIG3_MEMORY_GRID:
+            times, costs = [], []
+            for r in range(repeats):
+                pool = PoolConfig(n_workers=10_000, memory_mb=mem,
+                                  scaling=scaling, simulate=simulate,
+                                  base_work_s=0.35, seed=r)
+                est = DoubleMLServerless(model="plr", n_folds=5,
+                                         n_rep=n_rep, learner="ridge",
+                                         learner_params={"reg": 1.0},
+                                         scaling=scaling, pool=pool,
+                                         seed=42 + r)
+                res = est.fit(data)
+                times.append(res.report.response_time_s)
+                costs.append(res.report.bill.total_gb_s)
+            rows.append((scaling, mem, float(np.mean(times)),
+                         float(np.mean(costs))))
+    return rows
+
+
+def main():
+    rows = run_sweep()
+    print(f"{'scaling':>16} {'memory':>7} {'time_s':>9} {'GB-s':>9} {'USD':>9}")
+    for scaling, mem, t, c in rows:
+        print(f"{scaling:>16} {mem:>7} {t:>9.2f} {c:>9.1f} "
+              f"{c * USD_PER_GB_S:>9.5f}")
+    # the two paper claims (Fig 3):
+    per_split = [(m, t, c) for s, m, t, c in rows if s == "n_rep"]
+    per_fold = [(m, t, c) for s, m, t, c in rows if s != "n_rep"]
+    t_ps = [t for _, t, _ in per_split]
+    assert all(b < a for a, b in zip(t_ps, t_ps[1:])), \
+        "time must fall with memory"
+    faster = sum(int(f[1] < s[1]) for f, s in zip(per_fold, per_split))
+    print(f"\nper-fold faster than per-split at {faster}/{len(per_split)} "
+          f"memory points (paper: always)")
+    print("marginal time improvements (per-split): " + ", ".join(
+        f"{(a - b) / a:.1%}" for a, b in zip(t_ps, t_ps[1:])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture/shape/config registry.
+
+``get_arch("qwen2.5-32b")`` returns the full assigned config;
+``get_arch("qwen2.5-32b", reduced=True)`` the CPU smoke variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    ArchConfig,
+    AttentionConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+    SHAPE_BY_NAME,
+    shape_applicable,
+)
+
+_ARCH_MODULES = {
+    "xlstm-350m": "xlstm_350m",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "yi-34b": "yi_34b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-base": "whisper_base",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+}
+
+ARCH_NAMES: List[str] = list(_ARCH_MODULES)
+
+
+def get_arch(name: str, reduced: bool = False) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    cfg: ArchConfig = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_archs(reduced: bool = False) -> Dict[str, ArchConfig]:
+    return {n: get_arch(n, reduced) for n in ARCH_NAMES}
+
+
+def get_dml_config():
+    from repro.configs.dml_plr_bonus import CONFIG
+    return CONFIG
+
+
+__all__ = [
+    "ArchConfig", "AttentionConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
+    "SHAPES", "SHAPE_BY_NAME", "shape_applicable", "ARCH_NAMES",
+    "get_arch", "all_archs", "get_dml_config",
+]

@@ -1,0 +1,9 @@
+# The paper's primary contribution: serverless-style distributed DML.
+from repro.core.crossfit import TaskGrid, draw_fold_masks, stitch_predictions
+from repro.core.dml import DMLResult, DoubleMLServerless
+from repro.core.scores import SPECS, evaluate_score, score_se, solve_theta
+
+__all__ = [
+    "TaskGrid", "draw_fold_masks", "stitch_predictions", "DMLResult",
+    "DoubleMLServerless", "SPECS", "evaluate_score", "score_se", "solve_theta",
+]

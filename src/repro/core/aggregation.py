@@ -1,0 +1,33 @@
+"""Aggregation over repeated sample splits (paper §3, final step).
+
+theta_tilde = Median_m(theta_m); the variance aggregation follows
+Chernozhukov et al. (2018) remark 3.1 / the DoubleML package:
+sigma^2 = Median_m( sigma_m^2 + (theta_m - theta_tilde)^2 ), which accounts
+for the across-split variability.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from repro.scipy_free_stats import norm_ppf
+
+
+def aggregate_thetas(thetas, ses, method: str = "median") -> Tuple[float, float]:
+    thetas = jnp.asarray(thetas)
+    ses = jnp.asarray(ses)
+    if method == "median":
+        theta = jnp.median(thetas)
+        var = jnp.median(ses**2 + (thetas - theta) ** 2)
+    elif method == "mean":
+        theta = jnp.mean(thetas)
+        var = jnp.mean(ses**2 + (thetas - theta) ** 2)
+    else:
+        raise ValueError(method)
+    return float(theta), float(jnp.sqrt(var))
+
+
+def confint(theta: float, se: float, level: float = 0.95):
+    q = norm_ppf(0.5 + level / 2)
+    return theta - q * se, theta + q * se

@@ -1,0 +1,107 @@
+"""Repeated K-fold cross-fitting (paper §3, step 1-2).
+
+The *task grid* is the paper's unit of distribution: one task = fitting one
+nuisance function on I^c_{m,k} and predicting on I_{m,k}.  Fold membership is
+encoded as dense masks so the whole grid vectorizes: training a task means a
+weighted fit with weights = (1 - fold_mask) (x subset mask for IRM/IIVM),
+predicting means evaluating on all N rows and keeping the fold rows — exactly
+the paper's "return predictions on the test indices" discipline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TaskKey:
+    """Identifies one unit of work at per-fold granularity."""
+    rep: int          # m in [M]
+    fold: int         # k in [K]
+    nuisance: int     # l in [L]
+
+    def flat(self, n_folds: int, n_nuisance: int) -> int:
+        return (self.rep * n_folds + self.fold) * n_nuisance + self.nuisance
+
+
+def draw_fold_masks(n_obs: int, n_folds: int, n_rep: int,
+                    seed: int = 42) -> np.ndarray:
+    """(M, K, N) boolean; fold_masks[m, k, i] == i in I_{m,k}.
+
+    Partitions are exact (sizes differ by <=1 when K does not divide N) and
+    reproducible via numpy Philox streams keyed on (seed, m) — workers can
+    re-derive their split without any data movement (paper §6
+    "Reproducibility and seeds").
+    """
+    masks = np.zeros((n_rep, n_folds, n_obs), dtype=bool)
+    for m in range(n_rep):
+        rng = np.random.Generator(np.random.Philox(key=seed + 7919 * m))
+        perm = rng.permutation(n_obs)
+        for k, chunk in enumerate(np.array_split(perm, n_folds)):
+            masks[m, k, chunk] = True
+    return masks
+
+
+def check_partition(masks: np.ndarray) -> bool:
+    """Every rep's folds partition [N]."""
+    return bool((masks.sum(axis=1) == 1).all())
+
+
+def subset_mask(subset: str, data) -> Optional[np.ndarray]:
+    """Row restriction for conditional nuisances (IRM/IIVM)."""
+    if subset == "all":
+        return None
+    var, val = subset[0], int(subset[1])
+    return np.asarray(data[{"d": "d", "z": "z"}[var]]) == val
+
+
+@dataclass(frozen=True)
+class TaskGrid:
+    """The full M x K x L grid plus the two paper scaling levels (§4.2)."""
+    n_rep: int
+    n_folds: int
+    n_nuisance: int
+
+    @property
+    def n_tasks(self) -> int:
+        return self.n_rep * self.n_folds * self.n_nuisance
+
+    def keys(self):
+        for m in range(self.n_rep):
+            for k in range(self.n_folds):
+                for l in range(self.n_nuisance):
+                    yield TaskKey(m, k, l)
+
+    def n_invocations(self, scaling: str) -> int:
+        if scaling == "n_rep":
+            return self.n_rep * self.n_nuisance          # paper: M*L
+        if scaling == "n_folds*n_rep":
+            return self.n_rep * self.n_folds * self.n_nuisance
+        raise ValueError(scaling)
+
+    def invocation_of(self, key: TaskKey, scaling: str) -> int:
+        """Which invocation (lambda analogue) a task belongs to."""
+        if scaling == "n_rep":
+            return key.rep * self.n_nuisance + key.nuisance
+        return key.flat(self.n_folds, self.n_nuisance)
+
+    def tasks_of_invocation(self, inv: int, scaling: str) -> Tuple[TaskKey, ...]:
+        if scaling == "n_rep":
+            m, l = divmod(inv, self.n_nuisance)
+            return tuple(TaskKey(m, k, l) for k in range(self.n_folds))
+        rest, l = divmod(inv, self.n_nuisance)
+        m, k = divmod(rest, self.n_folds)
+        return (TaskKey(m, k, l),)
+
+
+def stitch_predictions(fold_masks: np.ndarray, fold_preds: np.ndarray):
+    """Combine per-fold test predictions into full-N cross-fitted vectors.
+
+    fold_masks: (M, K, N) bool; fold_preds: (M, K, N) where entry [m,k,:]
+    is the prediction vector of task (m,k) (only fold rows are used).
+    Returns (M, N).
+    """
+    return np.einsum("mkn,mkn->mn", fold_masks.astype(fold_preds.dtype),
+                     fold_preds)

@@ -1,0 +1,5 @@
+from repro.data.bonus import make_bonus_data, N_BONUS, TRUE_EFFECT
+from repro.data.dgp import make_irm_data, make_pliv_data, make_plr_data
+
+__all__ = ["make_bonus_data", "N_BONUS", "TRUE_EFFECT", "make_irm_data",
+           "make_pliv_data", "make_plr_data"]

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+Forward-only fused attention for the 32k prefill path: causal and
+sliding-window masking, GQA handled by the wrapper (q grouped into the
+batch*kv_head axis).  Tiling: grid (BH, q_blocks, kv_blocks) with the
+kv-block loop innermost; running (m, l, acc) statistics live in VMEM
+scratch across kv blocks.  Out-of-range blocks (fully masked by causality
+or the window) are skipped with pl.when, so the sliding-window cell does
+O(S*W) work, not O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, offset: int, n_kb: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = qi * block_q + offset          # absolute position of first query
+    k0 = kj * block_k
+    # Block-level skip: no key in this block can be visible to any query.
+    visible = True
+    if causal:
+        visible = k0 <= q0 + block_q - 1
+    if window is not None:
+        visible = visible & (k0 + block_k - 1 > q0 - window)
+
+    @pl.when(visible)
+    def _work():
+        q = q_ref[...].astype(F32) * scale                  # (bq, D)
+        k = k_ref[...].astype(F32)                          # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)  # (bq, bk)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones_like(s, bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_ref[...].astype(F32), (((1,), (0,)), ((), ())),
+            preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = False):
+    """q: (BH, Sq, D); k/v: (BH, Skv, D).  Query i has absolute position
+    (Skv - Sq + i), i.e. suffix alignment (standard prefill)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+    grid = (bh, sq // block_q, skv // block_k)
+    kern = functools.partial(
+        _kernel, scale=1.0 / np.sqrt(d), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, offset=skv - sq,
+        n_kb=skv // block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), F32),       # running max
+            pltpu.VMEM((block_q, 1), F32),       # running sum
+            pltpu.VMEM((block_q, d), F32),       # running output
+        ],
+        interpret=interpret,
+    )(q, k, v)

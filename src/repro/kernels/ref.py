@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def crossfit_gram_ref(x, w, y, reg: float = 0.0):
+    """Per-task masked Gram matrices and moment vectors.
+
+    x: (N, P) features; w: (T, N) per-task training weights (0/1 fold masks,
+    possibly fractional for weighted fits); y: (T, N) per-task targets.
+    Returns (G, b): G (T, P, P) = X' diag(w_t) X + reg*I;  b (T, P) =
+    X' (w_t * y_t).  f32 accumulation.
+    """
+    xf = x.astype(F32)
+    wf = w.astype(F32)
+    yf = y.astype(F32)
+    g = jnp.einsum("np,tn,nq->tpq", xf, wf, xf)
+    if reg:
+        g = g + reg * jnp.eye(x.shape[1], dtype=F32)
+    b = jnp.einsum("tn,np->tp", wf * yf, xf)
+    return g, b
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """Masked softmax attention oracle.
+
+    q: (B, Sq, D); k/v: (B, Skv, D) — head dim folded into B by the wrapper.
+    Query i attends to keys with absolute position <= (Skv - Sq + i).
+    """
+    b, sq, d = q.shape
+    skv = k.shape[1]
+    off = skv - sq
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(F32), k.astype(F32)) / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None] + off
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(F32)).astype(q.dtype)
+
+
+def ssd_scan_ref(xbar, la, bm, cm):
+    """Sequential SSD oracle: S_t = exp(la_t) S_{t-1} + bm_t xbar_t^T;
+    y_t = cm_t . S_t.
+
+    xbar: (B, S, P); la: (B, S); bm/cm: (B, S, N).  (head folded into B.)
+    Returns y (B, S, P) f32 and final state (B, N, P).
+    """
+    def step(state, inp):
+        xb, a, b_, c_ = inp
+        state = state * jnp.exp(a)[:, None, None] \
+            + jnp.einsum("bn,bp->bnp", b_, xb)
+        return state, jnp.einsum("bn,bnp->bp", c_, state)
+
+    b, s, p = xbar.shape
+    n = bm.shape[-1]
+    s0 = jnp.zeros((b, n, p), F32)
+    mov = lambda t: jnp.moveaxis(t.astype(F32), 1, 0)
+    state, ys = jax.lax.scan(step, s0, (mov(xbar), mov(la), mov(bm), mov(cm)))
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+Grid (BH, n_chunks) with the chunk loop innermost; the (N, P) recurrent
+state per (batch*head) lane persists in VMEM scratch across chunks.  The
+within-chunk terms are dense MXU matmuls of shape (Q,N)x(N,Q) and
+(Q,Q)x(Q,P); the inter-chunk term is a rank-N update — exactly the
+decomposition of Dao & Gu (2024) restructured so the state never leaves
+VMEM (HBM traffic is only the chunk inputs/outputs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, la_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(F32)          # (Q, P)
+    la = la_ref[...].astype(F32)        # (Q, 1)
+    bm = b_ref[...].astype(F32)         # (Q, N)
+    cm = c_ref[...].astype(F32)         # (Q, N)
+
+    cl = jnp.cumsum(la, axis=0)                               # (Q,1) inclusive
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=F32)  # (Q,Q)
+    diff = jnp.clip(cl - cl.T, -60.0, 0.0)                    # (Q,Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    w = jnp.where(ii >= jj, scores * jnp.exp(diff), 0.0)
+    y_intra = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=F32)
+    state = state_ref[...]                                    # (N, P)
+    y_inter = jnp.exp(cl) * jax.lax.dot_general(
+        cm, state, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+    tail = jnp.exp(cl[-1:] - cl)                              # (Q,1)
+    state_ref[...] = jnp.exp(cl[-1]) * state + jax.lax.dot_general(
+        bm * tail, x, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+
+
+def ssd_scan_pallas(xbar, la, bm, cm, *, chunk: int = 256,
+                    interpret: bool = False):
+    """xbar: (BH, S, P); la: (BH, S); bm/cm: (BH, S, N) -> y (BH, S, P) f32.
+
+    S must be a multiple of ``chunk``.
+    """
+    bh, s, p = xbar.shape
+    n = bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    grid = (bh, s // chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, p), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, chunk, 1), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, p), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), F32),
+        scratch_shapes=[pltpu.VMEM((n, p), F32)],
+        interpret=interpret,
+    )(xbar, la[..., None], bm, cm)

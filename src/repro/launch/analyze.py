@@ -1,0 +1,91 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+DOC = """Collective-schedule analyzer for §Perf hillclimbing.
+
+Lowers ONE cell at probe depth with inner loops unrolled and prints every
+collective grouped by (op, tensor type), with per-device wire bytes — the
+"profile" a dry-run can give (spec: Pallas-specific hints).
+
+  PYTHONPATH=src python -m repro.launch.analyze --arch qwen2.5-32b \
+      --shape train_4k [--variant no_seqpar]
+"""
+import argparse
+import re
+from collections import Counter, defaultdict
+
+import numpy as np
+
+from repro import runtime
+from repro.configs import SHAPE_BY_NAME, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import _GROUPS_RE, _shape_bytes, probe_plan
+
+_LINE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="default")
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    cfg = get_arch(args.arch)
+    shape = SHAPE_BY_NAME[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    runtime.mesh_axes = tuple(mesh.shape.keys())
+    rules = None
+    attn_chunk, remat = args.attn_chunk, args.remat
+    if args.variant != "default":
+        from repro.sharding.policy import apply_variant
+        rules, v = apply_variant(args.arch, shape.kind, cfg.d_model,
+                                 args.variant)
+        attn_chunk = v.attn_chunk or attn_chunk
+        remat = v.remat or remat
+
+    plan = probe_plan(cfg)
+    pcfg, trips = plan.probes[-1]          # deepest probe (2 layer trips)
+    with runtime.flags(unroll_inner=True):
+        compiled, ls, cs = lower_cell(pcfg, shape, mesh,
+                                      attn_chunk=attn_chunk, remat=remat,
+                                      rules=rules, donate=False)
+    print(f"# {args.arch} {args.shape} {args.mesh} variant={args.variant} "
+          f"(probe depth {pcfg.n_layers}, lower {ls:.0f}s compile {cs:.0f}s)")
+    groups = defaultdict(lambda: [0, 0.0])
+    for line in compiled.as_text().splitlines():
+        m = _LINE.search(line)
+        if not m or m.group(2) + "-done" in line:
+            continue
+        typ, op = m.group(1), m.group(2)
+        g = _GROUPS_RE.search(line)
+        n = int(g.group(2)) if g else 2
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        factor = {"all-reduce": 2 * ring, "all-gather": ring,
+                  "reduce-scatter": ring, "all-to-all": ring,
+                  "collective-permute": 1.0}[op]
+        key = (op, typ if len(typ) < 70 else typ[:67] + "...", n)
+        groups[key][0] += 1
+        groups[key][1] += _shape_bytes(typ) * factor
+    rows = sorted(groups.items(), key=lambda kv: -kv[1][1])[: args.top]
+    total = sum(v[1] for v in groups.values())
+    print(f"total wire bytes/device (probe): {total/2**30:.2f} GiB")
+    for (op, typ, n), (cnt, byt) in rows:
+        print(f"  {byt/2**30:8.3f} GiB  x{cnt:<3d} n={n:<3d} {op:<18s} {typ}")
+    ca = compiled.cost_analysis()
+    print(f"flops/dev {ca.get('flops', 0):.3e}  "
+          f"bytes/dev {ca.get('bytes accessed', 0):.3e}")
+
+
+if __name__ == "__main__":
+    main()

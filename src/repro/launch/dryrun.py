@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run (spec: MULTI-POD DRY-RUN).
+
+For every (architecture x input-shape x mesh) cell:
+  1. FULL compile — ``jax.jit(step).lower(...).compile()`` on the production
+     mesh with real shardings; ``memory_analysis()`` proves per-device fit,
+     the HLO text yields the collective schedule.
+  2. COST probes — small-depth variants with inner loops unrolled; layer
+     scans extrapolated linearly (launch/roofline.py) to the full depth.
+  3. Roofline terms + bottleneck + MODEL_FLOPS ratio -> JSON artifact.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+      PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+          --shape train_4k --mesh multi
+"""
+
+import argparse
+import functools
+import gc
+import json
+import time
+import traceback
+from dataclasses import replace
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime
+from repro.configs import ARCH_NAMES, SHAPE_BY_NAME, SHAPES, get_arch
+from repro.configs.base import ArchConfig, ShapeConfig, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    RooflineTerms, analytic_extra_flops, model_flops, parse_collective_bytes,
+    probe_plan, solve_extrapolation,
+)
+from repro.models import build_model
+from repro.models.param import sharding_tree, spec_tree, struct_tree
+from repro.sharding.axes import rules_for
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.trainer import make_train_step
+
+HBM_PER_CHIP = 16 * 2**30          # v5e
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes": float(ca.get("bytes accessed", 0.0))}
+    for op, val in parse_collective_bytes(compiled.as_text()).items():
+        out[f"coll_{op}"] = val
+    return out
+
+
+def microbatches(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Gradient-accumulation factor: cap per-device micro tokens at ~16k for
+    big models (napkin: activation checkpoints + attention transients scale
+    linearly with micro tokens; 16k keeps them ~1-4 GiB beside the FSDP
+    optimizer shards).  Small models (<2B) keep larger micros."""
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    per_dev_tokens = shape.tokens // dp
+    budget = 16_384 if cfg.param_count() > 2e9 else 65_536
+    m = max(1, per_dev_tokens // budget)
+    while shape.global_batch % (m * dp) and m > 1:   # micro must divide
+        m -= 1
+    return m
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+               attn_chunk: int = 1024, remat: str = "full",
+               rules=None, donate: bool = True,
+               n_microbatch: Optional[int] = None):
+    """Build + lower + compile one cell. Returns (compiled, lower_s, compile_s)."""
+    kind = shape.kind
+    rules = rules or rules_for(cfg.name, kind, cfg.d_model,
+                               shape.global_batch)
+    with mesh:
+        bundle = build_model(cfg, rules, mesh=mesh, remat=remat,
+                             attn_chunk=attn_chunk)
+        p_struct = struct_tree(bundle.decls)
+        p_shard = sharding_tree(bundle.decls, mesh, rules)
+        in_decl = bundle.input_specs(shape)
+        b_struct = struct_tree(in_decl)
+        b_shard = sharding_tree(in_decl, mesh, rules)
+
+        if kind == "train":
+            opt_cfg = OptConfig()
+            o_struct = jax.eval_shape(
+                functools.partial(init_opt_state, cfg=opt_cfg), p_struct)
+            scalar = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            o_shard = {"step": scalar, "master": p_shard, "m": p_shard,
+                       "v": p_shard}
+            step = make_train_step(
+                bundle, opt_cfg,
+                n_microbatch=n_microbatch or microbatches(cfg, shape, mesh))
+            fn = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1) if donate else ())
+            args = (p_struct, o_struct, b_struct)
+        elif kind == "prefill":
+            fn = jax.jit(bundle.prefill_fn, in_shardings=(p_shard, b_shard))
+            args = (p_struct, b_struct)
+        else:  # decode
+            c_decl = bundle.cache_decls(shape)
+            c_struct = struct_tree(c_decl)
+            c_shard = sharding_tree(c_decl, mesh, rules)
+            fn = jax.jit(bundle.decode_fn,
+                         in_shardings=(p_shard, c_shard, b_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(1,) if donate else ())
+            args = (p_struct, c_struct, b_struct)
+
+        t0 = time.perf_counter()
+        lowered = fn.lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+    return compiled, t1 - t0, t2 - t1
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             attn_chunk: int = 1024, remat: str = "full",
+             rules=None, skip_probes: bool = False,
+             variant: str = "default") -> Dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec: Dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+                 "variant": variant}
+    if not ok:
+        rec.update({"skipped": True, "reason": reason})
+        return rec
+    n_micro = None
+    if variant != "default":
+        from repro.sharding.policy import apply_variant
+        rules, v = apply_variant(arch_name, shape.kind, cfg.d_model, variant)
+        attn_chunk = v.attn_chunk or attn_chunk
+        remat = v.remat or remat
+        n_micro = v.n_microbatch
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    runtime.mesh_axes = tuple(mesh.shape.keys())
+
+    # ---- 1. full compile: memory proof + collective schedule --------------
+    compiled, lower_s, compile_s = lower_cell(
+        cfg, shape, mesh, attn_chunk=attn_chunk, remat=remat, rules=rules,
+        n_microbatch=n_micro)
+    ma = compiled.memory_analysis()
+    full_colls = parse_collective_bytes(compiled.as_text())
+    peak = ma.argument_size_in_bytes + ma.temp_size_in_bytes \
+        + ma.output_size_in_bytes - ma.alias_size_in_bytes
+    rec["full"] = {
+        "lower_s": round(lower_s, 2), "compile_s": round(compile_s, 2),
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes": int(peak),
+        "fits_hbm": bool(peak <= HBM_PER_CHIP),
+        "collective_ops": {k: int(v) for k, v in full_colls.items()},
+    }
+    del compiled
+    gc.collect()
+
+    # ---- 2. cost probes (inner loops unrolled, layer scans extrapolated) --
+    if not skip_probes:
+        plan = probe_plan(cfg)
+        probe_costs = []
+        with runtime.flags(unroll_inner=True):
+            for pcfg, _trips in plan.probes:
+                c, _, _ = lower_cell(pcfg, shape, mesh,
+                                     attn_chunk=attn_chunk, remat=remat,
+                                     rules=rules, donate=False,
+                                     n_microbatch=n_micro)
+                probe_costs.append(_cost_dict(c))
+                del c
+                gc.collect()
+        cost = solve_extrapolation(plan, probe_costs)
+        flops_dev = cost.get("flops", 0.0) \
+            + analytic_extra_flops(cfg, shape, n_dev)
+        coll_detail = {k[5:]: v for k, v in cost.items()
+                       if k.startswith("coll_")}
+        terms = RooflineTerms(
+            flops_per_dev=flops_dev,
+            bytes_per_dev=cost.get("bytes", 0.0),
+            coll_bytes_per_dev=sum(coll_detail.values()),
+            n_devices=n_dev,
+            model_flops_total=model_flops(cfg, shape),
+            coll_detail=coll_detail,
+        )
+        rec["roofline"] = terms.to_dict()
+        rec["probe_costs"] = probe_costs
+    rec["params"] = cfg.param_count()
+    rec["active_params"] = cfg.active_param_count()
+    return rec
+
+
+def cell_list():
+    """Fast-compiling families first (dense/moe/audio/vlm), recurrent stacks
+    (unrolled SSD probes are compile-heavy on 1 CPU core) last."""
+    def fam_rank(a):
+        fam = get_arch(a).family
+        return {"ssm": 2, "hybrid": 2}.get(fam, 0)
+    for a in sorted(ARCH_NAMES, key=fam_rank):
+        for s in SHAPES:
+            yield a, s.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--variant", default="default")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s, m) for a, s in cell_list() for m in meshes]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    results = []
+    tag = "" if args.variant == "default" else f"__{args.variant}"
+    for arch, shape, mesh_kind in cells:
+        path = os.path.join(args.out,
+                            f"{arch}__{shape}__{mesh_kind}{tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                prev = json.load(f)
+            if "error" not in prev:        # errored cells are retried
+                print(f"[skip] {arch} {shape} {mesh_kind}")
+                continue
+        print(f"[cell] {arch} {shape} {mesh_kind} ...", flush=True)
+        t0 = time.perf_counter()
+        try:
+            # multi-pod cells only need the compile + memory proof — the
+            # roofline table is single-pod (spec §ROOFLINE) — so probes are
+            # skipped there.
+            rec = run_cell(arch, shape, mesh_kind,
+                           attn_chunk=args.attn_chunk, remat=args.remat,
+                           skip_probes=args.skip_probes or mesh_kind == "multi",
+                           variant=args.variant)
+        except Exception as e:  # noqa: BLE001 — record, continue the sweep
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        rec["wall_s"] = round(time.perf_counter() - t0, 1)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = ("SKIP " + rec.get("reason", "")) if rec.get("skipped") \
+            else ("ERROR " + rec.get("error", "")) if "error" in rec \
+            else (f"ok fits={rec['full']['fits_hbm']} "
+                  f"peak={rec['full']['peak_bytes']/2**30:.2f}GiB "
+                  + (f"bottleneck={rec['roofline']['bottleneck']} "
+                     f"mfu_bound={rec['roofline']['mfu_bound']:.3f}"
+                     if "roofline" in rec else ""))
+        print(f"       {status} ({rec['wall_s']}s)", flush=True)
+        results.append(rec)
+        gc.collect()
+    print(f"done: {len(results)} cells")
+
+
+if __name__ == "__main__":
+    main()

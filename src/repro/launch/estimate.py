@@ -1,0 +1,158 @@
+"""DML estimation driver — the ``fit_aws_lambda()`` analogue (paper §5).
+
+  PYTHONPATH=src python -m repro.launch.estimate                 # bonus PLR
+  PYTHONPATH=src python -m repro.launch.estimate --scaling 'n_folds*n_rep' \
+      --memory 512 --workers 16
+  PYTHONPATH=src python -m repro.launch.estimate --dryrun        # production
+      mesh lowering + roofline of the fused cross-fit step (paper-technique
+      dry-run cell)
+
+The --dryrun path lowers the fused crossfit estimation (Gram + Cholesky +
+predict for the whole M*K*L grid) on the 256/512-chip production mesh with
+the task grid sharded over every mesh axis — the paper's elasticity story
+as one SPMD program.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def run_fit(args):
+    import jax
+    from repro.core import DoubleMLServerless
+    from repro.data import make_bonus_data, make_plr_data
+    from repro.serverless import PoolConfig
+
+    data = make_bonus_data() if args.data == "bonus" else make_plr_data(
+        n_obs=args.n_obs, theta=0.5, seed=args.seed)
+    pool = PoolConfig(n_workers=args.workers, memory_mb=args.memory,
+                      scaling=args.scaling, failure_rate=args.failure_rate,
+                      straggler_rate=args.straggler_rate,
+                      checkpoint_path=args.ledger,
+                      simulate=args.simulate, base_work_s=0.2)
+    est = DoubleMLServerless(
+        model=args.model, n_folds=args.folds, n_rep=args.reps,
+        learner=args.learner, learner_params={"reg": args.reg},
+        scaling=args.scaling, pool=pool, seed=args.seed)
+    res = est.fit(data, n_boot=args.boot)
+    print(json.dumps(res.summary(), indent=1, default=float))
+    if "theta0" in data:
+        print(f"true theta: {data['theta0']}")
+
+
+def run_dryrun(args):
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import functools
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import (
+        RooflineTerms, parse_collective_bytes)
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    grid_axes = tuple(mesh.shape.keys())
+
+    n, p = args.n_obs, args.dim_x + 1
+    if args.pad_features:
+        p = ((p + 127) // 128) * 128     # MXU lane alignment (§Perf)
+    t = args.reps * args.folds * 2
+    t_pad = ((t + n_dev - 1) // n_dev) * n_dev
+
+    def crossfit_step(x, w, y):
+        from repro.kernels import ops
+        g, b = ops.crossfit_gram(x, w, y, reg=args.reg)
+        chol = jax.vmap(jnp.linalg.cholesky)(g)
+        beta = jax.vmap(lambda c, bb: jax.scipy.linalg.cho_solve((c, True), bb))(
+            chol, b)
+        preds = jnp.einsum("np,tp->tn", x, beta)
+        return preds
+
+    xs = jax.ShapeDtypeStruct((n, p), jnp.float32)
+    ws = jax.ShapeDtypeStruct((t_pad, n), jnp.float32)
+    ys = jax.ShapeDtypeStruct((t_pad, n), jnp.float32)
+    if args.shard_n:
+        # huge-N regime (paper §6 "big data"): shard observations over
+        # "data", tasks over the remaining axes; Gram accumulates via psum
+        n_axes = ("data",)
+        t_axes = tuple(a for a in grid_axes if a != "data")
+        t_pad = ((t + 63) // 64) * 64
+        ws = jax.ShapeDtypeStruct((t_pad, n), jnp.float32)
+        ys = jax.ShapeDtypeStruct((t_pad, n), jnp.float32)
+        x_sharding = NamedSharding(mesh, P(n_axes, None))
+        task_sharding = NamedSharding(mesh, P(t_axes, n_axes))
+        out_sharding = NamedSharding(mesh, P(t_axes, n_axes))
+    else:
+        x_sharding = NamedSharding(mesh, P())
+        task_sharding = NamedSharding(mesh, P(grid_axes, None))
+        out_sharding = task_sharding
+    with mesh:
+        lowered = jax.jit(crossfit_step,
+                          in_shardings=(x_sharding, task_sharding,
+                                        task_sharding),
+                          out_shardings=out_sharding).lower(xs, ws, ys)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    colls = parse_collective_bytes(compiled.as_text())
+    terms = RooflineTerms(
+        flops_per_dev=float(ca.get("flops", 0.0)),
+        bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_dev=sum(colls.values()),
+        n_devices=n_dev,
+        # useful flops: Gram (N*P^2) + chol (P^3/3) + solve + predict per task
+        model_flops_total=float(t) * (2 * n * p * p + p**3 / 3
+                                      + 2 * p * p + 2 * n * p),
+        coll_detail=colls)
+    print(json.dumps({
+        "cell": f"dml_crossfit__{args.mesh}",
+        "tasks": t, "tasks_padded": t_pad, "n_obs": n, "features": p,
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "roofline": terms.to_dict(),
+    }, indent=1))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"cell": f"dml_crossfit__{args.mesh}",
+                       "roofline": terms.to_dict()}, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="bonus", choices=["bonus", "plr"])
+    ap.add_argument("--model", default="plr")
+    ap.add_argument("--learner", default="ridge")
+    ap.add_argument("--reg", type=float, default=1.0)
+    ap.add_argument("--folds", type=int, default=5)
+    ap.add_argument("--reps", type=int, default=100)
+    ap.add_argument("--scaling", default="n_rep",
+                    choices=["n_rep", "n_folds*n_rep"])
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--memory", type=int, default=1024)
+    ap.add_argument("--failure-rate", type=float, default=0.0)
+    ap.add_argument("--straggler-rate", type=float, default=0.0)
+    ap.add_argument("--simulate", action="store_true")
+    ap.add_argument("--ledger", default=None)
+    ap.add_argument("--boot", type=int, default=0)
+    ap.add_argument("--n-obs", type=int, default=5099)
+    ap.add_argument("--dim-x", type=int, default=17)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--pad-features", action="store_true")
+    ap.add_argument("--shard-n", action="store_true")
+    args = ap.parse_args()
+    if args.dryrun:
+        run_dryrun(args)
+    else:
+        run_fit(args)
+
+
+if __name__ == "__main__":
+    main()

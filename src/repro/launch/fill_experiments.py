@@ -1,0 +1,41 @@
+"""Inject generated dry-run/roofline tables into EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.fill_experiments
+"""
+from __future__ import annotations
+
+import argparse
+import re
+
+from repro.launch.report import dryrun_table, load_all, roofline_table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--file", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    recs = load_all(args.dir)
+    recs = [r for r in recs if r.get("variant", "default") == "default"]
+
+    with open(args.file) as f:
+        text = f.read()
+
+    dr = dryrun_table(recs)
+    rf = roofline_table(recs, "single")
+    text = re.sub(r"<!-- DRYRUN_TABLE -->(.|\n)*?(?=\n## §Roofline)",
+                  f"<!-- DRYRUN_TABLE -->\n\n{dr}\n",
+                  text) if "<!-- DRYRUN_TABLE -->" in text else text
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->(.|\n)*?(?=\n## §Perf)",
+                  f"<!-- ROOFLINE_TABLE -->\n\n{rf}\n",
+                  text) if "<!-- ROOFLINE_TABLE -->" in text else text
+    with open(args.file, "w") as f:
+        f.write(text)
+    ok = sum(1 for r in recs if "full" in r)
+    sk = sum(1 for r in recs if r.get("skipped"))
+    er = sum(1 for r in recs if "error" in r)
+    print(f"updated {args.file}: {ok} ok, {sk} skipped, {er} errors")
+
+
+if __name__ == "__main__":
+    main()

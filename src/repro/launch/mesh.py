@@ -1,0 +1,27 @@
+"""Production meshes (spec: MULTI-POD DRY-RUN step 1).
+
+Importing this module never touches jax device state; meshes are built
+inside the function.  Single pod: (16, 16) = 256 chips, axes
+("data", "model").  Multi-pod: (2, 16, 16) = 512 chips with a leading
+"pod" axis that composes with "data" for batch/grid/FSDP sharding.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host offers (tests / examples)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,108 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.report --dir artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_all(d: str) -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+HBM = 16 * 2**30
+
+
+def tpu_peak(rec: Dict) -> int:
+    """TPU-corrected peak: train/decode donate params+opt / cache, so their
+    outputs alias inputs on a real backend; the CPU backend does not
+    implement donation and double-counts them.  Prefill outputs (fresh KV
+    cache) are real and stay counted."""
+    f = rec["full"]
+    base = f["arg_bytes"] + f["temp_bytes"]
+    if rec["shape"].startswith("prefill"):
+        base += f["output_bytes"] - f["alias_bytes"]
+    return int(base)
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | peak GiB/dev (tpu-corrected) | "
+        "fits 16G | compile s | collective ops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if "cell" in r:            # dml cell, separate table
+            continue
+        key = f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        if r.get("skipped"):
+            lines.append(key + f"| SKIP: {r['reason'][:44]} | — | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(key + f"| ERROR: {r['error'][:44]} | — | — | — | — |")
+            continue
+        f = r["full"]
+        peak = tpu_peak(r)
+        colls = ", ".join(f"{k.split('-')[-1][:6]}:{fmt_bytes(v)}G"
+                          for k, v in sorted(f["collective_ops"].items()))
+        lines.append(
+            key + f"| ok | {fmt_bytes(peak)} | "
+            f"{'Y' if peak <= HBM else 'N'} | {f['compile_s']:.0f} | "
+            f"{colls or '—'} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL/HLO flops | MFU bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or "roofline" not in r:
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"{t['bottleneck']} | {t['useful_ratio']:.2f} | "
+            f"{t['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load_all(args.dir)
+    done = [r for r in recs if "full" in r]
+    skipped = [r for r in recs if r.get("skipped")]
+    errors = [r for r in recs if "error" in r]
+    print(f"cells: {len(recs)} (ok {len(done)}, skipped {len(skipped)}, "
+          f"errors {len(errors)})\n")
+    print("## Dry-run\n")
+    print(dryrun_table(recs))
+    print(f"\n## Roofline ({args.mesh}-pod, 256 chips)\n")
+    print(roofline_table(recs, args.mesh))
+    if errors:
+        print("\n### Errors\n")
+        for r in errors:
+            print(f"- {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Roofline accounting from compiled dry-run artifacts (spec: ROOFLINE
+ANALYSIS).
+
+Hardware target: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute_term_s    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory_term_s     = HLO_bytes_per_device / HBM_BW
+  collective_term_s = collective_bytes_per_device / ICI_BW
+
+``cost_analysis()`` counts a while-loop (lax.scan) body ONCE (verified
+empirically), so per-cell costs are measured on small probe configs with
+every *inner* loop unrolled (runtime.unroll_inner) and the *layer* scans
+extrapolated linearly: cost(probe) = c0 + sum_i trips_i(probe) * c_i,
+solved from len(dims)+1 probes, then evaluated at the full config.
+Collective bytes come from the HLO text with ring-model wire factors.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective op (ring model).
+
+    all-reduce = 2(n-1)/n x bytes; all-gather / reduce-scatter / all-to-all
+    = (n-1)/n x full bytes; collective-permute = bytes.
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        typ, op = m.group(1), m.group(2)
+        if op + "-done" in line:
+            continue
+        size = _shape_bytes(typ)
+        g = _GROUPS_RE.search(line)
+        n = int(g.group(2)) if g else 2
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        factor = {"all-reduce": 2 * ring, "all-gather": ring,
+                  "reduce-scatter": ring, "all-to-all": ring,
+                  "collective-permute": 1.0}[op]
+        out[op] = out.get(op, 0.0) + size * factor
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Probe configs: layer-scan trip counts per arch family
+# ---------------------------------------------------------------------------
+@dataclass
+class ProbePlan:
+    """probes[i] = (cfg_variant, trips vector a_i); full_trips for the real
+    config.  cost_full = c0 + full_trips . c  with [c0, c] solved from probes.
+    """
+    probes: List[Tuple[ArchConfig, Tuple[float, ...]]]
+    full_trips: Tuple[float, ...]
+
+
+def probe_plan(cfg: ArchConfig) -> ProbePlan:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        head = cfg.moe.first_dense_layers if fam == "moe" else 0
+        full = cfg.n_layers - head
+        return ProbePlan(
+            probes=[(replace(cfg, n_layers=head + 1), (1.0,)),
+                    (replace(cfg, n_layers=head + 2), (2.0,))],
+            full_trips=(float(full),))
+    if fam == "ssm":                      # xlstm: groups of slstm_every
+        per = cfg.ssm.slstm_every or cfg.n_layers
+        return ProbePlan(
+            probes=[(replace(cfg, n_layers=per), (1.0,)),
+                    (replace(cfg, n_layers=2 * per), (2.0,))],
+            full_trips=(float(cfg.n_layers // per),))
+    if fam == "hybrid":                   # groups of 6 + mamba tail
+        per = cfg.shared_attn_every
+        return ProbePlan(
+            probes=[(replace(cfg, n_layers=per), (1.0, 0.0)),
+                    (replace(cfg, n_layers=2 * per), (2.0, 0.0)),
+                    (replace(cfg, n_layers=per + 1), (1.0, 1.0))],
+            full_trips=(float(cfg.n_layers // per),
+                        float(cfg.n_layers % per)))
+    if fam == "audio":                    # encoder / decoder stacks
+        return ProbePlan(
+            probes=[(replace(cfg, n_encoder_layers=1, n_layers=1), (1.0, 1.0)),
+                    (replace(cfg, n_encoder_layers=2, n_layers=1), (2.0, 1.0)),
+                    (replace(cfg, n_encoder_layers=1, n_layers=2), (1.0, 2.0))],
+            full_trips=(float(cfg.n_encoder_layers), float(cfg.n_layers)))
+    if fam == "vlm":                      # groups of cross_attn_every
+        per = cfg.cross_attn_every
+        return ProbePlan(
+            probes=[(replace(cfg, n_layers=per), (1.0,)),
+                    (replace(cfg, n_layers=2 * per), (2.0,))],
+            full_trips=(float(cfg.n_layers // per),))
+    raise KeyError(fam)
+
+
+def solve_extrapolation(plan: ProbePlan,
+                        probe_costs: List[Dict[str, float]]) -> Dict[str, float]:
+    """Least-squares solve of cost = c0 + trips . c per metric key."""
+    keys = set()
+    for c in probe_costs:
+        keys.update(c)
+    a = np.array([[1.0, *trips] for _, trips in plan.probes])
+    out = {}
+    for k in keys:
+        b = np.array([c.get(k, 0.0) for c in probe_costs])
+        coef, *_ = np.linalg.lstsq(a, b, rcond=None)
+        full = coef[0] + float(np.dot(coef[1:], np.array(plan.full_trips)))
+        out[k] = max(full, 0.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic corrections for loops that cannot be unrolled (sLSTM time scan)
+# ---------------------------------------------------------------------------
+def analytic_extra_flops(cfg: ArchConfig, shape: ShapeConfig,
+                         n_devices: int) -> float:
+    """Per-device FLOPs invisible to cost_analysis (rolled time scans)."""
+    if cfg.family != "ssm" or not (cfg.ssm and cfg.ssm.slstm_every):
+        return 0.0
+    n_slstm = cfg.n_layers // cfg.ssm.slstm_every
+    d = cfg.d_model
+    nh = cfg.attention.n_heads
+    hd = d // nh
+    steps = 1 if shape.kind == "decode" else shape.seq_len
+    per_step = 2 * nh * hd * 4 * hd + 40 * d      # R matmul + gate flops
+    total = n_slstm * steps * shape.global_batch * per_step
+    if shape.kind == "train":
+        total *= 3.0                              # fwd + bwd
+    return total / n_devices
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Useful-model FLOPs for the whole step (all devices)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch    # one token per sequence
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    n_devices: int
+    model_flops_total: float
+    coll_detail: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap upper bound on step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_total = self.flops_per_dev * self.n_devices
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        denom = self.step_s * self.n_devices * PEAK_FLOPS
+        return self.model_flops_total / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops_total": self.model_flops_total,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+            "coll_detail": self.coll_detail,
+        }

@@ -1,0 +1,3 @@
+from repro.learners.base import LearnerFn, get_learner, LEARNERS
+
+__all__ = ["LearnerFn", "get_learner", "LEARNERS"]

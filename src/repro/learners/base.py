@@ -1,0 +1,50 @@
+"""Learner registry.
+
+A learner is a batched pure function
+    fn(x (N,P), y (T,N), w (T,N), key) -> preds (T,N)
+operating on the fold-mask task batch (paper: one scikit-learn fit per
+lambda; here: the whole task batch in fused/vmapped form).
+
+``get_learner(name, params)`` binds hyperparameters.  Classification-capable
+learners accept ``classify=True`` via params (used for IRM/IIVM propensity
+nuisances).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Mapping
+
+import jax
+
+from repro.learners.kernel_ridge import kernel_ridge_fit_predict
+from repro.learners.linear import (
+    lasso_fit_predict, logistic_fit_predict, ols_fit_predict,
+    ridge_fit_predict,
+)
+from repro.learners.mlp import mlp_fit_predict
+
+LearnerFn = Callable
+
+
+LEARNERS: Dict[str, Callable] = {
+    "ols": ols_fit_predict,
+    "ridge": ridge_fit_predict,
+    "lasso": lasso_fit_predict,
+    "logistic": logistic_fit_predict,
+    "kernel_ridge": kernel_ridge_fit_predict,
+    "mlp": mlp_fit_predict,
+}
+
+
+def get_learner(name: str, params: Mapping | None = None) -> LearnerFn:
+    if name not in LEARNERS:
+        raise KeyError(f"unknown learner {name!r}; known: {list(LEARNERS)}")
+    params = dict(params or {})
+    fn = LEARNERS[name]
+    if name in ("ols", "ridge", "lasso") and params.pop("classify", False):
+        # linear probability model for propensities: fit as regression,
+        # clip in the score (scores.py clips) — the DoubleML-compatible path.
+        pass
+    if params:
+        fn = functools.partial(fn, **params)
+    return fn

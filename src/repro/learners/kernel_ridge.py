@@ -1,0 +1,45 @@
+"""Nyström kernel ridge — the TPU-friendly stand-in for the paper's random
+forest (DESIGN.md §2 "Changed assumptions"): nonparametric capacity with
+MXU-shaped math.  RBF features via m landmarks, then the fused ridge path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.learners.linear import ridge_fit_predict
+
+F32 = jnp.float32
+
+
+def _rbf(a, b, gamma: float):
+    d2 = (jnp.sum(a * a, 1)[:, None] + jnp.sum(b * b, 1)[None, :]
+          - 2.0 * a @ b.T)
+    return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+
+def nystrom_features(x, key, *, n_landmarks: int = 128,
+                     gamma: float | None = None):
+    """phi(x) (N, m) with K ~= phi phi^T."""
+    x = x.astype(F32)
+    n, p = x.shape
+    m = min(n_landmarks, n)
+    idx = jax.random.choice(key, n, (m,), replace=False)
+    lm = x[idx]
+    if gamma is None:
+        gamma = 1.0 / p            # sklearn's "scale"-ish default
+    kmm = _rbf(lm, lm, gamma) + 1e-6 * jnp.eye(m, dtype=F32)
+    knm = _rbf(x, lm, gamma)
+    # K ≈ Knm Kmm^{-1} Kmn  =>  phi = Knm Kmm^{-1/2}
+    evals, evecs = jnp.linalg.eigh(kmm)
+    inv_sqrt = evecs @ jnp.diag(1.0 / jnp.sqrt(jnp.maximum(evals, 1e-8))) \
+        @ evecs.T
+    return knm @ inv_sqrt
+
+
+def kernel_ridge_fit_predict(x, y, w, key, *, reg: float = 1.0,
+                             n_landmarks: int = 128,
+                             gamma: float | None = None):
+    phi = nystrom_features(x, key, n_landmarks=n_landmarks, gamma=gamma)
+    return ridge_fit_predict(phi, y, w, reg=reg, intercept=True)

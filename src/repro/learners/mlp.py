@@ -1,0 +1,78 @@
+"""vmapped-MLP nuisance learner: every task trains its own small MLP with
+Adam for a fixed number of full-batch steps; all T tasks train
+simultaneously as one batched computation (the serverless concurrency of
+the paper collapsed into a vmap axis)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def _init_mlp(key, p: int, hidden: Tuple[int, ...]):
+    dims = (p,) + hidden + (1,)
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k, (a, b), F32) * np.sqrt(2.0 / a),
+            "b": jnp.zeros((b,), F32),
+        })
+    return params
+
+
+def _fwd(params, x):
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.gelu(h)
+    return h[..., 0]
+
+
+def mlp_fit_predict(x, y, w, key, *, hidden=(64, 64), lr: float = 3e-3,
+                    n_steps: int = 300, classify: bool = False):
+    """x (N,P); y/w (T,N) -> preds (T,N)."""
+    x = x.astype(F32)
+    mu = jnp.mean(x, 0)
+    sd = jnp.std(x, 0) + 1e-8
+    xs = (x - mu) / sd
+    t = y.shape[0]
+    keys = jax.random.split(key, t)
+
+    def train_one(yt, wt, k):
+        params = _init_mlp(k, x.shape[1], tuple(hidden))
+        m0 = jax.tree.map(jnp.zeros_like, params)
+        v0 = jax.tree.map(jnp.zeros_like, params)
+
+        def loss_fn(params):
+            pred = _fwd(params, xs)
+            if classify:
+                ll = wt * (jax.nn.softplus(pred) - yt * pred)
+                return jnp.sum(ll) / jnp.maximum(jnp.sum(wt), 1.0)
+            return jnp.sum(wt * (pred - yt) ** 2) / jnp.maximum(jnp.sum(wt), 1.0)
+
+        def step(carry, i):
+            params, m, v = carry
+            g = jax.grad(loss_fn)(params)
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+            bc1 = 1 - 0.9 ** (i + 1.0)
+            bc2 = 1 - 0.999 ** (i + 1.0)
+            params = jax.tree.map(
+                lambda p, mm, vv: p - lr * (mm / bc1)
+                / (jnp.sqrt(vv / bc2) + 1e-8),
+                params, m, v)
+            return (params, m, v), None
+
+        (params, _, _), _ = jax.lax.scan(step, (params, m0, v0),
+                                         jnp.arange(n_steps))
+        pred = _fwd(params, xs)
+        return jax.nn.sigmoid(pred) if classify else pred
+
+    return jax.vmap(train_one)(y.astype(F32), w.astype(F32), keys)

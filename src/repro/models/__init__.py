@@ -1,0 +1,9 @@
+from repro.models.lm import ModelBundle, build_model
+from repro.models.param import (
+    PDecl, init_tree, struct_tree, spec_tree, sharding_tree, param_count,
+)
+
+__all__ = [
+    "ModelBundle", "build_model", "PDecl", "init_tree", "struct_tree",
+    "spec_tree", "sharding_tree", "param_count",
+]

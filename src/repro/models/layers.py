@@ -1,0 +1,408 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, attention (GQA/SWA/MLA).
+
+All functions are pure; parameters come in as pytrees built from the PDecl
+trees in the sibling modules.  Activations are bf16 with f32 softmax/norm
+statistics.  Attention over long KV uses a chunked online-softmax scan
+(flash-attention dataflow in pure jnp) so neither the CPU dry-run nor the
+TPU path ever materializes an (Sq, Skv) score matrix; the Pallas kernel in
+``repro.kernels.flash_attention`` implements the same contract for TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttentionConfig
+from repro.models.param import PDecl
+from repro.sharding.axes import LogicalRules, logical_constraint
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / MLP
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-5):
+    """Stats in f32, application in the input dtype: keeping the (B,S,d)
+    elementwise products bf16 keeps the TP activation all-reduces (which XLA
+    places on these tensors) at 2 bytes/elt instead of 4 (§Perf It-5)."""
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    h = x.astype(F32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    return ((h - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_decls(d_model: int, d_ff: int, glu: bool) -> Dict[str, PDecl]:
+    if glu:
+        return {
+            "wi": PDecl((d_model, 2, d_ff), ("embed", None, "ff")),
+            "wo": PDecl((d_ff, d_model), ("ff", "embed")),
+        }
+    return {
+        "wi": PDecl((d_model, d_ff), ("embed", "ff")),
+        "wo": PDecl((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def mlp_forward(p, x, act: str, glu: bool, rules: LogicalRules):
+    if glu:
+        uv = jnp.einsum("...d,dcf->...cf", x, p["wi"])
+        u, v = uv[..., 0, :], uv[..., 1, :]
+        h = act_fn(act)(u) * v
+    else:
+        h = act_fn(act)(jnp.einsum("...d,df->...f", x, p["wi"]))
+    h = logical_constraint(h, rules, "batch", None, "act_ff")
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(hd, theta))
+    ang = positions[..., None].astype(F32) * inv          # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq_len: int, d_model: int, dtype=jnp.bfloat16):
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / np.power(10_000.0, dim / d_model)
+    out = np.zeros((seq_len, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+def _repeat_kv(k, hq: int):
+    """(B, S, Hk, D) -> (B, S, Hq, D): GQA KV replication along heads.
+
+    Repeat (not regroup) keeps every tensor head-major so a TP-sharded head
+    dim never needs a partitioner-hostile (Hk, G) reshape; XLA fuses the
+    broadcast into the score/value dots on TPU.
+    """
+    hk = k.shape[2]
+    if hk == hq:
+        return k
+    return jnp.repeat(k, hq // hk, axis=2)
+
+
+NEG_BIAS = -1e30          # finite: avoids (-inf) - (-inf) NaNs in the scan
+PAD_POS = 2**30           # sentinel position for padded KV slots
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive f32 bias (..., Sq, Sk): 0 keep / NEG_BIAS drop."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok &= kp < PAD_POS
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, NEG_BIAS).astype(F32)
+
+
+def attention_core(q, k, v, q_pos, k_pos, *, causal: bool,
+                   window: Optional[int], chunk: int = 1024):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hk, D); positions (B, S*).
+    Returns (B, Sq, Hq, D).  KV is consumed in ``chunk``-sized blocks with
+    running (m, l, acc) statistics — O(Sq·chunk) live memory.
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(d)
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    qs = q * scale
+
+    if skv <= chunk:
+        s = jnp.einsum("bqhd,bkhd->bhqk", qs.astype(F32), k.astype(F32))
+        s += _mask_bias(q_pos, k_pos, causal, window)[:, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+        return o
+
+    pad = (-skv) % chunk
+    if pad:                                  # ragged tail: mask padded slots
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=PAD_POS)
+        skv += pad
+    n_chunks = skv // chunk
+    ks = jnp.moveaxis(k.reshape(b, n_chunks, chunk, hq, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n_chunks, chunk, hq, dv), 1, 0)
+    kps = jnp.moveaxis(k_pos.reshape(b, n_chunks, chunk), 1, 0)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, kp = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qs.astype(F32), kc.astype(F32))
+        s += _mask_bias(q_pos, kp, causal, window)[:, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vc.astype(F32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hq, sq), NEG_BIAS, F32)
+    l0 = jnp.zeros((b, hq, sq), F32)
+    a0 = jnp.zeros((b, hq, sq, dv), F32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(o, 1, 2).astype(q.dtype)
+
+
+def decode_attention_core(q, k, v, k_pos, q_pos, *, window: Optional[int]):
+    """Single-position decode: q (B,1,Hq,D) vs full cache k/v (B,S,Hk,D).
+
+    ``k_pos`` holds the cache slot positions (-1 for unwritten slots); the
+    softmax masks unwritten and out-of-window slots.  Sequence dim of the
+    cache may be sharded (split-KV) — the reductions below then lower to the
+    3-psum flash-decoding combine.
+    """
+    b, _, hq, d = q.shape
+    scale = 1.0 / np.sqrt(d)
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * scale).astype(F32), k.astype(F32))
+    valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window is not None:
+        valid &= k_pos > q_pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", (p / l).astype(v.dtype), v)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + core), with KV cache support
+# ---------------------------------------------------------------------------
+def attn_decls(a: AttentionConfig, d_model: int) -> Dict[str, PDecl]:
+    """Projections are declared flattened (d, H*hd): the fused dim is evenly
+    TP-divisible for every assigned head count (40, 56, ... x 128), where a
+    separate heads dim would not be; kernels reshape to (B,S,H,hd) after the
+    matmul (the reshape of a sharded fused dim is a local view)."""
+    if a.is_mla:
+        r, rh = a.kv_lora_rank, a.rope_head_dim
+        return {
+            "wq": PDecl((d_model, a.n_heads * (a.head_dim + rh)),
+                        ("embed", "heads")),
+            "wdkv": PDecl((d_model, r + rh), ("embed", "latent")),
+            "wuk": PDecl((a.kv_lora_rank, a.n_heads * a.head_dim),
+                         ("latent", "heads")),
+            "wuv": PDecl((a.kv_lora_rank, a.n_heads * a.head_dim),
+                         ("latent", "heads")),
+            "wo": PDecl((a.n_heads * a.head_dim, d_model),
+                        ("heads", "embed")),
+        }
+    decls = {
+        "wq": PDecl((d_model, a.q_dim), ("embed", "heads")),
+        "wk": PDecl((d_model, a.kv_dim), ("embed", "kv_heads")),
+        "wv": PDecl((d_model, a.kv_dim), ("embed", "kv_heads")),
+        "wo": PDecl((a.q_dim, d_model), ("heads", "embed")),
+    }
+    if a.qkv_bias:
+        decls["bq"] = PDecl((a.q_dim,), ("heads",), init="zeros")
+        decls["bk"] = PDecl((a.kv_dim,), ("kv_heads",), init="zeros")
+        decls["bv"] = PDecl((a.kv_dim,), ("kv_heads",), init="zeros")
+    return decls
+
+
+def _heads(t, n: int, hd: int):
+    return t.reshape(*t.shape[:-1], n, hd)
+
+
+def _qkv(p, a: AttentionConfig, x, positions, use_rope: bool):
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"])
+    if a.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _heads(q, a.n_heads, a.head_dim)
+    k = _heads(k, a.n_kv_heads, a.head_dim)
+    v = _heads(v, a.n_kv_heads, a.head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, a: AttentionConfig, x, positions, rules: LogicalRules,
+                 *, use_rope: bool = True, chunk: int = 1024,
+                 kv_override: Optional[Tuple] = None, causal: Optional[bool] = None):
+    """Full-sequence attention (train / prefill).  Returns (out, kv) where kv
+    is the (k, v) pair for cache seeding in prefill."""
+    causal = a.causal if causal is None else causal
+    if a.is_mla:
+        return _mla_forward(p, a, x, positions, rules, chunk=chunk)
+    if kv_override is None:
+        q, k, v = _qkv(p, a, x, positions, use_rope)
+        k_pos = positions
+    else:  # cross-attention: kv comes from the encoder/vision tower
+        kv_x, kv_pos = kv_override
+        q = jnp.einsum("bsd,dk->bsk", x, p["wq"])
+        k = jnp.einsum("bsd,dk->bsk", kv_x, p["wk"])
+        v = jnp.einsum("bsd,dk->bsk", kv_x, p["wv"])
+        if a.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = _heads(q, a.n_heads, a.head_dim)
+        k = _heads(k, a.n_kv_heads, a.head_dim)
+        v = _heads(v, a.n_kv_heads, a.head_dim)
+        k_pos = kv_pos
+        causal = False
+    q = logical_constraint(q, rules, "batch", "seq", "act_heads", None)
+    k = logical_constraint(k, rules, "batch", "seq", "act_heads", None)
+    o = attention_core(q, k, v, positions, k_pos,
+                       causal=causal, window=a.sliding_window, chunk=chunk)
+    out = jnp.einsum("bsk,kd->bsd", o.reshape(*o.shape[:2], -1), p["wo"])
+    return out, (k, v)
+
+
+def attn_decode(p, a: AttentionConfig, x1, pos, slot_pos, cache,
+                rules: LogicalRules, *, use_rope: bool = True,
+                cross: bool = False):
+    """One decode step.  x1: (B, 1, d); pos: (B,) int32 current position.
+
+    ``slot_pos``: (B, S) int32 table slot->written position (-1 empty),
+    shared across layers and already updated for this step by the caller.
+    cache: {"k": (B, S, Hk, D), "v": ...}.  ``cross=True`` treats the cache
+    as a static cross-attention KV (no write, all slots valid).
+    Returns (out (B,1,d), new_cache).
+    """
+    if a.is_mla:
+        return _mla_decode(p, a, x1, pos, slot_pos, cache, rules)
+    positions = pos[:, None]
+    q = jnp.einsum("bsd,dk->bsk", x1, p["wq"])
+    if a.qkv_bias:
+        q = q + p["bq"]
+    q = _heads(q, a.n_heads, a.head_dim)
+    if use_rope and not cross:
+        q = apply_rope(q, positions, a.rope_theta)
+
+    def out_proj(o):
+        return jnp.einsum("bsk,kd->bsd", o.reshape(*o.shape[:2], -1), p["wo"])
+
+    if cross:
+        ck, cv = cache["k"], cache["v"]
+        o = decode_attention_core(
+            q, ck, cv,
+            jnp.zeros(ck.shape[:2], jnp.int32), pos, window=None)
+        return out_proj(o), cache
+    k = jnp.einsum("bsd,dk->bsk", x1, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x1, p["wv"])
+    if a.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = _heads(k, a.n_kv_heads, a.head_dim)
+    v = _heads(v, a.n_kv_heads, a.head_dim)
+    if use_rope:
+        k = apply_rope(k, positions, a.rope_theta)
+    S = cache["k"].shape[1]
+    slot = pos % S                                        # ring buffer (SWA)
+    bidx = jnp.arange(x1.shape[0])
+    ck = cache["k"].at[bidx, slot].set(k[:, 0])
+    cv = cache["v"].at[bidx, slot].set(v[:, 0])
+    ck = logical_constraint(ck, rules, "batch", "kv_seq", None, None)
+    cv = logical_constraint(cv, rules, "batch", "kv_seq", None, None)
+    o = decode_attention_core(q, ck, cv, slot_pos, pos, window=a.sliding_window)
+    return out_proj(o), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent KV + decoupled rope; absorbed decode
+# ---------------------------------------------------------------------------
+def _mla_split_q(p, a, x, positions):
+    qfull = _heads(jnp.einsum("bsd,dk->bsk", x, p["wq"]),
+                   a.n_heads, a.head_dim + a.rope_head_dim)
+    q_nope = qfull[..., : a.head_dim]
+    q_rope = apply_rope(qfull[..., a.head_dim:], positions, a.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, a, x, positions):
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    c, k_rope = ckv[..., : a.kv_lora_rank], ckv[..., a.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, a.rope_theta)[:, :, 0]
+    return c, k_rope
+
+
+def _mla_forward(p, a: AttentionConfig, x, positions, rules, *, chunk: int):
+    q_nope, q_rope = _mla_split_q(p, a, x, positions)
+    c, k_rope = _mla_latent(p, a, x, positions)
+    k_nope = _heads(jnp.einsum("bsr,rk->bsk", c, p["wuk"]),
+                    a.n_heads, a.head_dim)
+    v = _heads(jnp.einsum("bsr,rk->bsk", c, p["wuv"]),
+               a.n_heads, a.head_dim)
+    # Fold the decoupled-rope channel into the head dim so one core handles it.
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:-1] + (a.rope_head_dim,))],
+        axis=-1)
+    # core scales by 1/sqrt(dim(q)) — rescale to the paper's 1/sqrt(dh+rh): same dim, ok.
+    o = attention_core(q, k, v, positions, positions,
+                       causal=a.causal, window=None, chunk=chunk)
+    out = jnp.einsum("bsk,kd->bsd", o.reshape(*o.shape[:2], -1), p["wo"])
+    return out, (c, k_rope)
+
+
+def _mla_decode(p, a: AttentionConfig, x1, pos, slot_pos, cache, rules):
+    """Absorbed MLA decode: score/value computed against the latent cache —
+    per-token cache is (r + rope_head_dim) floats, not 2·H·D."""
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_split_q(p, a, x1, positions)   # (B,1,H,dh/rh)
+    c1, kr1 = _mla_latent(p, a, x1, positions)           # (B,1,r), (B,1,rh)
+    S = cache["c"].shape[1]
+    slot = pos % S
+    bidx = jnp.arange(x1.shape[0])
+    cc = cache["c"].at[bidx, slot].set(c1[:, 0])
+    ckr = cache["krope"].at[bidx, slot].set(kr1[:, 0])
+    cc = logical_constraint(cc, rules, "batch", "kv_seq", None)
+
+    wuk = p["wuk"].reshape(a.kv_lora_rank, a.n_heads, a.head_dim)
+    wuv = p["wuv"].reshape(a.kv_lora_rank, a.n_heads, a.head_dim)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, wuk)        # absorb W_uk
+    scale = 1.0 / np.sqrt(a.head_dim + a.rope_head_dim)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(F32), cc.astype(F32))
+         + jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(F32), ckr.astype(F32))) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pattn.astype(cc.dtype), cc)
+    o = jnp.einsum("bqhr,rhk->bqhk", ctx, wuv)               # absorb W_uv
+    out = jnp.einsum("bsk,kd->bsd", o.reshape(*o.shape[:2], -1), p["wo"])
+    return out, {"c": cc, "krope": ckr}

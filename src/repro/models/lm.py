@@ -1,0 +1,945 @@
+"""Model assembly: every assigned architecture becomes a ModelBundle with
+
+* ``decls``            — PDecl tree (params; init/shape/sharding views)
+* ``loss_fn(params, batch)``            -> (loss, metrics)  [train_4k]
+* ``prefill_fn(params, batch)``         -> (logits_last, cache)  [prefill_32k]
+* ``decode_fn(params, cache, batch)``   -> (logits, cache)  [decode_*]
+* ``cache_decls(shape)``  — PDecl tree of the decode cache
+
+Layers are scanned (jax.lax.scan) so the HLO stays compact at 100 layers;
+heterogeneous stacks (hybrid/vlm/xlstm) scan over repeating groups.  Remat
+wraps each scanned body.  Cross-entropy is computed in sequence chunks over
+vocab-sharded logits (never materializes (B,S,V) at once).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import ssm as S
+from repro.models.layers import (
+    attn_decls, attn_decode, attn_forward, mlp_decls, mlp_forward, rms_norm,
+    sinusoidal_pos,
+)
+from repro.models.moe import moe_decls, moe_forward, padded_experts
+from repro.models.param import PDecl, is_decl
+from repro.runtime import maybe_scan
+from repro.sharding.axes import LogicalRules, logical_constraint
+
+F32 = jnp.float32
+
+
+def stack_decls(tree, n: int):
+    return jax.tree.map(
+        lambda p: PDecl((n,) + p.shape, ("layers",) + p.logical,
+                        p.dtype, p.init, p.scale),
+        tree, is_leaf=is_decl)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    policy = {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    }[mode]
+    return jax.checkpoint(fn, policy=policy)
+
+
+@dataclass
+class ModelBundle:
+    arch: ArchConfig
+    decls: Any
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    cache_decls: Callable          # (ShapeConfig) -> PDecl tree
+    input_specs: Callable          # (ShapeConfig) -> dict of PDecl
+    rules: LogicalRules
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _emb_decls(cfg: ArchConfig) -> Dict[str, PDecl]:
+    d = {"emb": PDecl((cfg.vocab_size, cfg.d_model), ("vocab", "embed_tp"))}
+    if not cfg.tie_embeddings:
+        d["unemb"] = PDecl((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    d["lnf"] = PDecl((cfg.d_model,), (None,), init="ones")
+    return d
+
+
+def _unemb(params, cfg):
+    return params["emb"].T if cfg.tie_embeddings else params["unemb"]
+
+
+def _embed(params, tokens):
+    return params["emb"][tokens]
+
+
+def chunked_ce_loss(unemb, h, targets, rules: LogicalRules, chunk: int = 512):
+    """Mean CE over (B,S) with seq-chunked vocab-sharded logits."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    nch = s // chunk
+    hs = jnp.moveaxis(h.reshape(b, nch, chunk, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, nch, chunk), 1, 0)
+
+    def body(acc, xs):
+        hc, tc = xs
+        logits = jnp.einsum("bsd,dv->bsv", hc, unemb).astype(F32)
+        logits = logical_constraint(logits, rules, "batch", None, "vocab_logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    tot, _ = maybe_scan(body, jnp.zeros((), F32), (hs, ts))
+    return tot / (b * s)
+
+
+def _last_logits(unemb, h, rules):
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], unemb).astype(F32)
+    return logical_constraint(logits, rules, "batch", "vocab_logits")
+
+
+def _kv_cache_decls(cfg: ArchConfig, n_layers: int, batch: int, s_max: int,
+                    prefix: Tuple[int, ...] = ()):
+    a = cfg.attention
+    cap = min(s_max, a.sliding_window) if a.sliding_window else s_max
+    lead = prefix + (n_layers,) if n_layers else prefix
+    lax_names = tuple(None for _ in lead)
+    if a.is_mla:
+        return {
+            "c": PDecl(lead + (batch, cap, a.kv_lora_rank),
+                       lax_names + ("batch", "kv_seq", None)),
+            "krope": PDecl(lead + (batch, cap, a.rope_head_dim),
+                           lax_names + ("batch", "kv_seq", None)),
+        }, cap
+    return {
+        "k": PDecl(lead + (batch, cap, a.n_kv_heads, a.head_dim),
+                   lax_names + ("batch", "kv_seq", None, None)),
+        "v": PDecl(lead + (batch, cap, a.n_kv_heads, a.head_dim),
+                   lax_names + ("batch", "kv_seq", None, None)),
+    }, cap
+
+
+def _pos_decls(batch: int, cap: int):
+    return {
+        "slot_pos": PDecl((batch, cap), ("batch", "kv_seq"),
+                          dtype=jnp.int32, init="zeros"),
+        "cur": PDecl((batch,), ("batch",), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def _advance_pos(cache, cap: int):
+    """Update the shared slot->position table for this step."""
+    cur = cache["cur"]
+    slot = cur % cap
+    bidx = jnp.arange(cur.shape[0])
+    slot_pos = cache["slot_pos"].at[bidx, slot].set(cur)
+    return cur, slot_pos
+
+
+def make_init_cache(cache_decls_fn):
+    def init_cache(shape: ShapeConfig):
+        from repro.models.param import struct_tree
+        decls = cache_decls_fn(shape)
+
+        def mk(d: PDecl):
+            if d.dtype == jnp.int32:
+                return jnp.full(d.shape, -1, jnp.int32) if d.shape[-1] != d.shape[0] or True else None
+            return jnp.zeros(d.shape, d.dtype)
+
+        out = jax.tree.map(mk, decls, is_leaf=is_decl)
+        # "cur" starts at 0, slot tables at -1 (handled above: all int32 -> -1)
+        def fix(path, arr):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name == "cur":
+                return jnp.zeros_like(arr)
+            return arr
+        return jax.tree_util.tree_map_with_path(fix, out)
+    return init_cache
+
+
+# ---------------------------------------------------------------------------
+# decoder-only (dense + MoE families) — also the text stack for VLM
+# ---------------------------------------------------------------------------
+def _dense_layer_decls(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": PDecl((cfg.d_model,), (None,), init="ones"),
+        "attn": attn_decls(cfg.attention, cfg.d_model),
+        "ln2": PDecl((cfg.d_model,), (None,), init="ones"),
+        "mlp": mlp_decls(cfg.d_model, cfg.d_ff, cfg.glu),
+    }
+
+
+def _moe_layer_decls(cfg: ArchConfig, ep: int) -> Dict[str, Any]:
+    return {
+        "ln1": PDecl((cfg.d_model,), (None,), init="ones"),
+        "attn": attn_decls(cfg.attention, cfg.d_model),
+        "ln2": PDecl((cfg.d_model,), (None,), init="ones"),
+        "moe": moe_decls(cfg, ep),
+    }
+
+
+def build_decoder(cfg: ArchConfig, rules: LogicalRules, mesh=None,
+                  remat: str = "full", attn_chunk: int = 1024,
+                  ep_axis: str = "model") -> ModelBundle:
+    is_moe = cfg.family == "moe"
+    ep = mesh.shape[ep_axis] if (is_moe and mesh is not None) else 1
+    n_dense_head = cfg.moe.first_dense_layers if is_moe else 0
+    n_scan = cfg.n_layers - n_dense_head
+
+    decls = _emb_decls(cfg)
+    if is_moe:
+        decls["layers"] = stack_decls(_moe_layer_decls(cfg, ep), n_scan)
+        if n_dense_head:
+            dense_cfg = cfg
+            head = {
+                "ln1": PDecl((cfg.d_model,), (None,), init="ones"),
+                "attn": attn_decls(cfg.attention, cfg.d_model),
+                "ln2": PDecl((cfg.d_model,), (None,), init="ones"),
+                "mlp": mlp_decls(cfg.d_model, cfg.moe.d_first_dense, cfg.glu),
+            }
+            decls["head_layers"] = stack_decls(head, n_dense_head)
+    else:
+        decls["layers"] = stack_decls(_dense_layer_decls(cfg), n_scan)
+
+    def attn_block(lp, h, positions):
+        a, kv = attn_forward(lp["attn"], cfg.attention,
+                             rms_norm(h, lp["ln1"], cfg.norm_eps),
+                             positions, rules, chunk=attn_chunk)
+        h = h + a
+        h = logical_constraint(h, rules, "batch", "seq_shard", "act_embed")
+        return h, kv
+
+    def dense_body(h, lp, positions, width=None):
+        h, kv = attn_block(lp, h, positions)
+        m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                        cfg.act, cfg.glu, rules)
+        return h + m, kv
+
+    def moe_body(h, lp, positions):
+        h, kv = attn_block(lp, h, positions)
+        m, aux = moe_forward(lp["moe"], cfg,
+                             rms_norm(h, lp["ln2"], cfg.norm_eps),
+                             rules, mesh=mesh, ep_axis=ep_axis)
+        return h + m, kv, aux
+
+    def backbone(params, tokens, collect_kv: bool = False):
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h = _embed(params, tokens)
+        h = logical_constraint(h, rules, "batch", "seq_shard", "act_embed")
+        aux_total = jnp.zeros((), F32)
+
+        if is_moe and n_dense_head:
+            def hbody(h, lp):
+                h, kv = dense_body(h, lp, positions)
+                return h, kv if collect_kv else None
+            h, head_kv = maybe_scan(
+                _remat(hbody, remat), h, params["head_layers"])
+        else:
+            head_kv = None
+
+        if is_moe:
+            def body(carry, lp):
+                h, aux = carry
+                h, kv, a = moe_body(h, lp, positions)
+                return (h, aux + a), kv if collect_kv else None
+            (h, aux_total), kvs = maybe_scan(
+                _remat(body, remat), (h, aux_total), params["layers"])
+        else:
+            def body(h, lp):
+                h, kv = dense_body(h, lp, positions)
+                return h, kv if collect_kv else None
+            h, kvs = maybe_scan(_remat(body, remat), h, params["layers"])
+
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        return h, aux_total, (head_kv, kvs)
+
+    def loss_fn(params, batch):
+        h, aux, _ = backbone(params, batch["tokens"])
+        ce = chunked_ce_loss(_unemb(params, cfg), h, batch["targets"], rules)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def cache_decls(shape: ShapeConfig):
+        kv, cap = _kv_cache_decls(cfg, n_scan, shape.global_batch, shape.seq_len)
+        out = {"layers": kv}
+        if is_moe and n_dense_head:
+            hkv, _ = _kv_cache_decls(cfg, n_dense_head, shape.global_batch,
+                                     shape.seq_len)
+            out["head_layers"] = hkv
+        out.update(_pos_decls(shape.global_batch, cap))
+        return out
+
+    def prefill_fn(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h, _, (head_kv, kvs) = backbone(params, tokens, collect_kv=True)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+
+        def to_cache(kv):
+            if cfg.attention.is_mla:
+                c, krope = kv
+                return {"c": c, "krope": krope}
+            k, v = kv
+            return {"k": k, "v": v}
+
+        cache = {"layers": to_cache(kvs)}
+        if head_kv is not None:
+            cache["head_layers"] = to_cache(head_kv)
+        cache["slot_pos"] = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        cache["cur"] = jnp.full((b,), s, jnp.int32)
+        return logits, cache
+
+    def decode_fn(params, cache, batch):
+        tokens = batch["tokens"]                     # (B, 1)
+        cap = cache["slot_pos"].shape[1]
+        cur, slot_pos = _advance_pos(cache, cap)
+        h = _embed(params, tokens)
+
+        def step_layer(h, lp, lc):
+            a, lc2 = attn_decode(lp["attn"], cfg.attention,
+                                 rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                 cur, slot_pos, lc, rules)
+            h = h + a
+            if is_moe and "moe" in lp:
+                m, _ = moe_forward(lp["moe"], cfg,
+                                   rms_norm(h, lp["ln2"], cfg.norm_eps),
+                                   rules, mesh=mesh, ep_axis=ep_axis)
+            else:
+                m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                                cfg.act, cfg.glu, rules)
+            return h + m, lc2
+
+        new_cache = dict(cache)
+        if is_moe and n_dense_head:
+            def hbody(h, xs):
+                lp, lc = xs
+                return step_layer(h, lp, lc)
+            h, hkv = maybe_scan(hbody, h,
+                                  (params["head_layers"], cache["head_layers"]))
+            new_cache["head_layers"] = hkv
+
+        def body(h, xs):
+            lp, lc = xs
+            return step_layer(h, lp, lc)
+
+        h, kvs = maybe_scan(body, h, (params["layers"], cache["layers"]))
+        new_cache["layers"] = kvs
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        new_cache["slot_pos"] = slot_pos
+        new_cache["cur"] = cur + 1
+        return logits, new_cache
+
+    def input_specs(shape: ShapeConfig):
+        b = shape.global_batch
+        s = shape.seq_len if shape.kind != "decode" else 1
+        specs = {"tokens": PDecl((b, s), ("batch", None), dtype=jnp.int32)}
+        if shape.kind == "train":
+            specs["targets"] = PDecl((b, s), ("batch", None), dtype=jnp.int32)
+        return specs
+
+    return ModelBundle(cfg, decls, loss_fn, prefill_fn, decode_fn,
+                       cache_decls, input_specs, rules)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM (ssm family): groups of (slstm_every-1) mLSTM + 1 sLSTM
+# ---------------------------------------------------------------------------
+def build_xlstm(cfg: ArchConfig, rules: LogicalRules, mesh=None,
+                remat: str = "full", attn_chunk: int = 1024) -> ModelBundle:
+    per = cfg.ssm.slstm_every or cfg.n_layers
+    n_groups = cfg.n_layers // per
+    n_m = per - 1 if cfg.ssm.slstm_every else per
+
+    decls = _emb_decls(cfg)
+    m_decls = stack_decls(stack_decls(S.mlstm_decls(cfg), n_m), n_groups)
+    decls["mlstm"] = m_decls
+    if cfg.ssm.slstm_every:
+        decls["slstm"] = stack_decls(S.slstm_decls(cfg), n_groups)
+
+    def backbone(params, tokens, states=None, cur=None, collect_state=False):
+        h = _embed(params, tokens)
+        h = logical_constraint(h, rules, "batch", "seq_shard", "act_embed")
+
+        def group(h, gp):
+            def mbody(h, lp):
+                out = S.mlstm_forward(lp, cfg, h, rules,
+                                      return_state=collect_state)
+                if collect_state:
+                    return out[0], out[1]
+                return out, None
+            h, mstates = maybe_scan(_remat(mbody, remat), h, gp["m"])
+            sstate = None
+            if cfg.ssm.slstm_every:
+                out = S.slstm_forward(gp["s"], cfg, h, rules,
+                                      return_state=collect_state)
+                if collect_state:
+                    h, sstate = out
+                else:
+                    h = out
+            return h, (mstates, sstate)
+
+        gparams = {"m": params["mlstm"]}
+        if cfg.ssm.slstm_every:
+            gparams["s"] = params["slstm"]
+        h, states_out = maybe_scan(group, h, gparams)
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        return h, states_out
+
+    def loss_fn(params, batch):
+        h, _ = backbone(params, batch["tokens"])
+        ce = chunked_ce_loss(_unemb(params, cfg), h, batch["targets"], rules)
+        return ce, {"ce": ce}
+
+    def cache_decls(shape: ShapeConfig):
+        b = shape.global_batch
+        di = cfg.ssm.expand * cfg.d_model
+        nh = cfg.attention.n_heads
+        hd = di // nh
+        out = {
+            "m_ssm": PDecl((n_groups, n_m, b, nh, hd, hd + 1),
+                           (None, None, "batch", None, None, None), dtype=F32,
+                           init="zeros"),
+            "m_conv": PDecl((n_groups, n_m, b, cfg.ssm.conv_dim - 1, di),
+                            (None, None, "batch", None, None), init="zeros"),
+            "cur": PDecl((b,), ("batch",), dtype=jnp.int32, init="zeros"),
+        }
+        if cfg.ssm.slstm_every:
+            shd = cfg.d_model // nh
+            out["s_state"] = PDecl((n_groups, 4, b, nh, shd),
+                                   (None, None, "batch", None, None),
+                                   dtype=F32, init="zeros")
+        return out
+
+    def prefill_fn(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        h, states = backbone(params, tokens, collect_state=True)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        mstates, sstates = states
+        cache = {
+            "m_ssm": mstates[0], "m_conv": mstates[1],
+            "cur": jnp.full((b,), tokens.shape[1], jnp.int32),
+        }
+        if cfg.ssm.slstm_every:
+            cache["s_state"] = jnp.stack(sstates, axis=1) \
+                if isinstance(sstates, tuple) else sstates
+        return logits, cache
+
+    def decode_fn(params, cache, batch):
+        h = _embed(params, batch["tokens"])
+
+        def group(h, xs):
+            gp, gc = xs
+            def mbody(h, xs2):
+                lp, (ssm_st, conv_st) = xs2
+                h, st = S.mlstm_decode(lp, cfg, h, {"ssm": ssm_st, "conv": conv_st},
+                                       rules)
+                return h, (st["ssm"], st["conv"])
+            h, mst = maybe_scan(mbody, h, (gp["m"], (gc["ssm"], gc["conv"])))
+            sst = None
+            if cfg.ssm.slstm_every:
+                h, sst = S.slstm_decode(gp["s"], cfg, h, tuple(gc["sst"]), rules)
+                sst = jnp.stack(sst)
+            return h, (mst, sst)
+
+        gparams = {"m": params["mlstm"]}
+        gcache = {"ssm": cache["m_ssm"], "conv": cache["m_conv"]}
+        if cfg.ssm.slstm_every:
+            gparams["s"] = params["slstm"]
+            gcache["sst"] = cache["s_state"]
+        h, (mst, sst) = maybe_scan(group, h, (gparams, gcache))
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        out = {"m_ssm": mst[0], "m_conv": mst[1], "cur": cache["cur"] + 1}
+        if cfg.ssm.slstm_every:
+            out["s_state"] = sst
+        return logits, out
+
+    def input_specs(shape: ShapeConfig):
+        b = shape.global_batch
+        s = shape.seq_len if shape.kind != "decode" else 1
+        specs = {"tokens": PDecl((b, s), ("batch", None), dtype=jnp.int32)}
+        if shape.kind == "train":
+            specs["targets"] = PDecl((b, s), ("batch", None), dtype=jnp.int32)
+        return specs
+
+    return ModelBundle(cfg, decls, loss_fn, prefill_fn, decode_fn,
+                       cache_decls, input_specs, rules)
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid: scan groups of (shared_attn_every-1 mamba + shared block)
+# ---------------------------------------------------------------------------
+def build_hybrid(cfg: ArchConfig, rules: LogicalRules, mesh=None,
+                 remat: str = "full", attn_chunk: int = 1024) -> ModelBundle:
+    per = cfg.shared_attn_every
+    n_groups = cfg.n_layers // per
+    n_m = per - 1
+    n_tail = cfg.n_layers - n_groups * per
+
+    decls = _emb_decls(cfg)
+    decls["mamba"] = stack_decls(stack_decls(S.mamba2_decls(cfg), n_m), n_groups)
+    if n_tail:
+        decls["tail"] = stack_decls(S.mamba2_decls(cfg), n_tail)
+    decls["shared"] = _dense_layer_decls(cfg)   # ONE param set, 13 applications
+
+    def shared_block(h, positions, params):
+        lp = params["shared"]
+        a, kv = attn_forward(lp["attn"], cfg.attention,
+                             rms_norm(h, lp["ln1"], cfg.norm_eps),
+                             positions, rules, chunk=attn_chunk)
+        h = h + a
+        m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                        cfg.act, cfg.glu, rules)
+        return h + m, kv
+
+    def backbone(params, tokens, collect=False):
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h = _embed(params, tokens)
+        h = logical_constraint(h, rules, "batch", "seq_shard", "act_embed")
+
+        def group(h, gp):
+            def mbody(h, lp):
+                out = S.mamba2_forward(lp, cfg, h, rules, return_state=collect)
+                return (out[0], out[1]) if collect else (out, None)
+            h, mstates = maybe_scan(_remat(mbody, remat), h, gp)
+            h, kv = shared_block(h, positions, params)
+            return h, (mstates, kv if collect else None)
+
+        h, (mstates, kvs) = maybe_scan(group, h, params["mamba"])
+        tail_states = None
+        if n_tail:
+            def tbody(h, lp):
+                out = S.mamba2_forward(lp, cfg, h, rules, return_state=collect)
+                return (out[0], out[1]) if collect else (out, None)
+            h, tail_states = maybe_scan(_remat(tbody, remat), h, params["tail"])
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        return h, (mstates, kvs, tail_states)
+
+    def loss_fn(params, batch):
+        h, _ = backbone(params, batch["tokens"])
+        ce = chunked_ce_loss(_unemb(params, cfg), h, batch["targets"], rules)
+        return ce, {"ce": ce}
+
+    def cache_decls(shape: ShapeConfig):
+        b = shape.global_batch
+        s2 = cfg.ssm
+        di = s2.expand * cfg.d_model
+        nh = di // s2.head_dim
+        kv, cap = _kv_cache_decls(cfg, 0, b, shape.seq_len, prefix=(n_groups,))
+        out = {
+            "m_ssm": PDecl((n_groups, n_m, b, nh, s2.state_dim, s2.head_dim),
+                           (None, None, "batch", None, None, None),
+                           dtype=F32, init="zeros"),
+            "m_conv": PDecl((n_groups, n_m, b, s2.conv_dim - 1,
+                             di + 2 * s2.state_dim),
+                            (None, None, "batch", None, None), init="zeros"),
+            "shared_kv": kv,
+        }
+        if n_tail:
+            out["t_ssm"] = PDecl((n_tail, b, nh, s2.state_dim, s2.head_dim),
+                                 (None, "batch", None, None, None),
+                                 dtype=F32, init="zeros")
+            out["t_conv"] = PDecl((n_tail, b, s2.conv_dim - 1,
+                                   di + 2 * s2.state_dim),
+                                  (None, "batch", None, None), init="zeros")
+        out.update(_pos_decls(b, cap))
+        return out
+
+    def prefill_fn(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h, (mstates, kvs, tail_states) = backbone(params, tokens, collect=True)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        a = cfg.attention
+        cap = min(s, a.sliding_window) if a.sliding_window else s
+        k, v = kvs
+        cache = {
+            "m_ssm": mstates[0], "m_conv": mstates[1],
+            "shared_kv": {"k": k[:, :, -cap:], "v": v[:, :, -cap:]},
+            "slot_pos": jnp.broadcast_to(jnp.arange(s - cap, s)[None], (b, cap)),
+            "cur": jnp.full((b,), s, jnp.int32),
+        }
+        if n_tail:
+            cache["t_ssm"], cache["t_conv"] = tail_states
+        return logits, cache
+
+    def decode_fn(params, cache, batch):
+        cap = cache["slot_pos"].shape[1]
+        cur, slot_pos = _advance_pos(cache, cap)
+        h = _embed(params, batch["tokens"])
+
+        def group(h, xs):
+            gp, (ssm_st, conv_st, kv) = xs
+            def mbody(h, xs2):
+                lp, (s1, c1) = xs2
+                h, st = S.mamba2_decode(lp, cfg, h, {"ssm": s1, "conv": c1}, rules)
+                return h, (st["ssm"], st["conv"])
+            h, mst = maybe_scan(mbody, h, (gp, (ssm_st, conv_st)))
+            lp = params["shared"]
+            a, kv2 = attn_decode(lp["attn"], cfg.attention,
+                                 rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                 cur, slot_pos, kv, rules)
+            h = h + a
+            m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                            cfg.act, cfg.glu, rules)
+            return h + m, (mst, kv2)
+
+        h, (mst, kv2) = maybe_scan(
+            group, h,
+            (params["mamba"], (cache["m_ssm"], cache["m_conv"],
+                               cache["shared_kv"])))
+        out = {"m_ssm": mst[0], "m_conv": mst[1], "shared_kv": kv2}
+        if n_tail:
+            def tbody(h, xs2):
+                lp, (s1, c1) = xs2
+                h, st = S.mamba2_decode(lp, cfg, h, {"ssm": s1, "conv": c1}, rules)
+                return h, (st["ssm"], st["conv"])
+            h, tst = maybe_scan(tbody, h,
+                                  (params["tail"], (cache["t_ssm"], cache["t_conv"])))
+            out["t_ssm"], out["t_conv"] = tst
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        out["slot_pos"] = slot_pos
+        out["cur"] = cur + 1
+        return logits, out
+
+    def input_specs(shape: ShapeConfig):
+        b = shape.global_batch
+        s = shape.seq_len if shape.kind != "decode" else 1
+        specs = {"tokens": PDecl((b, s), ("batch", None), dtype=jnp.int32)}
+        if shape.kind == "train":
+            specs["targets"] = PDecl((b, s), ("batch", None), dtype=jnp.int32)
+        return specs
+
+    return ModelBundle(cfg, decls, loss_fn, prefill_fn, decode_fn,
+                       cache_decls, input_specs, rules)
+
+
+# ---------------------------------------------------------------------------
+# whisper-style enc-dec (audio) — conv frontend stubbed
+# ---------------------------------------------------------------------------
+def build_encdec(cfg: ArchConfig, rules: LogicalRules, mesh=None,
+                 remat: str = "full", attn_chunk: int = 1024) -> ModelBundle:
+    decls = _emb_decls(cfg)
+    decls["frontend_proj"] = PDecl((cfg.d_frontend, cfg.d_model),
+                                   ("frontend", "embed"))
+    enc_layer = {
+        "ln1": PDecl((cfg.d_model,), (None,), init="ones"),
+        "attn": attn_decls(cfg.attention, cfg.d_model),
+        "ln2": PDecl((cfg.d_model,), (None,), init="ones"),
+        "mlp": mlp_decls(cfg.d_model, cfg.d_ff, cfg.glu),
+    }
+    dec_layer = dict(enc_layer)
+    dec_layer["lnx"] = PDecl((cfg.d_model,), (None,), init="ones")
+    dec_layer["cross"] = attn_decls(cfg.attention, cfg.d_model)
+    decls["encoder"] = stack_decls(enc_layer, cfg.n_encoder_layers)
+    decls["decoder"] = stack_decls(dec_layer, cfg.n_layers)
+    decls["enc_lnf"] = PDecl((cfg.d_model,), (None,), init="ones")
+
+    def encode(params, frames):
+        b, s, _ = frames.shape
+        h = jnp.einsum("bsf,fd->bsd", frames, params["frontend_proj"])
+        h = h + sinusoidal_pos(s, cfg.d_model, h.dtype)[None]
+        h = logical_constraint(h, rules, "batch", "seq_shard", "act_embed")
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(h, lp):
+            a, _ = attn_forward(lp["attn"], cfg.attention,
+                                rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                positions, rules, use_rope=False,
+                                chunk=attn_chunk, causal=False)
+            h = h + a
+            m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                            cfg.act, cfg.glu, rules)
+            return h + m, None
+
+        h, _ = maybe_scan(_remat(body, remat), h, params["encoder"])
+        return rms_norm(h, params["enc_lnf"], cfg.norm_eps)
+
+    def decode_stack(params, tokens, enc_out, collect_kv=False):
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1])[None], (b, enc_out.shape[1]))
+        h = _embed(params, tokens) + sinusoidal_pos(s, cfg.d_model)[None]
+
+        def body(h, lp):
+            a, kv = attn_forward(lp["attn"], cfg.attention,
+                                 rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                 positions, rules, use_rope=False,
+                                 chunk=attn_chunk)
+            h = h + a
+            c, xkv = attn_forward(lp["cross"], cfg.attention,
+                                  rms_norm(h, lp["lnx"], cfg.norm_eps),
+                                  positions, rules, use_rope=False,
+                                  chunk=attn_chunk,
+                                  kv_override=(enc_out, enc_pos))
+            h = h + c
+            m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                            cfg.act, cfg.glu, rules)
+            return h + m, (kv, xkv) if collect_kv else None
+
+        h, kvs = maybe_scan(_remat(body, remat), h, params["decoder"])
+        return rms_norm(h, params["lnf"], cfg.norm_eps), kvs
+
+    def loss_fn(params, batch):
+        enc = encode(params, batch["frames"])
+        h, _ = decode_stack(params, batch["tokens"], enc)
+        ce = chunked_ce_loss(_unemb(params, cfg), h, batch["targets"], rules)
+        return ce, {"ce": ce}
+
+    def cache_decls(shape: ShapeConfig):
+        b = shape.global_batch
+        kv, cap = _kv_cache_decls(cfg, cfg.n_layers, b, shape.seq_len)
+        xkv, _ = _kv_cache_decls(cfg, cfg.n_layers, b, shape.seq_len)
+        out = {"self_kv": kv, "cross_kv": xkv}
+        out.update(_pos_decls(b, cap))
+        return out
+
+    def prefill_fn(params, batch):
+        """Encode the audio + run the decoder over the prompt tokens."""
+        enc = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h, kvs = decode_stack(params, tokens, enc, collect_kv=True)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        (k, v), (xk, xv) = kvs
+        cache = {
+            "self_kv": {"k": k, "v": v},
+            "cross_kv": {"k": xk, "v": xv},
+            "slot_pos": jnp.broadcast_to(jnp.arange(s)[None], (b, s)),
+            "cur": jnp.full((b,), s, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_fn(params, cache, batch):
+        cap = cache["slot_pos"].shape[1]
+        cur, slot_pos = _advance_pos(cache, cap)
+        h = _embed(params, batch["tokens"]) \
+            + sinusoidal_pos(1, cfg.d_model)[None]
+
+        def body(h, xs):
+            lp, (lc, xc) = xs
+            a, lc2 = attn_decode(lp["attn"], cfg.attention,
+                                 rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                 cur, slot_pos, lc, rules, use_rope=False)
+            h = h + a
+            c, _ = attn_decode(lp["cross"], cfg.attention,
+                               rms_norm(h, lp["lnx"], cfg.norm_eps),
+                               cur, slot_pos, xc, rules, use_rope=False,
+                               cross=True)
+            h = h + c
+            m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                            cfg.act, cfg.glu, rules)
+            return h + m, lc2
+
+        h, kv2 = maybe_scan(
+            body, h, (params["decoder"], (cache["self_kv"], cache["cross_kv"])))
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        return logits, {"self_kv": kv2, "cross_kv": cache["cross_kv"],
+                        "slot_pos": slot_pos, "cur": cur + 1}
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {
+                "frames": PDecl((b, s, cfg.d_frontend), ("batch", "seq_shard", None)),
+                "tokens": PDecl((b, s), ("batch", None), dtype=jnp.int32),
+                "targets": PDecl((b, s), ("batch", None), dtype=jnp.int32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": PDecl((b, s, cfg.d_frontend), ("batch", "seq_shard", None)),
+                "tokens": PDecl((b, s), ("batch", None), dtype=jnp.int32),
+            }
+        return {"tokens": PDecl((b, 1), ("batch", None), dtype=jnp.int32)}
+
+    return ModelBundle(cfg, decls, loss_fn, prefill_fn, decode_fn,
+                       cache_decls, input_specs, rules)
+
+
+# ---------------------------------------------------------------------------
+# VLM: decoder with a gated cross-attention layer every Nth layer
+# ---------------------------------------------------------------------------
+def build_vlm(cfg: ArchConfig, rules: LogicalRules, mesh=None,
+              remat: str = "full", attn_chunk: int = 1024) -> ModelBundle:
+    per = cfg.cross_attn_every
+    n_groups = cfg.n_layers // per
+    n_self = per - 1
+
+    decls = _emb_decls(cfg)
+    decls["img_proj"] = PDecl((cfg.d_frontend, cfg.d_model),
+                              ("frontend", "embed"))
+    decls["self_layers"] = stack_decls(
+        stack_decls(_dense_layer_decls(cfg), n_self), n_groups)
+    cross_layer = dict(_dense_layer_decls(cfg))
+    cross_layer["gate"] = PDecl((1,), (None,), dtype=F32, init="zeros")
+    decls["cross_layers"] = stack_decls(cross_layer, n_groups)
+
+    def backbone(params, tokens, img, collect_kv=False):
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        img_h = jnp.einsum("bnf,fd->bnd", img, params["img_proj"])
+        img_pos = jnp.broadcast_to(
+            jnp.arange(img_h.shape[1])[None], (b, img_h.shape[1]))
+        h = _embed(params, tokens)
+        h = logical_constraint(h, rules, "batch", "seq_shard", "act_embed")
+
+        def group(h, gp):
+            sp, cp = gp
+            def sbody(h, lp):
+                a, kv = attn_forward(lp["attn"], cfg.attention,
+                                     rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                     positions, rules, chunk=attn_chunk)
+                h = h + a
+                m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                                cfg.act, cfg.glu, rules)
+                return h + m, kv if collect_kv else None
+            h, kvs = maybe_scan(_remat(sbody, remat), h, sp)
+            a, xkv = attn_forward(cp["attn"], cfg.attention,
+                                  rms_norm(h, cp["ln1"], cfg.norm_eps),
+                                  positions, rules, use_rope=False,
+                                  chunk=attn_chunk,
+                                  kv_override=(img_h, img_pos))
+            h = h + jnp.tanh(cp["gate"]).astype(h.dtype) * a
+            m = mlp_forward(cp["mlp"], rms_norm(h, cp["ln2"], cfg.norm_eps),
+                            cfg.act, cfg.glu, rules)
+            h = h + m
+            return h, (kvs, xkv if collect_kv else None)
+
+        h, kv_all = maybe_scan(group, h,
+                                 (params["self_layers"], params["cross_layers"]))
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        return h, kv_all
+
+    def loss_fn(params, batch):
+        h, _ = backbone(params, batch["tokens"], batch["img"])
+        ce = chunked_ce_loss(_unemb(params, cfg), h, batch["targets"], rules)
+        return ce, {"ce": ce}
+
+    def cache_decls(shape: ShapeConfig):
+        b = shape.global_batch
+        kv, cap = _kv_cache_decls(cfg, n_self, b, shape.seq_len,
+                                  prefix=(n_groups,))
+        a = cfg.attention
+        xkv = {
+            "k": PDecl((n_groups, b, cfg.n_frontend_tokens, a.n_kv_heads,
+                        a.head_dim), (None, "batch", None, None, None)),
+            "v": PDecl((n_groups, b, cfg.n_frontend_tokens, a.n_kv_heads,
+                        a.head_dim), (None, "batch", None, None, None)),
+        }
+        out = {"self_kv": kv, "cross_kv": xkv}
+        out.update(_pos_decls(b, cap))
+        return out
+
+    def prefill_fn(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h, (kvs, xkvs) = backbone(params, tokens, batch["img"], collect_kv=True)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        k, v = kvs
+        xk, xv = xkvs
+        cache = {
+            "self_kv": {"k": k, "v": v},
+            "cross_kv": {"k": xk, "v": xv},
+            "slot_pos": jnp.broadcast_to(jnp.arange(s)[None], (b, s)),
+            "cur": jnp.full((b,), s, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_fn(params, cache, batch):
+        cap = cache["slot_pos"].shape[1]
+        cur, slot_pos = _advance_pos(cache, cap)
+        h = _embed(params, batch["tokens"])
+
+        def group(h, xs):
+            (sp, cp), (lc, xc) = xs
+            def sbody(h, xs2):
+                lp, c1 = xs2
+                a, c2 = attn_decode(lp["attn"], cfg.attention,
+                                    rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                    cur, slot_pos, c1, rules)
+                h = h + a
+                m = mlp_forward(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                                cfg.act, cfg.glu, rules)
+                return h + m, c2
+            h, lc2 = maybe_scan(sbody, h, (sp, lc))
+            a, _ = attn_decode(cp["attn"], cfg.attention,
+                               rms_norm(h, cp["ln1"], cfg.norm_eps),
+                               cur, slot_pos, xc, rules, use_rope=False,
+                               cross=True)
+            h = h + jnp.tanh(cp["gate"]).astype(h.dtype) * a
+            m = mlp_forward(cp["mlp"], rms_norm(h, cp["ln2"], cfg.norm_eps),
+                            cfg.act, cfg.glu, rules)
+            return h + m, lc2
+
+        h, lc2 = maybe_scan(
+            group, h,
+            ((params["self_layers"], params["cross_layers"]),
+             (cache["self_kv"], cache["cross_kv"])))
+        h = rms_norm(h, params["lnf"], cfg.norm_eps)
+        logits = _last_logits(_unemb(params, cfg), h, rules)
+        return logits, {"self_kv": lc2, "cross_kv": cache["cross_kv"],
+                        "slot_pos": slot_pos, "cur": cur + 1}
+
+    def input_specs(shape: ShapeConfig):
+        b = shape.global_batch
+        s = shape.seq_len if shape.kind != "decode" else 1
+        specs = {
+            "tokens": PDecl((b, s), ("batch", None), dtype=jnp.int32),
+            "img": PDecl((b, cfg.n_frontend_tokens, cfg.d_frontend),
+                         ("batch", None, None)),
+        }
+        if shape.kind == "train":
+            specs["targets"] = PDecl((b, s), ("batch", None), dtype=jnp.int32)
+        if shape.kind == "decode":
+            specs.pop("img")   # image context lives in the cross-KV cache
+        return specs
+
+    return ModelBundle(cfg, decls, loss_fn, prefill_fn, decode_fn,
+                       cache_decls, input_specs, rules)
+
+
+# ---------------------------------------------------------------------------
+def build_model(cfg: ArchConfig, rules: Optional[LogicalRules] = None,
+                mesh=None, remat: str = "full",
+                attn_chunk: int = 1024) -> ModelBundle:
+    if rules is None:
+        from repro.sharding.axes import rules_for
+        rules = rules_for(cfg.name, "train", cfg.d_model)
+    # Pad Q-heads to the TP degree when heads are model-sharded (40 -> 48,
+    # 56 -> 64): otherwise the (H, hd) reshape of the fused projection can't
+    # be mapped by the partitioner and it falls back to replicate+reshard
+    # ("involuntary full rematerialization").  DESIGN.md §4; the padding
+    # overhead shows up honestly in the MODEL_FLOPS/HLO ratio.
+    if mesh is not None and rules.to_dict().get("heads") is not None:
+        tp = mesh.shape.get("model", 1)
+        a = cfg.attention
+        if tp > 1 and a.n_heads % tp:
+            from dataclasses import replace as _rep
+            pad = ((a.n_heads + tp - 1) // tp) * tp
+            cfg = _rep(cfg, attention=_rep(a, n_heads=pad))
+    builders = {
+        "dense": build_decoder,
+        "moe": build_decoder,
+        "ssm": build_xlstm,
+        "hybrid": build_hybrid,
+        "audio": build_encdec,
+        "vlm": build_vlm,
+    }
+    return builders[cfg.family](cfg, rules, mesh=mesh, remat=remat,
+                                attn_chunk=attn_chunk)

@@ -1,0 +1,87 @@
+"""Parameter declaration trees.
+
+A model is declared once as a pytree of :class:`PDecl`; from it we derive
+(1) random initialization, (2) ``ShapeDtypeStruct`` trees for the dry-run,
+(3) ``NamedSharding`` trees via the logical-axis rules.  This keeps the three
+views structurally identical by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.axes import LogicalRules
+
+
+@dataclass(frozen=True)
+class PDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    def initialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(self.dtype)
+
+    @property
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, PDecl)
+
+
+def init_tree(decls, key):
+    """Materialize a declaration tree into parameter arrays."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [d.initialize(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def struct_tree(decls):
+    return jax.tree.map(lambda d: d.struct, decls, is_leaf=is_decl)
+
+
+def spec_tree(decls, rules: LogicalRules):
+    return jax.tree.map(lambda d: rules.resolve(d.logical), decls, is_leaf=is_decl)
+
+
+def sharding_tree(decls, mesh, rules: LogicalRules):
+    """jit in_shardings require even divisibility — the rules resolver drops
+    mesh axes a dim cannot evenly use (and frees them for later dims:
+    batch 128 over ("data","model") degrades to "data", leaving "model" for
+    the kv_seq dim)."""
+    sizes = dict(mesh.shape)
+
+    def mk(d: PDecl):
+        spec = rules.resolve(d.logical, shape=d.shape, mesh_sizes=sizes)
+        return jax.sharding.NamedSharding(mesh, spec)
+    return jax.tree.map(mk, decls, is_leaf=is_decl)
+
+
+def param_bytes(decls) -> int:
+    tot = 0
+    for d in jax.tree.leaves(decls, is_leaf=is_decl):
+        tot += int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+    return tot
+
+
+def param_count(decls) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(decls, is_leaf=is_decl))

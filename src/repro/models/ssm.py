@@ -1,0 +1,388 @@
+"""Recurrent blocks: Mamba-2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+The SSD chunked scan follows Dao & Gu (arXiv:2405.21060): within-chunk terms
+are dense MXU matmuls, the inter-chunk recurrence carries an (N x P) state
+per head.  The mLSTM maps onto the same machinery (decay = logsigmoid(f),
+state driven by i*v k^T, normalizer = extra all-ones value channel); the
+xLSTM log-space stabilizer is replaced by a soft-capped input gate in the
+chunked path (DESIGN.md §5 notes the deviation).  sLSTM is inherently
+sequential (nonlinear recurrence) and runs as a lax.scan over time; its
+FLOPs are corrected analytically in the roofline (launch/roofline.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.param import PDecl
+from repro.models.layers import rms_norm, act_fn
+from repro.runtime import maybe_scan
+from repro.sharding.axes import LogicalRules, logical_constraint
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (shared by Mamba-2 and mLSTM)
+# ---------------------------------------------------------------------------
+def ssd_chunked(xbar, la, Bm, Cm, chunk: int):
+    """y_t = C_t^T S_t,  S_t = exp(la_t) S_{t-1} + B_t xbar_t^T.
+
+    xbar: (B,S,H,P) f32; la: (B,S,H) f32 log-decay (<=0);
+    Bm, Cm: (B,S,N) f32 (shared across heads, n_groups=1).
+    Returns y (B,S,H,P) f32 and final state (B,H,N,P).
+    """
+    b, s, h, pdim = xbar.shape
+    n = Bm.shape[-1]
+    s_true = s
+    pad = (-s) % chunk
+    if pad:   # zero inputs with zero log-decay leave the state untouched
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // chunk
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xs, las, bs, cs = resh(xbar), resh(la), resh(Bm), resh(Cm)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(state, inp):
+        xc, lac, bc, cc = inp                      # (B,Q,H,P) (B,Q,H) (B,Q,N)
+        cl = jnp.cumsum(lac, axis=1)               # inclusive (B,Q,H)
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)
+        lmat = jnp.exp(jnp.clip(cl[:, :, None, :] - cl[:, None, :, :], -60.0, 0.0))
+        w = jnp.where(causal[None, :, :, None], scores[:, :, :, None] * lmat, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xc)
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", cc, state, jnp.exp(cl))
+        tail = jnp.exp(cl[:, -1:, :] - cl)          # decay j -> chunk end
+        s_new = jnp.einsum("bjn,bjhp,bjh->bhnp", bc, xc, tail) \
+            + state * jnp.exp(cl[:, -1])[:, :, None, None]
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, n, pdim), F32)
+    s_fin, ys = maybe_scan(body, s0, (xs, las, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, pdim)[:, :s_true]
+    return y, s_fin
+
+
+def ssd_step(state, xbar1, la1, b1, c1):
+    """One decode step. state (B,H,N,P); xbar1 (B,H,P); la1 (B,H); b1/c1 (B,N)."""
+    s_new = state * jnp.exp(la1)[:, :, None, None] \
+        + jnp.einsum("bn,bhp->bhnp", b1, xbar1)
+    y = jnp.einsum("bn,bhnp->bhp", c1, s_new)
+    return s_new, y
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (width cw) with streaming state
+# ---------------------------------------------------------------------------
+def causal_conv(x, w, bias):
+    """x: (B,S,C); w: (cw,C) depthwise; left-pad causal."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(cw))
+    return out + bias
+
+
+def causal_conv_step(conv_state, x1, w, bias):
+    """conv_state: (B, cw-1, C) previous inputs; x1: (B, C)."""
+    window = jnp.concatenate([conv_state, x1[:, None, :]], axis=1)  # (B,cw,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + bias
+    return window[:, 1:], out
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+def mamba2_decls(cfg: ArchConfig) -> Dict[str, PDecl]:
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    nh = di // s.head_dim
+    n = s.state_dim
+    cdim = di + 2 * n
+    return {
+        "norm": PDecl((d,), (None,), init="ones"),
+        "in_proj": PDecl((d, 2 * di + 2 * n + nh), ("embed", "ff")),
+        "conv_w": PDecl((s.conv_dim, cdim), ("conv", None), scale=0.3),
+        "conv_b": PDecl((cdim,), (None,), init="zeros"),
+        "a_log": PDecl((nh,), (None,), dtype=F32, init="zeros"),
+        "dt_bias": PDecl((nh,), (None,), dtype=F32, init="zeros"),
+        "d_skip": PDecl((nh,), (None,), dtype=F32, init="ones"),
+        "gnorm": PDecl((di,), (None,), init="ones"),
+        "out_proj": PDecl((di, d), ("ff", "embed")),
+    }
+
+
+def _mamba2_split(p, cfg, h):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    n = s.state_dim
+    nh = di // s.head_dim
+    z, xc, bm, cm, dt = jnp.split(
+        h, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xc, bm, cm, dt, di, n, nh
+
+
+def mamba2_forward(p, cfg: ArchConfig, x, rules: LogicalRules,
+                   return_state: bool = False):
+    s = cfg.ssm
+    hin = rms_norm(x, p["norm"], cfg.norm_eps)
+    h = jnp.einsum("bsd,dk->bsk", hin, p["in_proj"])
+    z, xc, bm, cm, dt, di, n, nh = _mamba2_split(p, cfg, h)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_out = jax.nn.silu(causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xc, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])            # (B,S,nh)
+    la = -jnp.exp(p["a_log"]) * dt
+    xh = xc.reshape(*xc.shape[:2], nh, s.head_dim).astype(F32)
+    xbar = xh * dt[..., None]
+    y, s_fin = ssd_chunked(xbar, la, bm.astype(F32), cm.astype(F32), s.chunk)
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = x + jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    if return_state:
+        cw = s.conv_dim
+        conv_state = jnp.pad(conv_in, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):]
+        return out, (s_fin, conv_state)
+    return out
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return {
+        "ssm": jnp.zeros((batch, nh, s.state_dim, s.head_dim), F32),
+        "conv": jnp.zeros((batch, s.conv_dim - 1, di + 2 * s.state_dim),
+                          jnp.bfloat16),
+    }
+
+
+def mamba2_decode(p, cfg: ArchConfig, x1, state, rules: LogicalRules):
+    """x1: (B,1,d). state: {"ssm","conv"}. Returns (out (B,1,d), state)."""
+    s = cfg.ssm
+    hin = rms_norm(x1[:, 0], p["norm"], cfg.norm_eps)
+    h = jnp.einsum("bd,dk->bk", hin, p["in_proj"])
+    z, xc, bm, cm, dt, di, n, nh = _mamba2_split(p, cfg, h)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_state, conv_out = causal_conv_step(
+        state["conv"], conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])            # (B,nh)
+    la = -jnp.exp(p["a_log"]) * dt
+    xh = xc.reshape(-1, nh, s.head_dim).astype(F32)
+    ssm, y = ssd_step(state["ssm"], xh * dt[..., None], la,
+                      bm.astype(F32), cm.astype(F32))
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(-1, di).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = x1 + jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None]
+    return out, {"ssm": ssm, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block (chunk-parallel) and sLSTM block (sequential)
+# ---------------------------------------------------------------------------
+GATE_CAP = 4.0   # soft cap replacing the xLSTM stabilizer in the chunked path
+
+
+def mlstm_decls(cfg: ArchConfig) -> Dict[str, PDecl]:
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    nh = cfg.attention.n_heads
+    return {
+        "norm": PDecl((d,), (None,), init="ones"),
+        "up": PDecl((d, 2 * di), ("embed", "ff")),
+        "conv_w": PDecl((s.conv_dim, di), ("conv", None), scale=0.3),
+        "conv_b": PDecl((di,), (None,), init="zeros"),
+        "wq": PDecl((di, di), ("ff", None)),
+        "wk": PDecl((di, di), ("ff", None)),
+        "wv": PDecl((di, di), ("ff", None)),
+        "wgate": PDecl((d, 2 * nh), ("embed", None), dtype=F32),
+        "bgate": PDecl((2 * nh,), (None,), dtype=F32, init="zeros"),
+        "gnorm": PDecl((di,), (None,), init="ones"),
+        "down": PDecl((di, d), ("ff", "embed")),
+    }
+
+
+def _mlstm_qkv(p, cfg, hin):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = cfg.attention.n_heads
+    hd = di // nh
+    up = jnp.einsum("...d,dk->...k", hin, p["up"])
+    xb, z = jnp.split(up, 2, axis=-1)
+    return xb, z, di, nh, hd
+
+
+def mlstm_forward(p, cfg: ArchConfig, x, rules: LogicalRules,
+                  return_state: bool = False):
+    """mLSTM via SSD: decay=logsigmoid(f), input i=exp(min(i_raw, cap)),
+    state driven by (i * v) k^T, queried by q; normalizer via an extra
+    all-ones value channel."""
+    hin = rms_norm(x, p["norm"], cfg.norm_eps)
+    xb, z, di, nh, hd = _mlstm_qkv(p, cfg, hin)
+    conv = jax.nn.silu(causal_conv(xb, p["conv_w"], p["conv_b"]))
+    q = jnp.einsum("bsk,kj->bsj", conv, p["wq"]).reshape(*x.shape[:2], nh, hd)
+    k = jnp.einsum("bsk,kj->bsj", conv, p["wk"]).reshape(*x.shape[:2], nh, hd)
+    v = jnp.einsum("bsk,kj->bsj", xb, p["wv"]).reshape(*x.shape[:2], nh, hd)
+    gates = jnp.einsum("bsd,dg->bsg", hin.astype(F32), p["wgate"]) + p["bgate"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                          # (B,S,nh)
+    la = jax.nn.log_sigmoid(fg)
+    i = jnp.exp(jnp.minimum(ig, GATE_CAP))
+    scale = 1.0 / np.sqrt(hd)
+    # one SSD per head: state dim = key dim. v' = [v, 1] for the normalizer.
+    vn = jnp.concatenate([v.astype(F32), jnp.ones_like(v[..., :1], F32)], -1)
+    xbar = vn * i[..., None]
+    b, ssteps = x.shape[:2]
+    # fold heads into batch so B/C can stay per-head (SSD shares B/C per head)
+    def fold(t):  # (B,S,nh,*) -> (B*nh, S, 1, *)
+        return jnp.moveaxis(t, 2, 1).reshape(b * nh, ssteps, 1, *t.shape[3:])
+    y, s_fin = ssd_chunked(
+        fold(xbar),
+        fold(la[..., None])[..., 0],
+        fold(k.astype(F32) * scale)[:, :, 0],
+        fold(q.astype(F32))[:, :, 0],
+        cfg.ssm.chunk)
+    y = jnp.moveaxis(y.reshape(b, nh, ssteps, hd + 1), 1, 2)
+    num, den = y[..., :hd], y[..., hd:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(b, ssteps, di).astype(x.dtype)
+    h = rms_norm(h * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = x + jnp.einsum("bsk,kd->bsd", h, p["down"])
+    if return_state:
+        cw = cfg.ssm.conv_dim
+        conv_state = jnp.pad(xb, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):]
+        return out, (s_fin.reshape(b, nh, hd, hd + 1), conv_state)
+    return out
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int):
+    di = cfg.ssm.expand * cfg.d_model
+    nh = cfg.attention.n_heads
+    hd = di // nh
+    return {
+        "ssm": jnp.zeros((batch, nh, hd, hd + 1), F32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_dim - 1, di), jnp.bfloat16),
+    }
+
+
+def mlstm_decode(p, cfg: ArchConfig, x1, state, rules: LogicalRules):
+    hin = rms_norm(x1[:, 0], p["norm"], cfg.norm_eps)
+    xb, z, di, nh, hd = _mlstm_qkv(p, cfg, hin)
+    conv_state, conv = causal_conv_step(state["conv"], xb, p["conv_w"], p["conv_b"])
+    conv = jax.nn.silu(conv)
+    q = (conv @ p["wq"]).reshape(-1, nh, hd)
+    k = (conv @ p["wk"]).reshape(-1, nh, hd)
+    v = (xb @ p["wv"]).reshape(-1, nh, hd)
+    gates = hin.astype(F32) @ p["wgate"] + p["bgate"]
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    la = jax.nn.log_sigmoid(fg)                                   # (B,nh)
+    i = jnp.exp(jnp.minimum(ig, GATE_CAP))
+    scale = 1.0 / np.sqrt(hd)
+    vn = jnp.concatenate([v.astype(F32), jnp.ones_like(v[..., :1], F32)], -1)
+    s_new = state["ssm"] * jnp.exp(la)[..., None, None] + jnp.einsum(
+        "bhk,bhp->bhkp", k.astype(F32) * scale, vn * i[..., None])
+    y = jnp.einsum("bhk,bhkp->bhp", q.astype(F32), s_new)
+    h = (y[..., :hd] / jnp.maximum(jnp.abs(y[..., hd:]), 1.0)).reshape(-1, di)
+    h = rms_norm(h.astype(x1.dtype) * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = x1 + (h @ p["down"])[:, None]
+    return out, {"ssm": s_new, "conv": conv_state}
+
+
+# --- sLSTM -----------------------------------------------------------------
+def slstm_decls(cfg: ArchConfig) -> Dict[str, PDecl]:
+    d = cfg.d_model
+    nh = cfg.attention.n_heads
+    hd = d // nh
+    ffs = int(d * 4 / 3 / 64) * 64 or 64
+    return {
+        "norm": PDecl((d,), (None,), init="ones"),
+        "w": PDecl((d, 4 * d), ("embed", "ff")),
+        "r": PDecl((nh, hd, 4 * hd), (None, None, None), scale=0.05),
+        "b": PDecl((4 * d,), (None,), dtype=F32, init="zeros"),
+        "gnorm": PDecl((d,), (None,), init="ones"),
+        "up": PDecl((d, 2 * ffs), ("embed", "ff")),
+        "down": PDecl((ffs, d), ("ff", "embed")),
+    }
+
+
+def slstm_cell(params_r, b, nh, hd, carry, wx_t):
+    """Stabilized sLSTM step.  carry: (c, n, h, m) each (B, nh, hd).
+
+    wx_t: (B, 4d) laid out as [z|i|f|o] each d = nh*hd wide; the recurrent
+    matrix R (nh, hd, 4*hd) produces the same four gates per head.
+    """
+    c, n, h, m = carry
+    bsz = wx_t.shape[0]
+    rh = jnp.einsum("bhk,hkg->bhg", h, params_r)                # (B,nh,4*hd)
+    wx4 = wx_t.reshape(bsz, 4, nh, hd).transpose(0, 2, 1, 3)    # (B,nh,4,hd)
+    rh4 = rh.reshape(bsz, nh, 4, hd)
+    b4 = b.reshape(4, nh, hd).transpose(1, 0, 2)                # (nh,4,hd)
+    pre = wx4 + rh4 + b4
+    zt, it, ft, ot = (pre[:, :, i] for i in range(4))
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(log_f + m - m_new)
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p, cfg: ArchConfig, x, rules: LogicalRules,
+                  return_state: bool = False):
+    d = cfg.d_model
+    nh = cfg.attention.n_heads
+    hd = d // nh
+    b, s, _ = x.shape
+    hin = rms_norm(x, p["norm"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dg->bsg", hin, p["w"]).astype(F32)      # (B,S,4d)
+    carry0 = tuple(jnp.zeros((b, nh, hd), F32) for _ in range(4))
+    cell = lambda carry, wx_t: slstm_cell(p["r"].astype(F32), p["b"], nh, hd,
+                                          carry, wx_t)
+    carry, hs = jax.lax.scan(cell, carry0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    h = rms_norm(h, p["gnorm"], cfg.norm_eps)
+    uv = jnp.einsum("bsd,dk->bsk", h, p["up"])
+    u, v = jnp.split(uv, 2, axis=-1)
+    out = x + jnp.einsum("bsk,kd->bsd", jax.nn.silu(u) * v, p["down"])
+    if return_state:
+        return out, carry
+    return out
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int):
+    nh = cfg.attention.n_heads
+    hd = cfg.d_model // nh
+    return tuple(jnp.zeros((batch, nh, hd), F32) for _ in range(4))
+
+
+def slstm_decode(p, cfg: ArchConfig, x1, state, rules: LogicalRules):
+    d = cfg.d_model
+    nh = cfg.attention.n_heads
+    hd = d // nh
+    hin = rms_norm(x1[:, 0], p["norm"], cfg.norm_eps)
+    wx = (hin @ p["w"]).astype(F32)
+    state, h = slstm_cell(p["r"].astype(F32), p["b"], nh, hd, state, wx)
+    h = h.reshape(-1, d).astype(x1.dtype)
+    h = rms_norm(h, p["gnorm"], cfg.norm_eps)
+    uv = h @ p["up"]
+    u, v = jnp.split(uv, 2, axis=-1)
+    out = x1 + ((jax.nn.silu(u) * v) @ p["down"])[:, None]
+    return out, state

@@ -1,0 +1,42 @@
+"""Process-wide runtime flags.
+
+``unroll_inner``: the dry-run cost pass sets this so inner lax.scan loops
+(KV-chunk attention, SSD chunk scan, microbatch accumulation) are unrolled —
+``compiled.cost_analysis()`` counts a while-loop body once, so rolled loops
+would under-report FLOPs/bytes.  The memory-proof compile keeps loops rolled.
+
+``force_pallas``: route kernel wrappers to the Pallas implementation even on
+CPU (interpret mode) — used by kernel tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+unroll_inner: bool = False
+force_pallas: str = os.environ.get("REPRO_FORCE_PALLAS", "")
+# Mesh axis names available for sharding constraints (None = no filtering);
+# set by launch code so rule tables mentioning ("pod","data") degrade
+# gracefully on a single-pod ("data","model") mesh.
+mesh_axes = None
+
+
+@contextlib.contextmanager
+def flags(**kw):
+    g = globals()
+    old = {k: g[k] for k in kw}
+    g.update(kw)
+    try:
+        yield
+    finally:
+        g.update(old)
+
+
+def maybe_scan(body, init, xs, length=None):
+    """lax.scan that honors the unroll flag (for cost-exact dry-runs)."""
+    import jax
+    n = length
+    if n is None:
+        n = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs, length=n,
+                        unroll=n if unroll_inner else 1)

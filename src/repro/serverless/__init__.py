@@ -1,0 +1,8 @@
+from repro.serverless.cost import Bill, BillingRecord, speedup_of, USD_PER_GB_S
+from repro.serverless.executor import PoolConfig, RunReport, ServerlessExecutor
+from repro.serverless.ledger import TaskLedger
+
+__all__ = [
+    "Bill", "BillingRecord", "speedup_of", "USD_PER_GB_S", "PoolConfig",
+    "RunReport", "ServerlessExecutor", "TaskLedger",
+]

@@ -1,0 +1,3 @@
+from repro.serving.engine import Engine, GenResult, grow_cache, init_cache
+
+__all__ = ["Engine", "GenResult", "grow_cache", "init_cache"]

@@ -1,0 +1,9 @@
+from repro.sharding.axes import (
+    LogicalRules, logical_constraint, rules_for, MEGATRON_FSDP, SMALL_DP,
+    SMALL_SEQ,
+)
+
+__all__ = [
+    "LogicalRules", "logical_constraint", "rules_for", "MEGATRON_FSDP",
+    "SMALL_DP", "SMALL_SEQ",
+]

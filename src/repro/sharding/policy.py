@@ -1,0 +1,57 @@
+"""Named sharding-policy variants for §Perf hillclimbing.
+
+A variant = (rules transform, model-build overrides).  The dry-run CLI takes
+``--variant NAME`` so a hypothesis is one flag away from its measurement; the
+baseline tables always use ``default``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from repro.sharding.axes import LogicalRules, rules_for
+
+
+@dataclass(frozen=True)
+class Variant:
+    name: str
+    description: str
+    rules_update: Dict[str, object] = field(default_factory=dict)
+    attn_chunk: Optional[int] = None
+    remat: Optional[str] = None
+    n_microbatch: Optional[int] = None
+
+
+VARIANTS: Dict[str, Variant] = {v.name: v for v in [
+    Variant("default", "paper-faithful baseline policy"),
+    Variant("no_seqpar",
+            "hypothesis: sequence-parallel residual constraint is causing "
+            "extra reshard traffic — drop it",
+            rules_update={"seq_shard": None}),
+    Variant("no_seqpar_m16",
+            "no_seqpar trades wire for replicated activation checkpoints; "
+            "recover HBM with 16 microbatches",
+            rules_update={"seq_shard": None}, n_microbatch=16),
+    Variant("dp_heavy",
+            "hypothesis: TP all-reduces dominate — shard FFN/heads over "
+            "(data,model) jointly and keep activations DP-only",
+            rules_update={"act_heads": None, "act_ff": None,
+                          "seq_shard": None}),
+    Variant("remat_dots",
+            "hypothesis: full remat recompute inflates the compute term — "
+            "save matmul outputs instead",
+            remat="dots"),
+    Variant("chunk512", "smaller attention KV chunks (less transient traffic)",
+            attn_chunk=512),
+    Variant("chunk2048", "larger attention KV chunks (fewer softmax passes)",
+            attn_chunk=2048),
+]}
+
+
+def apply_variant(arch_name: str, shape_kind: str, d_model: int,
+                  variant: str):
+    v = VARIANTS[variant]
+    rules = rules_for(arch_name, shape_kind, d_model)
+    if v.rules_update:
+        rules = rules.replace(**v.rules_update)
+    return rules, v

@@ -1,0 +1,8 @@
+from repro.train.checkpoint import Checkpointer
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, schedule
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step
+
+__all__ = [
+    "Checkpointer", "OptConfig", "adamw_update", "init_opt_state", "schedule",
+    "Trainer", "TrainerConfig", "make_train_step",
+]

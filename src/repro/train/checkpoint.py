@@ -1,0 +1,136 @@
+"""msgpack-based checkpointing (orbax is not available offline).
+
+Trees are flattened to path-keyed raw buffers; restore is resume-exact
+(params, optimizer state incl. step, data cursor, RNG key).  Writes are
+atomic (tmp + rename) and keep a rolling window of checkpoints.  On a real
+multi-host pod each host writes its addressable shards under its process
+index; here (single host) the full tree is written — the layout keeps the
+per-shard extension point explicit in ``_shard_suffix``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _shard_suffix() -> str:
+    return f".{jax.process_index()}" if jax.process_count() > 1 else ""
+
+
+def tree_to_payload(tree) -> Dict[str, Any]:
+    flat = {}
+    def visit(path, leaf):
+        arr = np.asarray(leaf)
+        flat[_path_str(path)] = {
+            "dtype": arr.dtype.name if arr.dtype != jnp.bfloat16 else "bfloat16",
+            "shape": list(arr.shape),
+            "data": (arr.view(np.uint16) if arr.dtype == jnp.bfloat16
+                     else arr).tobytes(),
+        }
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def payload_to_tree(payload: Dict[str, Any], like):
+    leaves_by_path = {}
+    def visit(path, leaf):
+        rec = payload[_path_str(path)]
+        if rec["dtype"] == "bfloat16":
+            arr = np.frombuffer(rec["data"], np.uint16).reshape(rec["shape"])
+            arr = arr.view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(rec["data"], np.dtype(rec["dtype"])).reshape(
+                rec["shape"])
+        leaves_by_path[_path_str(path)] = jnp.asarray(arr)
+        return leaves_by_path[_path_str(path)]
+    return jax.tree_util.tree_map_with_path(visit, like)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.msgpack{_shard_suffix()}")
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, params, opt_state, extra: Optional[dict] = None):
+        """Device->host copy happens synchronously; serialization + IO move
+        to a writer thread (compute/IO overlap)."""
+        payload = {
+            "step": step,
+            "params": tree_to_payload(params),
+            "opt": tree_to_payload(opt_state),
+            "extra": extra or {},
+        }
+        self.wait()
+
+        def write():
+            path = self._path(step)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(msgpack.packb(payload, use_bin_type=True))
+            os.replace(tmp, path)
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def _gc(self):
+        ckpts = sorted(self.steps())
+        for s in ckpts[: -self.keep]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    def steps(self):
+        pat = re.compile(r"ckpt_(\d+)\.msgpack")
+        out = []
+        for f in os.listdir(self.dir):
+            m = pat.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(set(out))
+
+    def restore(self, params_like, opt_like,
+                step: Optional[int] = None) -> Tuple[Any, Any, int, dict]:
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        step = steps[-1] if step is None else step
+        with open(self._path(step), "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+        params = payload_to_tree(payload["params"], params_like)
+        opt = payload_to_tree(payload["opt"], opt_like)
+        return params, opt, payload["step"], payload.get("extra", {})

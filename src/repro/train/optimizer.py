@@ -1,0 +1,110 @@
+"""AdamW from scratch: bf16 params, f32 master weights + moments (sharded
+like the params), global-norm clipping, warmup+cosine schedule, optional
+int8 gradient compression with error feedback for the DP all-reduce.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False      # int8 + error feedback
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(F32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(lambda p: p.astype(F32), params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def compress_int8(g, err):
+    """int8 quantize with error feedback: returns (q_dequantized, new_err).
+
+    When applied *before* the DP all-reduce (trainer wires this through a
+    reduce-over-int8 shard_map in the optimized path) it cuts gradient
+    exchange bytes 4x; the error-feedback accumulator keeps the optimizer
+    unbiased in the long run (1-bit Adam / EF-SGD lineage).
+    """
+    gf = g.astype(F32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(F32) * scale
+    return deq, gf - deq
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_int8, grads, state["err"])
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(F32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(F32)
+
+    def upd(p_master, g, m, v):
+        g = g.astype(F32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p_master if p_master.ndim >= 2 else 0.0
+        p_new = p_master - lr * (update + decay)
+        return p_new, m, v
+
+    out = jax.tree.map(upd, state["master"], grads, state["m"], state["v"])
+    master = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[2], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    new_state = {"step": step, "master": master, "m": m, "v": v}
+    if cfg.compress_grads:
+        new_state["err"] = new_err
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

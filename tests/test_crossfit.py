@@ -1,0 +1,59 @@
+"""Cross-fitting grid properties (partitions, scaling bijections, stitching)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crossfit import (
+    TaskGrid, TaskKey, check_partition, draw_fold_masks, stitch_predictions,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(11, 200), k=st.integers(2, 7), m=st.integers(1, 5),
+       seed=st.integers(0, 2**20))
+def test_fold_masks_partition(n, k, m, seed):
+    masks = draw_fold_masks(n, k, m, seed)
+    assert masks.shape == (m, k, n)
+    assert check_partition(masks)
+    sizes = masks.sum(axis=2)
+    assert (np.abs(sizes - n / k) <= 1).all()      # balanced folds
+
+
+def test_fold_masks_deterministic():
+    a = draw_fold_masks(100, 5, 3, seed=7)
+    b = draw_fold_masks(100, 5, 3, seed=7)
+    assert (a == b).all()
+    c = draw_fold_masks(100, 5, 3, seed=8)
+    assert (a != c).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 6), k=st.integers(2, 6), l=st.integers(1, 4),
+       scaling=st.sampled_from(["n_rep", "n_folds*n_rep"]))
+def test_invocation_mapping_bijection(m, k, l, scaling):
+    grid = TaskGrid(m, k, l)
+    seen = set()
+    for inv in range(grid.n_invocations(scaling)):
+        for key in grid.tasks_of_invocation(inv, scaling):
+            assert grid.invocation_of(key, scaling) == inv
+            flat = key.flat(k, l)
+            assert flat not in seen
+            seen.add(flat)
+    assert len(seen) == grid.n_tasks
+
+
+def test_paper_invocation_counts():
+    """PLR with K=5, M=100, L=2: 200 vs 1000 invocations (paper §4.2)."""
+    grid = TaskGrid(100, 5, 2)
+    assert grid.n_invocations("n_rep") == 200
+    assert grid.n_invocations("n_folds*n_rep") == 1000
+    assert grid.n_tasks == 1000
+
+
+def test_stitch_predictions():
+    masks = draw_fold_masks(30, 3, 2, seed=0)
+    preds = np.random.default_rng(0).normal(size=(2, 3, 30)).astype(np.float32)
+    out = stitch_predictions(masks, preds)
+    assert out.shape == (2, 30)
+    m, k, i = 1, 2, int(np.where(masks[1, 2])[0][0])
+    assert out[m, i] == pytest.approx(preds[m, k, i])

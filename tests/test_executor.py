@@ -1,0 +1,143 @@
+"""Serverless executor: scaling equivalence, fault tolerance, elasticity,
+checkpoint/restart, straggler mitigation, billing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crossfit import TaskGrid, draw_fold_masks
+from repro.learners import get_learner
+from repro.serverless import PoolConfig, ServerlessExecutor, TaskLedger
+from repro.serverless.cost import speedup_of
+
+
+def _setup(m=4, k=3, l=2, n=120, p=5, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    targets = rng.normal(size=(l, n)).astype(np.float32)
+    masks = draw_fold_masks(n, k, m, seed)
+    train_w = np.repeat((~masks).astype(np.float32)[:, :, None], l, axis=2)
+    grid = TaskGrid(m, k, l)
+    return x, targets, train_w, grid
+
+
+LEARNER = get_learner("ridge", {"reg": 1.0})
+
+
+def _run(pool, ledger=None, seed=0):
+    x, targets, train_w, grid = _setup()
+    ex = ServerlessExecutor(LEARNER, grid, pool)
+    return ex.run(jnp.asarray(x), jnp.asarray(targets), train_w,
+                  jax.random.key(seed), ledger=ledger)
+
+
+def test_scaling_levels_identical_results():
+    """Per-split and per-fold scaling must produce identical predictions —
+    the paper's scaling knob is cost/latency only (§4.2)."""
+    p1, _, _ = _run(PoolConfig(n_workers=2, scaling="n_rep"))
+    p2, _, _ = _run(PoolConfig(n_workers=5, scaling="n_folds*n_rep"))
+    np.testing.assert_allclose(p1, p2, rtol=2e-4, atol=2e-4)
+
+
+def test_worker_count_invariance():
+    """Elasticity: results are independent of the worker pool size."""
+    base, _, _ = _run(PoolConfig(n_workers=1, memory_mb=256))
+    for w in (2, 7, 64):
+        p, _, rep = _run(PoolConfig(n_workers=w, memory_mb=256))
+        np.testing.assert_allclose(base, p, rtol=2e-4, atol=2e-4)
+
+
+def test_fault_injection_and_retries_converge():
+    pool = PoolConfig(n_workers=3, failure_rate=0.4, max_retries=8, seed=3)
+    preds, ledger, rep = _run(pool)
+    clean, _, _ = _run(PoolConfig(n_workers=3))
+    assert rep.failures > 0
+    assert ledger.complete
+    np.testing.assert_allclose(preds, clean, rtol=2e-4, atol=2e-4)
+
+
+def test_retry_budget_exhaustion_raises():
+    pool = PoolConfig(n_workers=2, failure_rate=1.0, max_retries=0, seed=1)
+    with pytest.raises(RuntimeError, match="retry budget"):
+        _run(pool)
+
+
+def test_ledger_checkpoint_restart(tmp_path):
+    path = os.path.join(tmp_path, "ledger.msgpack")
+    pool = PoolConfig(n_workers=1, memory_mb=256, checkpoint_path=path)
+    preds, ledger, _ = _run(pool)
+    # restart from the saved ledger: nothing left to do, same predictions
+    restored = TaskLedger.load(path)
+    assert restored.complete
+    preds2, _, rep2 = _run(pool, ledger=restored)
+    np.testing.assert_allclose(preds, preds2, rtol=1e-6, atol=1e-6)
+    assert rep2.bill.n_invocations == 0          # no re-execution billed
+
+
+def test_ledger_partial_resume(tmp_path):
+    """Kill after the first wave; the restart must only run the remainder."""
+    x, targets, train_w, grid = _setup()
+    pool = PoolConfig(n_workers=1, memory_mb=256)
+    ex = ServerlessExecutor(LEARNER, grid, pool)
+    ledger = TaskLedger.create(grid.n_invocations(pool.scaling), x.shape[0],
+                               ex.tasks_per_invocation)
+    # simulate: first 3 invocations already done by a previous (crashed) run
+    full, _, _ = _run(pool)
+    done_by_crash = [0, 1, 2]
+    for inv in done_by_crash:
+        tasks = ex._invocation_tasks(np.array([inv]))[0]
+        m, rest = np.divmod(tasks, grid.n_folds * grid.n_nuisance)
+        pass
+    preds_full, led1, _ = ex.run(jnp.asarray(x), jnp.asarray(targets),
+                                 train_w, jax.random.key(0))
+    # copy 3 done rows into a fresh ledger = crash-restored state
+    led2 = TaskLedger.create(grid.n_invocations(pool.scaling), x.shape[0],
+                             ex.tasks_per_invocation)
+    for inv in done_by_crash:
+        led2.record_success(inv, led1.preds[inv])
+    preds2, led2, rep2 = ex.run(jnp.asarray(x), jnp.asarray(targets),
+                                train_w, jax.random.key(0), ledger=led2)
+    np.testing.assert_allclose(preds_full, preds2, rtol=1e-6, atol=1e-6)
+    assert rep2.bill.n_invocations == led2.n_invocations - len(done_by_crash)
+
+
+def test_elastic_worker_schedule():
+    """Workers leave and join between waves; run still completes."""
+    pool = PoolConfig(n_workers=4, memory_mb=256,
+                      worker_schedule=[4, 1, 2, 8, 8, 8, 8, 8])
+    preds, ledger, rep = _run(pool)
+    assert ledger.complete
+    assert rep.waves >= 2
+    clean, _, _ = _run(PoolConfig(n_workers=4, memory_mb=256))
+    np.testing.assert_allclose(preds, clean, rtol=2e-4, atol=2e-4)
+
+
+def test_straggler_speculation_billed():
+    pool = PoolConfig(n_workers=64, memory_mb=4096, straggler_rate=0.3,
+                      simulate=True, base_work_s=0.1, seed=5)
+    preds, ledger, rep = _run(pool)
+    assert ledger.complete
+    assert rep.stragglers > 0
+
+
+def test_memory_speed_curve_diminishing_returns():
+    s = [speedup_of(m) for m in (256, 512, 1024, 2048, 4096)]
+    assert all(b > a for a, b in zip(s, s[1:]))          # monotone
+    gains = [b / a for a, b in zip(s, s[1:])]
+    assert all(g2 < g1 + 1e-9 for g1, g2 in zip(gains, gains[1:]))
+
+
+def test_simulated_billing_tracks_memory():
+    """Fig 3 mechanics: more memory => faster; billed GB-s is duration*mem."""
+    t, c = {}, {}
+    for mem in (256, 1024, 4096):
+        pool = PoolConfig(n_workers=1000, memory_mb=mem, simulate=True,
+                          base_work_s=0.5, seed=0)
+        _, _, rep = _run(pool)
+        t[mem] = rep.response_time_s
+        c[mem] = rep.bill.total_gb_s
+    assert t[4096] < t[1024] < t[256]
+    for rec_mem, bill in c.items():
+        assert bill > 0

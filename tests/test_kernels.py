@@ -1,0 +1,185 @@
+"""Per-kernel shape/dtype sweeps + hypothesis invariants vs the jnp oracles.
+All Pallas kernels run in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.crossfit_gram import crossfit_gram_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# crossfit_gram
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,p,t,bn", [
+    (256, 8, 8, 64), (512, 16, 16, 128), (1024, 24, 8, 256), (128, 4, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_crossfit_gram_sweep(n, p, t, bn, dtype):
+    k = jax.random.key(n + p + t)
+    x = jax.random.normal(k, (n, p), jnp.float32).astype(dtype)
+    w = (jax.random.uniform(jax.random.fold_in(k, 1), (t, n)) > 0.4) \
+        .astype(dtype)
+    y = jax.random.normal(jax.random.fold_in(k, 2), (t, n)).astype(dtype)
+    g, b = crossfit_gram_pallas(x, w, y, block_t=8, block_n=bn,
+                                interpret=True)
+    g0, b0 = ref.crossfit_gram_ref(x, w, y)
+    scale = max(float(jnp.max(jnp.abs(g0))), 1.0)
+    assert float(jnp.max(jnp.abs(g - g0))) / scale < TOL[dtype]
+    bscale = max(float(jnp.max(jnp.abs(b0))), 1.0)
+    assert float(jnp.max(jnp.abs(b - b0))) / bscale < TOL[dtype]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_gram_mask_of_ones_equals_plain_gram(seed):
+    k = jax.random.key(seed)
+    x = jax.random.normal(k, (128, 6), jnp.float32)
+    w = jnp.ones((8, 128), jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(k, 1), (8, 128), jnp.float32)
+    g, _ = crossfit_gram_pallas(x, w, y, block_t=8, block_n=64,
+                                interpret=True)
+    plain = x.T @ x
+    for t in range(8):
+        np.testing.assert_allclose(np.asarray(g[t]), np.asarray(plain),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_gram_additivity_over_disjoint_masks(seed):
+    """G(w1) + G(w2) == G(w1+w2) for disjoint masks — the fold-partition
+    structure the paper's grid relies on."""
+    k = jax.random.key(seed)
+    x = jax.random.normal(k, (128, 5), jnp.float32)
+    m = jax.random.uniform(jax.random.fold_in(k, 1), (128,)) > 0.5
+    ones = jnp.ones_like(m)
+    w = jnp.stack([m, ~m, ones, m, ~m, ones, m, ~m]).astype(jnp.float32)
+    y = jnp.ones((8, 128), jnp.float32)
+    g, b = crossfit_gram_pallas(x, w, y, block_t=8, block_n=64,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(g[0] + g[1]), np.asarray(g[2]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(b[0] + b[1]), np.asarray(b[2]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sq,skv,d,bq,bk", [
+    (128, 128, 32, 64, 64), (256, 256, 64, 64, 128),
+    (64, 256, 32, 32, 64),                       # chunked-prefill shape
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (True, 48), (False, None),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(sq, skv, d, bq, bk, causal, window, dtype):
+    k = jax.random.key(sq + skv + d)
+    q = jax.random.normal(k, (3, sq, d), jnp.float32).astype(dtype)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (3, skv, d),
+                           jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (3, skv, d),
+                          jnp.float32).astype(dtype)
+    o = flash_attention_pallas(q, kk, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=True)
+    o0 = ref.flash_attention_ref(q, kk, v, causal=causal, window=window)
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                - o0.astype(jnp.float32))))
+    assert err < TOL[dtype], err
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_flash_attention_batch_permutation_equivariance(seed):
+    k = jax.random.key(seed)
+    q = jax.random.normal(k, (4, 64, 16), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (4, 64, 16), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (4, 64, 16), jnp.float32)
+    perm = jax.random.permutation(jax.random.fold_in(k, 3), 4)
+    o1 = flash_attention_pallas(q, kk, v, block_q=32, block_k=32,
+                                interpret=True)[perm]
+    o2 = flash_attention_pallas(q[perm], kk[perm], v[perm],
+                                block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_uniform_values():
+    """With identical V rows the output equals V regardless of scores."""
+    q = jax.random.normal(jax.random.key(0), (2, 64, 16), jnp.float32)
+    kk = jax.random.normal(jax.random.key(1), (2, 64, 16), jnp.float32)
+    v = jnp.broadcast_to(jnp.arange(16, dtype=jnp.float32), (2, 64, 16))
+    o = flash_attention_pallas(q, kk, v, block_q=32, block_k=32,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(v), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,p,n,chunk", [
+    (128, 16, 8, 32), (256, 64, 16, 64), (64, 32, 32, 64),
+])
+def test_ssd_scan_sweep(s, p, n, chunk):
+    k = jax.random.key(s + p + n)
+    xb = jax.random.normal(k, (2, s, p), jnp.float32)
+    la = -jax.random.uniform(jax.random.fold_in(k, 1), (2, s)) * 2.0
+    bm = jax.random.normal(jax.random.fold_in(k, 2), (2, s, n), jnp.float32)
+    cm = jax.random.normal(jax.random.fold_in(k, 3), (2, s, n), jnp.float32)
+    y = ssd_scan_pallas(xb, la, bm, cm, chunk=chunk, interpret=True)
+    y0, _ = ref.ssd_scan_ref(xb, la, bm, cm)
+    scale = max(float(jnp.max(jnp.abs(y0))), 1.0)
+    assert float(jnp.max(jnp.abs(y - y0))) / scale < 2e-4
+
+
+def test_ssd_zero_decay_is_cumulative_outer_product():
+    """la = 0 => S_t = sum_j<=t B_j x_j^T: y_t = C_t . cumsum."""
+    s, p, n = 32, 4, 3
+    k = jax.random.key(0)
+    xb = jax.random.normal(k, (1, s, p), jnp.float32)
+    bm = jax.random.normal(jax.random.fold_in(k, 1), (1, s, n), jnp.float32)
+    cm = jax.random.normal(jax.random.fold_in(k, 2), (1, s, n), jnp.float32)
+    la = jnp.zeros((1, s), jnp.float32)
+    y = ssd_scan_pallas(xb, la, bm, cm, chunk=16, interpret=True)
+    states = jnp.cumsum(jnp.einsum("bsn,bsp->bsnp", bm, xb), axis=1)
+    y0 = jnp.einsum("bsn,bsnp->bsp", cm, states)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_ssd_strong_decay_forgets(seed):
+    """Very negative la: state resets, y_t ~= C_t.(B_t x_t^T) only."""
+    k = jax.random.key(seed)
+    s = 64
+    xb = jax.random.normal(k, (1, s, 8), jnp.float32)
+    bm = jax.random.normal(jax.random.fold_in(k, 1), (1, s, 4), jnp.float32)
+    cm = jax.random.normal(jax.random.fold_in(k, 2), (1, s, 4), jnp.float32)
+    la = jnp.full((1, s), -50.0)
+    y = ssd_scan_pallas(xb, la, bm, cm, chunk=16, interpret=True)
+    y0 = jnp.einsum("bsn,bsn,bsp->bsp", cm, bm, xb)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0), rtol=1e-3,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ops wrappers route to the oracle on CPU
+# ---------------------------------------------------------------------------
+def test_ops_cpu_routing():
+    from repro.kernels import ops
+    x = jax.random.normal(jax.random.key(0), (100, 7), jnp.float32)
+    w = jnp.ones((3, 100), jnp.float32)
+    y = jnp.ones((3, 100), jnp.float32)
+    g, b = ops.crossfit_gram(x, w, y, reg=1.0)
+    g0, b0 = ref.crossfit_gram_ref(x, w, y, reg=1.0)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0), rtol=1e-5)

@@ -1,0 +1,104 @@
+"""Learner correctness on masked batched fits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.learners import get_learner
+from repro.learners.linear import lasso_fit_predict, ridge_fit_predict
+
+
+def _problem(n=200, p=6, t=5, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    beta = rng.normal(size=p).astype(np.float32)
+    y = (x @ beta + 0.1 * rng.normal(size=n)).astype(np.float32)
+    ys = np.tile(y, (t, 1))
+    w = (rng.random((t, n)) > 0.3).astype(np.float32)
+    return x, ys, w, beta
+
+
+def test_ridge_matches_numpy_closed_form():
+    x, ys, w, _ = _problem()
+    preds = ridge_fit_predict(jnp.asarray(x), jnp.asarray(ys), jnp.asarray(w),
+                              reg=2.0)
+    xa = np.concatenate([x, np.ones((x.shape[0], 1), np.float32)], axis=1)
+    for t in range(ys.shape[0]):
+        wd = np.diag(w[t])
+        g = xa.T @ wd @ xa + 2.0 * np.eye(xa.shape[1])
+        g[-1, -1] -= 2.0 - 1e-8                    # unpenalized intercept
+        beta = np.linalg.solve(g, xa.T @ (w[t] * ys[t]))
+        np.testing.assert_allclose(np.asarray(preds[t]), xa @ beta,
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_masked_fit_equals_subset_fit():
+    """Weighted fit with 0/1 mask == fitting on the subset only."""
+    x, ys, w, _ = _problem(t=1)
+    preds = ridge_fit_predict(jnp.asarray(x), jnp.asarray(ys), jnp.asarray(w),
+                              reg=1.0)
+    keep = w[0] > 0
+    xa = np.concatenate([x, np.ones((x.shape[0], 1), np.float32)], axis=1)
+    xs = xa[keep]
+    g = xs.T @ xs + np.eye(xa.shape[1])
+    g[-1, -1] += -1.0 + 1e-8
+    beta = np.linalg.solve(g, xs.T @ ys[0][keep])
+    np.testing.assert_allclose(np.asarray(preds[0]), xa @ beta,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_lasso_sparsity_and_fit():
+    x, ys, w, beta = _problem(n=300)
+    # strong penalty: predictions ~ (weighted) constant
+    p_big = lasso_fit_predict(jnp.asarray(x), jnp.asarray(ys),
+                              jnp.asarray(w), reg=1e3)
+    assert float(jnp.std(p_big[0])) < 0.2
+    # weak penalty: close to truth
+    p_small = lasso_fit_predict(jnp.asarray(x), jnp.asarray(ys),
+                                jnp.asarray(w), reg=1e-3)
+    resid = np.asarray(p_small[0]) - x @ beta
+    assert np.sqrt(np.mean(resid**2)) < 0.25
+
+
+def test_logistic_recovers_probabilities():
+    rng = np.random.default_rng(1)
+    n = 800
+    x = rng.normal(size=(n, 3)).astype(np.float32)
+    logits = 1.5 * x[:, 0] - x[:, 1]
+    pz = 1 / (1 + np.exp(-logits))
+    y = (rng.random(n) < pz).astype(np.float32)
+    fn = get_learner("logistic", {"reg": 1e-3})
+    preds = fn(jnp.asarray(x), jnp.asarray(y[None]),
+               jnp.ones((1, n), jnp.float32), jax.random.key(0))
+    p = np.asarray(preds[0])
+    assert ((p > 0) & (p < 1)).all()
+    assert np.corrcoef(p, pz)[0, 1] > 0.95
+
+
+def test_kernel_ridge_beats_linear_on_nonlinear_target():
+    rng = np.random.default_rng(2)
+    n = 400
+    x = rng.normal(size=(n, 2)).astype(np.float32)
+    y = np.sin(2 * x[:, 0]) + 0.1 * rng.normal(size=n).astype(np.float32)
+    w = np.ones((1, n), np.float32)
+    lin = get_learner("ridge", {"reg": 1.0})
+    krr = get_learner("kernel_ridge", {"reg": 0.5, "n_landmarks": 128,
+                                       "gamma": 1.0})
+    p_lin = lin(jnp.asarray(x), jnp.asarray(y[None]), jnp.asarray(w),
+                jax.random.key(0))
+    p_krr = krr(jnp.asarray(x), jnp.asarray(y[None]), jnp.asarray(w),
+                jax.random.key(0))
+    mse = lambda p: float(np.mean((np.asarray(p[0]) - np.sin(2 * x[:, 0]))**2))
+    assert mse(p_krr) < 0.5 * mse(p_lin)
+
+
+def test_mlp_fits_nonlinear():
+    rng = np.random.default_rng(3)
+    n = 300
+    x = rng.normal(size=(n, 2)).astype(np.float32)
+    y = (x[:, 0] * x[:, 1]).astype(np.float32)
+    fn = get_learner("mlp", {"n_steps": 400, "hidden": (32, 32)})
+    preds = fn(jnp.asarray(x), jnp.asarray(y[None]),
+               jnp.ones((1, n), jnp.float32), jax.random.key(0))
+    resid = np.asarray(preds[0]) - y
+    assert np.mean(resid**2) < 0.5 * np.mean(y**2)

@@ -1,0 +1,123 @@
+"""Per-arch smoke tests (spec: reduced config, one forward/train step on CPU,
+output shapes + no NaNs) + prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.configs.base import ShapeConfig
+from repro.models import build_model, init_tree
+from repro.serving.engine import init_cache
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", seq_len=64, global_batch=2,
+                          kind="train")
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", seq_len=64, global_batch=2,
+                            kind="prefill")
+SMOKE_DECODE = ShapeConfig("smoke_decode", seq_len=64, global_batch=2,
+                           kind="decode")
+
+
+def _batch(bundle, shape, key):
+    out = {}
+    for name, d in bundle.input_specs(shape).items():
+        key, k = jax.random.split(key)
+        if d.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, d.shape, 0,
+                                           bundle.arch.vocab_size)
+        else:
+            out[name] = jax.random.normal(k, d.shape).astype(d.dtype)
+    return out
+
+
+@pytest.fixture(scope="module")
+def bundles():
+    cache = {}
+    def get(name):
+        if name not in cache:
+            cfg = get_arch(name, reduced=True)
+            bundle = build_model(cfg, remat="none", attn_chunk=32)
+            params = init_tree(bundle.decls, jax.random.key(0))
+            cache[name] = (bundle, params)
+        return cache[name]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_shapes_and_finite(bundles, arch):
+    bundle, params = bundles(arch)
+    batch = _batch(bundle, SMOKE_TRAIN, jax.random.key(1))
+    loss, metrics = jax.jit(bundle.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: bundle.loss_fn(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x.astype(jnp.float32)))) for x in
+             jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_and_decode_shapes(bundles, arch):
+    bundle, params = bundles(arch)
+    cfg = bundle.arch
+    logits, cache = jax.jit(bundle.prefill_fn)(
+        params, _batch(bundle, SMOKE_PREFILL, jax.random.key(2)))
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    dcache = init_cache(bundle, SMOKE_DECODE)
+    dbatch = _batch(bundle, SMOKE_DECODE, jax.random.key(3))
+    dec = jax.jit(bundle.decode_fn)
+    l2, dcache = dec(params, dcache, dbatch)
+    l3, dcache = dec(params, dcache, dbatch)
+    assert l2.shape == (2, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(l3, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["codeqwen1.5-7b", "deepseek-v2-lite-16b",
+                                  "h2o-danube-3-4b", "xlstm-350m",
+                                  "zamba2-7b"])
+def test_prefill_decode_consistency(bundles, arch):
+    """Greedy next-token from prefill(prompt) must match prefill(prompt+tok)
+    vs decode(tok) logits — cache correctness end-to-end."""
+    bundle, params = bundles(arch)
+    cfg = bundle.arch
+    key = jax.random.key(4)
+    prompt = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": prompt}
+    for name, d in bundle.input_specs(SMOKE_PREFILL).items():
+        if name not in batch and d.dtype != jnp.int32:
+            batch[name] = jnp.zeros((d.shape[0], *d.shape[1:]), d.dtype)
+        elif name not in batch:
+            batch[name] = jnp.zeros(d.shape, jnp.int32)
+    if "frames" in batch:
+        batch["frames"] = batch["frames"][:, :32]
+    logits1, cache = jax.jit(bundle.prefill_fn)(params, batch)
+    from repro.serving.engine import grow_cache
+    cache = grow_cache(cfg, cache, 4)
+    tok = jnp.argmax(logits1, -1)[:, None].astype(jnp.int32)
+    dbatch = {"tokens": tok}
+    logits2, _ = jax.jit(bundle.decode_fn)(params, cache, dbatch)
+    # oracle: prefill over the extended prompt
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([prompt, tok], axis=1)
+    if "frames" in batch2:
+        batch2["frames"] = jnp.zeros(
+            (2, 33, cfg.d_frontend), batch["frames"].dtype)
+    logits3, _ = jax.jit(bundle.prefill_fn)(params, batch2)
+    a = np.asarray(logits2, np.float32)
+    b = np.asarray(logits3, np.float32)
+    # bf16 rounding differs with chunk boundaries; require semantic agreement:
+    # same greedy token and tightly correlated logits (recurrent stacks
+    # re-associate more reductions => slightly looser bound)
+    assert (a.argmax(-1) == b.argmax(-1)).all()
+    # moe: discrete routing flips under rounding; ssm/hybrid: re-associated
+    # recurrent reductions
+    tol = 0.10 if cfg.family in ("ssm", "hybrid", "moe") else 0.05
+    denom = np.maximum(np.abs(b).max(), 1.0)
+    assert np.abs(a - b).max() / denom < tol, np.abs(a - b).max()
+
+
+def test_reduced_configs_are_small():
+    for arch in ARCH_NAMES:
+        cfg = get_arch(arch, reduced=True)
+        assert cfg.param_count() < 20e6, arch

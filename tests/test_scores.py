@@ -1,0 +1,106 @@
+"""Score-function unit tests: linearity, orthogonality, SE sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scores import (
+    SPECS, evaluate_score, irm_score, pliv_score, plr_score, score_se,
+    solve_theta,
+)
+
+
+def _plr_fixture(n=400, theta=0.7, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 3)).astype(np.float32)
+    g = np.tanh(x[:, 0])
+    m = 0.5 * x[:, 1]
+    d = m + rng.normal(size=n).astype(np.float32)
+    y = theta * d + g + rng.normal(size=n).astype(np.float32)
+    data = {"y": jnp.asarray(y), "d": jnp.asarray(d)}
+    eta = {"ml_l": jnp.asarray(theta * m + g), "ml_m": jnp.asarray(m)}
+    return data, eta, theta
+
+
+def test_plr_score_linearity():
+    data, eta, theta = _plr_fixture()
+    pa, pb = plr_score(data, eta)
+    # psi(theta) = theta*psi_a + psi_b must be zero at the solution
+    th = solve_theta(pa, pb)
+    psi = th * pa + pb
+    assert abs(float(jnp.mean(psi))) < 1e-5
+
+
+def test_plr_recovers_theta_with_true_nuisance():
+    data, eta, theta = _plr_fixture()
+    pa, pb = plr_score(data, eta)
+    th = float(solve_theta(pa, pb))
+    assert abs(th - theta) < 0.15
+
+
+def test_plr_neyman_orthogonality():
+    """d/dr E[psi(theta0, eta0 + r*h)] at r=0 must vanish."""
+    data, eta, theta = _plr_fixture(n=20_000)
+    rng = np.random.default_rng(1)
+    h_l = jnp.asarray(rng.normal(size=data["y"].shape).astype(np.float32))
+    h_m = jnp.asarray(rng.normal(size=data["y"].shape).astype(np.float32))
+
+    def mean_psi(r):
+        pert = {"ml_l": eta["ml_l"] + r * h_l, "ml_m": eta["ml_m"] + r * h_m}
+        pa, pb = plr_score(data, pert)
+        return jnp.mean(theta * pa + pb)
+
+    d0 = float(jax.grad(mean_psi)(0.0))
+    # scale-free comparison: the second derivative is O(E[h_l h_m])
+    d2 = float(jax.grad(jax.grad(mean_psi))(0.0))
+    assert abs(d0) < 1e-2 * max(abs(d2), 1.0)
+
+
+def test_non_orthogonal_score_fails_the_same_check():
+    """A naive (prediction-error) score violates orthogonality — the reason
+    DML exists.  psi_naive = d*(y - d*theta - ghat)."""
+    data, eta, theta = _plr_fixture(n=20_000)
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.normal(size=data["y"].shape).astype(np.float32))
+
+    def mean_psi_naive(r):
+        ghat = (eta["ml_l"] - theta * eta["ml_m"]) + r * h
+        return jnp.mean(data["d"] * (data["y"] - data["d"] * theta - ghat))
+
+    d0 = float(jax.grad(mean_psi_naive)(0.0))
+    assert abs(d0) > 1e-2          # first-order sensitivity is O(E[d*h]) != 0
+
+
+def test_score_se_positive_and_shrinks():
+    data, eta, _ = _plr_fixture(n=400)
+    pa, pb = plr_score(data, eta)
+    th = solve_theta(pa, pb)
+    se400 = float(score_se(pa, pb, th))
+    data2, eta2, _ = _plr_fixture(n=6400)
+    pa2, pb2 = plr_score(data2, eta2)
+    se6400 = float(score_se(pa2, pb2, solve_theta(pa2, pb2)))
+    assert se400 > 0 and se6400 > 0
+    assert se6400 < se400
+
+
+def test_irm_score_ate_identity():
+    n = 50_000
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=n).astype(np.float32)
+    m = 1 / (1 + np.exp(-x))
+    d = (rng.random(n) < m).astype(np.float32)
+    g0 = np.tanh(x)
+    theta = 0.3
+    y = (g0 + theta * d + 0.1 * rng.normal(size=n)).astype(np.float32)
+    data = {"y": jnp.asarray(y), "d": jnp.asarray(d)}
+    eta = {"ml_g0": jnp.asarray(g0), "ml_g1": jnp.asarray(g0 + theta),
+           "ml_m": jnp.asarray(m.astype(np.float32))}
+    pa, pb = irm_score(data, eta)
+    assert abs(float(solve_theta(pa, pb)) - theta) < 0.05
+
+
+def test_all_specs_have_consistent_nuisance_counts():
+    assert SPECS["plr"].n_nuisance == 2
+    assert SPECS["pliv"].n_nuisance == 3
+    assert SPECS["irm"].n_nuisance == 3
+    assert SPECS["iivm"].n_nuisance == 5

@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests for the paper's system: the full
+DoubleML-Serverless pipeline with faults + checkpointing + both scaling
+levels, the paper's headline latency property, and serving."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DoubleMLServerless
+from repro.data import make_bonus_data
+from repro.serverless import PoolConfig
+
+
+def test_full_pipeline_with_faults_and_ledger(tmp_path):
+    data = make_bonus_data()
+    path = os.path.join(tmp_path, "ledger.msgpack")
+    est = DoubleMLServerless(
+        model="plr", n_folds=5, n_rep=3, learner="ridge",
+        learner_params={"reg": 1.0}, scaling="n_folds*n_rep",
+        pool=PoolConfig(n_workers=4, memory_mb=512,
+                        scaling="n_folds*n_rep", failure_rate=0.15,
+                        max_retries=6, checkpoint_path=path, seed=1))
+    res = est.fit(data)
+    assert os.path.exists(path)
+    assert res.report.failures > 0
+    clean = DoubleMLServerless(
+        model="plr", n_folds=5, n_rep=3, learner="ridge",
+        learner_params={"reg": 1.0}, scaling="n_rep",
+        pool=PoolConfig(n_workers=8, memory_mb=1024)).fit(data)
+    # faults + different scaling level must not change the estimate
+    assert res.theta == pytest.approx(clean.theta, abs=5e-4)
+
+
+def test_paper_headline_latency_property():
+    """Paper §3: with enough elasticity, estimating the WHOLE grid takes
+    about as long as one invocation (simulated timing model)."""
+    data = make_bonus_data()
+    # scarce workers: wall time >> one invocation
+    scarce = DoubleMLServerless(
+        model="plr", n_folds=5, n_rep=10, learner="ridge",
+        scaling="n_rep",
+        pool=PoolConfig(n_workers=1, memory_mb=256, simulate=True,
+                        base_work_s=0.5))
+    r1 = scarce.fit(data)
+    # elastic: every invocation in one wave
+    elastic = DoubleMLServerless(
+        model="plr", n_folds=5, n_rep=10, learner="ridge",
+        scaling="n_rep",
+        pool=PoolConfig(n_workers=1000, memory_mb=256, simulate=True,
+                        base_work_s=0.5))
+    r2 = elastic.fit(data)
+    per_inv = np.mean([b.duration_s for b in r2.report.bill.records])
+    assert r2.report.response_time_s < 1.5 * per_inv + 0.1
+    assert r1.report.response_time_s > 3 * r2.report.response_time_s
+
+
+def test_scaling_cost_time_tradeoff_simulated():
+    """Fig 3 shape: per-fold scaling is faster, costs slightly more."""
+    data = make_bonus_data()
+    def run(scaling):
+        est = DoubleMLServerless(
+            model="plr", n_folds=5, n_rep=6, learner="ridge",
+            scaling=scaling,
+            pool=PoolConfig(n_workers=10_000, memory_mb=1024, simulate=True,
+                            base_work_s=0.4, scaling=scaling))
+        return est.fit(data).report
+    per_split = run("n_rep")
+    per_fold = run("n_folds*n_rep")
+    assert per_fold.response_time_s < per_split.response_time_s
+    assert per_fold.bill.n_invocations == 5 * per_split.bill.n_invocations
+    assert per_fold.bill.total_gb_s < 2.0 * per_split.bill.total_gb_s
+
+
+def test_serving_engine_slot_reuse():
+    from repro.configs import get_arch
+    from repro.models import build_model, init_tree
+    from repro.serving import Engine
+
+    cfg = get_arch("h2o-danube-3-4b", reduced=True)
+    bundle = build_model(cfg, remat="none", attn_chunk=32)
+    params = init_tree(bundle.decls, jax.random.key(0))
+    eng = Engine(bundle, params)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 16))
+               .astype(np.int32) for _ in range(5)]
+    outs = eng.serve_requests(prompts, batch_size=2, prompt_len=16, n_gen=4)
+    assert len(outs) == 5
+    assert all(o.shape == (4,) for o in outs)
+
+
+def test_dml_text_confounder_smoke():
+    """DML where the nuisance learner is an LM-backbone encoder — ties the
+    arch zoo to the estimation layer (examples/dml_text_confounders.py)."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from examples.dml_text_confounders import run_small
+    res = run_small(n_obs=120, n_rep=1, n_folds=3, steps=60)
+    assert np.isfinite(res["theta"])
+    assert abs(res["theta"] - res["theta0"]) < 6 * res["se"] + 0.4
