@@ -8,6 +8,8 @@
               loop (the TPU-native replacement for FaaS concurrency).
   kernelcmp — crossfit_gram Pallas (interpret) vs jnp oracle agreement +
               oracle timing (the real-time path on CPU).
+  session   — multi-request DMLSession (shared waves) vs sequential
+              one-shot estimation on the same pool.
 """
 from __future__ import annotations
 
@@ -18,20 +20,19 @@ import numpy as np
 
 
 def table1(n_rep: int = 100, repeats: int = 5, memory_mb: int = 1024) -> Dict:
-    import jax
-    from repro.core import DoubleMLServerless
+    from repro.core import DMLData, DMLPlan, estimate
     from repro.configs.dml_plr_bonus import PAPER_TABLE1, USD_PER_GB_S
     from repro.data import make_bonus_data
     from repro.serverless import PoolConfig
 
-    data = make_bonus_data()
+    data = DMLData.from_dict(make_bonus_data())
     fit, billed, per_inv, resp = [], [], [], []
     for r in range(repeats):
-        est = DoubleMLServerless(
-            model="plr", n_folds=5, n_rep=n_rep, learner="ridge",
-            learner_params={"reg": 1.0}, scaling="n_rep",
-            pool=PoolConfig(n_workers=8, memory_mb=memory_mb), seed=42 + r)
-        res = est.fit(data)
+        plan = DMLPlan.for_model(
+            "plr", n_folds=5, n_rep=n_rep, learner="ridge",
+            learner_params={"reg": 1.0}, scaling="n_rep", seed=42 + r,
+            pool=PoolConfig(n_workers=8, memory_mb=memory_mb))
+        res = estimate(plan, data)
         s = res.report.summary()
         fit.append(s["fit_time_s"])
         billed.append(s["billed_gb_s"])
@@ -55,12 +56,55 @@ def table1(n_rep: int = 100, repeats: int = 5, memory_mb: int = 1024) -> Dict:
 
 
 def figure3(n_rep: int = 20, repeats: int = 3) -> List[Dict]:
-    import sys
-    sys.path.insert(0, ".")
+    """Delegates to the example's sweep (one source of truth for the
+    Fig. 3 grid); benchmarks run from the repo root, so ``examples`` is
+    importable as a namespace package."""
     from examples.serverless_scaling import run_sweep
     rows = run_sweep(n_rep=n_rep, repeats=repeats, simulate=True)
     return [{"scaling": s, "memory_mb": m, "time_s": t, "gb_s": c}
             for s, m, t, c in rows]
+
+
+def session_throughput(n_requests: int = 4, n_rep: int = 10) -> Dict:
+    """Batched multi-request serving vs sequential one-shot estimation:
+    wall time and wave counts for the same request set on one wave pool."""
+    from repro.core import DMLData, DMLPlan, DMLSession, estimate
+    from repro.data import make_plr_data
+    from repro.serverless import PoolConfig
+
+    pool = PoolConfig(n_workers=4, memory_mb=1024)
+    reqs = [(DMLPlan.for_model("plr", n_folds=5, n_rep=n_rep,
+                               learner="ridge", learner_params={"reg": 1.0},
+                               seed=100 + i, pool=pool),
+             DMLData.from_dict(make_plr_data(n_obs=500, dim_x=10,
+                                             theta=0.5, seed=i)))
+            for i in range(n_requests)]
+
+    def run_batched():
+        sess = DMLSession(backend="wave", pool=pool)
+        for plan, data in reqs:
+            sess.submit(plan, data)
+        return sess.run(), sess.last_run_info
+
+    def run_solo():
+        return [estimate(plan, data) for plan, data in reqs]
+
+    run_batched()                       # warm the jit caches for both paths
+    run_solo()
+    t0 = time.perf_counter()
+    batched, info = run_batched()
+    batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    solo = run_solo()
+    solo_s = time.perf_counter() - t0
+    assert all(abs(b.theta - s.theta) < 1e-5
+               for b, s in zip(batched, solo))
+    return {"n_requests": n_requests, "batched_s": batched_s,
+            "sequential_s": solo_s,
+            "fused_waves": info.waves,
+            "shared_waves": info.shared_waves,
+            "sequential_waves": sum(r.report.waves for r in solo),
+            "speedup": solo_s / batched_s}
 
 
 def fusion_speedup(n_tasks: int = 64) -> Dict:

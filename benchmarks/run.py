@@ -63,6 +63,15 @@ def main() -> None:
         rows.append(("crossfit_gram_oracle", kc["oracle_us_per_call"],
                      f"pallas_max_err={kc['max_abs_err']:.2e}"))
 
+    if want("session"):
+        st = T.session_throughput(n_requests=2 if args.fast else 4,
+                                  n_rep=4 if args.fast else 10)
+        results["session"] = st
+        rows.append(("session_batched_per_request",
+                     st["batched_s"] / st["n_requests"] * 1e6,
+                     f"speedup_vs_sequential={st['speedup']:.2f}x_"
+                     f"shared_waves={st['shared_waves']}"))
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -11,9 +11,10 @@ other learner in the grid.
 
 Run:  PYTHONPATH=src python examples/dml_text_confounders.py
 """
-import sys
-
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (run as a script from examples/)
+except ModuleNotFoundError:          # imported as examples.<module>
+    from examples import _bootstrap  # noqa: F401
 
 import jax
 import jax.numpy as jnp

@@ -1,38 +1,41 @@
-"""Quickstart — the paper's §5.1 code snippet, one-to-one.
+"""Quickstart — the paper's §5.1 snippet on the declarative API.
 
 Paper (DoubleML-Serverless):                      Here:
-    dml_data = DoubleMLDataS3(...)                  data = make_bonus_data()
+    dml_data = DoubleMLDataS3(...)                  data = DMLData.from_dict(
+                                                        make_bonus_data())
     learner = RandomForestRegressor(...)            learner="kernel_ridge"
-    dml_plr = DoubleMLPLRServerless(                est = DoubleMLServerless(
-        lambda_function_name=...,                       pool=PoolConfig(...),
-        dml_data, ml_g, ml_m, n_folds=5,                model="plr", n_folds=5,
-        n_rep=100, scaling='n_rep')                     n_rep=100, scaling="n_rep")
-    dml_plr.fit_aws_lambda()                        res = est.fit(data)
+    dml_plr = DoubleMLPLRServerless(                plan = DMLPlan.for_model(
+        lambda_function_name=...,                       "plr", n_folds=5,
+        dml_data, ml_g, ml_m, n_folds=5,                n_rep=..., scaling=
+        n_rep=100, scaling='n_rep')                     "n_rep", pool=...)
+    dml_plr.fit_aws_lambda()                        res = estimate(plan, data)
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py          (pip install -e ., or in-tree)
 """
-import sys
-
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (run as a script from examples/)
+except ModuleNotFoundError:          # imported as examples.<module>
+    from examples import _bootstrap  # noqa: F401
 
 from repro.configs.dml_plr_bonus import USD_PER_GB_S
-from repro.core import DoubleMLServerless
+from repro.core import DMLData, DMLPlan, estimate
 from repro.data import make_bonus_data
 from repro.serverless import PoolConfig
 
 
 def main(n_rep: int = 20):
-    data = make_bonus_data()
-    print(f"bonus replica: N={data['x'].shape[0]}, "
-          f"p={data['x'].shape[1]} controls, planted effect {data['theta0']}")
+    data = DMLData.from_dict(make_bonus_data())
+    print(f"bonus replica: N={data.n_obs}, p={data.dim_x} controls, "
+          f"planted effect {data.theta0}")
 
-    est = DoubleMLServerless(
-        model="plr", n_folds=5, n_rep=n_rep,
+    plan = DMLPlan.for_model(
+        "plr", n_folds=5, n_rep=n_rep,
         learner="kernel_ridge",                  # RF stand-in (DESIGN.md §2)
         learner_params={"reg": 1.0, "n_landmarks": 256},
         scaling="n_rep",                          # paper's per-split scaling
+        n_boot=500,
         pool=PoolConfig(n_workers=8, memory_mb=1024))
-    res = est.fit(data, n_boot=500)
+    res = estimate(plan, data)
 
     print(f"\ntheta_hat = {res.theta:+.4f}  (se {res.se:.4f})")
     print(f"95% CI     = [{res.ci[0]:+.4f}, {res.ci[1]:+.4f}]")

@@ -4,9 +4,10 @@ slot-based continuous batching over a request queue.
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch qwen2-moe-a2.7b
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (run as a script from examples/)
+except ModuleNotFoundError:          # imported as examples.<module>
+    from examples import _bootstrap  # noqa: F401
 
 import jax
 import numpy as np

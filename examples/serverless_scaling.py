@@ -2,36 +2,37 @@
 scaling levels (paper §5.2).  Uses the simulated Lambda timing model for the
 memory/vCPU curve plus REAL measured wave compute on this host.
 
-Run:  PYTHONPATH=src python examples/serverless_scaling.py
+Run:  python examples/serverless_scaling.py     (pip install -e ., or in-tree)
 """
-import sys
-
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (run as a script from examples/)
+except ModuleNotFoundError:          # imported as examples.<module>
+    from examples import _bootstrap  # noqa: F401
 
 import numpy as np
 
-from repro.configs.dml_plr_bonus import FIG3_MEMORY_GRID, FIG3_SCALING_GRID, USD_PER_GB_S
-from repro.core import DoubleMLServerless
+from repro.configs.dml_plr_bonus import (
+    FIG3_MEMORY_GRID, FIG3_SCALING_GRID, USD_PER_GB_S,
+)
+from repro.core import DMLData, DMLPlan, estimate
 from repro.data import make_bonus_data
 from repro.serverless import PoolConfig
 
 
 def run_sweep(n_rep: int = 20, repeats: int = 3, simulate: bool = True):
-    data = make_bonus_data()
+    data = DMLData.from_dict(make_bonus_data())
     rows = []
     for scaling in FIG3_SCALING_GRID:
         for mem in FIG3_MEMORY_GRID:
             times, costs = [], []
             for r in range(repeats):
                 pool = PoolConfig(n_workers=10_000, memory_mb=mem,
-                                  scaling=scaling, simulate=simulate,
-                                  base_work_s=0.35, seed=r)
-                est = DoubleMLServerless(model="plr", n_folds=5,
-                                         n_rep=n_rep, learner="ridge",
-                                         learner_params={"reg": 1.0},
-                                         scaling=scaling, pool=pool,
-                                         seed=42 + r)
-                res = est.fit(data)
+                                  simulate=simulate, base_work_s=0.35, seed=r)
+                plan = DMLPlan.for_model(
+                    "plr", n_folds=5, n_rep=n_rep, learner="ridge",
+                    learner_params={"reg": 1.0}, scaling=scaling,
+                    seed=42 + r, pool=pool)
+                res = estimate(plan, data)
                 times.append(res.report.response_time_s)
                 costs.append(res.report.bill.total_gb_s)
             rows.append((scaling, mem, float(np.mean(times)),

@@ -7,9 +7,10 @@ the true ~100M config (intended for a real accelerator host).
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
+try:
+    import _bootstrap  # noqa: F401  (run as a script from examples/)
+except ModuleNotFoundError:          # imported as examples.<module>
+    from examples import _bootstrap  # noqa: F401
 
 import jax
 

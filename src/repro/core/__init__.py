@@ -1,9 +1,16 @@
-# The paper's primary contribution: serverless-style distributed DML.
+# The paper's primary contribution: serverless-style distributed DML,
+# exposed as a declarative three-layer API (spec -> backend -> session).
 from repro.core.crossfit import TaskGrid, draw_fold_masks, stitch_predictions
-from repro.core.dml import DMLResult, DoubleMLServerless
+from repro.core.dml import DoubleMLServerless
 from repro.core.scores import SPECS, evaluate_score, score_se, solve_theta
+from repro.core.session import DMLResult, DMLSession, estimate
+from repro.core.spec import (
+    DMLData, DMLPlan, InferenceSpec, NuisanceSpec, ResamplingSpec,
+)
 
 __all__ = [
     "TaskGrid", "draw_fold_masks", "stitch_predictions", "DMLResult",
     "DoubleMLServerless", "SPECS", "evaluate_score", "score_se", "solve_theta",
+    "DMLData", "DMLPlan", "NuisanceSpec", "ResamplingSpec", "InferenceSpec",
+    "DMLSession", "estimate",
 ]

@@ -95,6 +95,28 @@ class TaskGrid:
         m, k = divmod(rest, self.n_folds)
         return (TaskKey(m, k, l),)
 
+    def tasks_per_invocation(self, scaling: str) -> int:
+        return self.n_folds if scaling == "n_rep" else 1
+
+    def invocation_task_ids(self, inv: np.ndarray, scaling: str) -> np.ndarray:
+        """Vectorized ``tasks_of_invocation``: (B,) invocation ids ->
+        (B, tasks_per_invocation) flat task ids ((m*K + k)*L + l)."""
+        inv = np.asarray(inv, np.int64)
+        if scaling == "n_rep":
+            m, l = np.divmod(inv, self.n_nuisance)
+            k = np.arange(self.n_folds)
+            return ((m[:, None] * self.n_folds + k[None, :])
+                    * self.n_nuisance + l[:, None])
+        return inv[:, None]
+
+    def task_coords(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(m, k, l) arrays of length n_tasks indexed by flat task id."""
+        t = np.arange(self.n_tasks, dtype=np.int64)
+        l = t % self.n_nuisance
+        k = (t // self.n_nuisance) % self.n_folds
+        m = t // (self.n_nuisance * self.n_folds)
+        return m, k, l
+
 
 def stitch_predictions(fold_masks: np.ndarray, fold_preds: np.ndarray):
     """Combine per-fold test predictions into full-N cross-fitted vectors.

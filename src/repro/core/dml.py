@@ -1,56 +1,50 @@
-"""The DoubleML-Serverless estimator (paper §4-§5) on the JAX runtime.
+"""Deprecated one-shot front-end over the declarative API.
 
-``DoubleMLServerless.fit`` mirrors ``DoubleMLPLRServerless.fit_aws_lambda()``:
-  1. draw M repeated K-fold partitions (reproducible Philox streams),
-  2. build the task grid and dispatch it through the serverless-analogue
-     executor at the chosen scaling level,
-  3. stitch returned *fold predictions* into cross-fitted nuisance vectors,
-  4. evaluate the Neyman-orthogonal score, solve the linear score for
-     theta per repetition, aggregate by median,
-  5. local inference: sandwich SEs + optional multiplier bootstrap.
+``DoubleMLServerless`` predates the three-layer redesign (core/spec.py,
+serverless/backends.py, core/session.py) and is kept as a thin shim: it
+translates its constructor kwargs into a ``DMLPlan`` and delegates to
+``estimate``.  New code should build plans directly:
+
+    plan = DMLPlan.for_model("plr", learner="ridge",
+                             learner_params={"reg": 1.0},
+                             n_folds=5, n_rep=100, seed=42)
+    res = estimate(plan, DMLData.from_dict(data))
+
+See README "Migration" for the full kwarg-to-field table.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+import warnings
+from dataclasses import replace
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aggregation import aggregate_thetas, confint
-from repro.core.bootstrap import boot_confint, multiplier_bootstrap
-from repro.core.crossfit import (
-    TaskGrid, check_partition, draw_fold_masks, stitch_predictions,
-    subset_mask,
-)
-from repro.core.scores import SPECS, evaluate_score, score_se, solve_theta
-from repro.learners import get_learner
-from repro.serverless.executor import PoolConfig, RunReport, ServerlessExecutor
+from repro.core.scores import SPECS
+from repro.core.crossfit import TaskGrid
+from repro.core.session import DMLResult, estimate
+from repro.core.spec import DMLData, DMLPlan
+from repro.serverless.backends import PoolConfig
 from repro.serverless.ledger import TaskLedger
 
-
-@dataclass
-class DMLResult:
-    theta: float
-    se: float
-    ci: tuple
-    thetas: np.ndarray              # per-repetition estimates (M,)
-    ses: np.ndarray
-    report: RunReport
-    boot_ci: Optional[tuple] = None
-
-    def summary(self) -> Dict:
-        out = {"theta": self.theta, "se": self.se, "ci": self.ci}
-        out.update({f"exec_{k}": v for k, v in self.report.summary().items()})
-        return out
+__all__ = ["DMLResult", "DoubleMLServerless"]
 
 
 class DoubleMLServerless:
+    """Deprecated: use ``DMLPlan`` + ``estimate`` / ``DMLSession``."""
+
     def __init__(self, model: str = "plr", n_folds: int = 5, n_rep: int = 100,
                  learner: str = "ridge", learner_params: Optional[dict] = None,
                  scaling: str = "n_rep", pool: Optional[PoolConfig] = None,
-                 score: str = "default", seed: int = 42):
+                 score: str = "default", seed: int = 42,
+                 backend: str = "wave"):
+        warnings.warn(
+            "DoubleMLServerless is deprecated; build a DMLPlan and call "
+            "estimate() or use a DMLSession", DeprecationWarning,
+            stacklevel=2)
+        self.plan = DMLPlan.for_model(
+            model, learner=learner, learner_params=learner_params,
+            n_folds=n_folds, n_rep=n_rep, seed=seed, score=score,
+            scaling=scaling, backend=backend, pool=pool)
+        # legacy introspection attributes
         self.spec = SPECS[model]
         self.model = model
         self.n_folds = n_folds
@@ -60,100 +54,18 @@ class DoubleMLServerless:
         self.seed = seed
         self.learner_name = learner
         self.learner_params = dict(learner_params or {})
-        self.pool = pool or PoolConfig(scaling=scaling)
-        self.pool.scaling = scaling
+        # legacy introspection saw pool.scaling == scaling; give that view
+        # on a COPY so the caller's (frozen) config is never touched
+        self.pool = replace(pool, scaling=scaling) if pool is not None \
+            else PoolConfig(scaling=scaling)
         self.grid = TaskGrid(n_rep, n_folds, self.spec.n_nuisance)
 
-    # ------------------------------------------------------------------
-    def _build_tasks(self, data):
-        """targets (L, N) and train weights (M, K, L, N)."""
-        n = data["x"].shape[0]
-        masks = draw_fold_masks(n, self.n_folds, self.n_rep, self.seed)
-        assert check_partition(masks)
-        targets = np.stack(
-            [np.asarray(data[t]) for _, t, _ in self.spec.nuisances])
-        train_w = np.empty((self.n_rep, self.n_folds,
-                            self.spec.n_nuisance, n), np.float32)
-        for l, (_, _, subset) in enumerate(self.spec.nuisances):
-            sub = subset_mask(subset, data)
-            w = (~masks).astype(np.float32)          # train on I^c_{m,k}
-            if sub is not None:
-                w = w * sub.astype(np.float32)[None, None, :]
-            train_w[:, :, l, :] = w
-        return masks, targets, train_w
-
-    def _learner_key(self, nuisance_name: str):
-        """(name, params) for a nuisance — propensities are probabilities."""
-        params = dict(self.learner_params)
-        if nuisance_name in ("ml_m",) and self.model in ("irm", "iivm"):
-            if self.learner_name in ("ols", "ridge", "lasso", "kernel_ridge"):
-                return "logistic", {"reg": params.get("reg", 1.0)}
-            params["classify"] = True
-        return self.learner_name, params
-
-    def _learner_for(self, nuisance_name: str):
-        name, params = self._learner_key(nuisance_name)
-        return get_learner(name, params)
-
-    # ------------------------------------------------------------------
     def fit(self, data, ledger: Optional[TaskLedger] = None,
             n_boot: int = 0) -> DMLResult:
-        x = jnp.asarray(data["x"])
-        masks, targets, train_w = self._build_tasks(data)
-
-        # one learner callable for the whole grid: nuisance-specific
-        # behaviour (classification) is handled by dispatching per nuisance
-        # inside a wrapper so the executor stays nuisance-agnostic.
-        keys = [self._learner_key(nm) for nm, _, _ in self.spec.nuisances]
-        learners = [self._learner_for(nm) for nm, _, _ in self.spec.nuisances]
-        uniform = all(k == keys[0] for k in keys)
-
-        if uniform:
-            learner_fn = learners[0]
-            executor = ServerlessExecutor(learner_fn, self.grid, self.pool)
-            preds, ledger, report = executor.run(
-                x, jnp.asarray(targets), train_w,
-                jax.random.key(self.seed), ledger=ledger)
-        else:
-            # mixed regression/classification grid: run one sub-grid per
-            # nuisance (same wave machinery, ledgers concatenated)
-            report = RunReport()
-            preds = np.zeros((self.n_rep, self.n_folds,
-                              self.spec.n_nuisance, x.shape[0]), np.float32)
-            for l, fn in enumerate(learners):
-                sub_grid = TaskGrid(self.n_rep, self.n_folds, 1)
-                executor = ServerlessExecutor(fn, sub_grid, self.pool)
-                p, _, rep = executor.run(
-                    x, jnp.asarray(targets[l: l + 1]),
-                    train_w[:, :, l: l + 1],
-                    jax.random.key(self.seed + l), report=report)
-                preds[:, :, l] = p[:, :, 0]
-                report = rep
-
-        # ---- stitch to cross-fitted predictions (M, L, N) -----------------
-        fitted = {}
-        for l, (nm, _, _) in enumerate(self.spec.nuisances):
-            fitted[nm] = stitch_predictions(masks, preds[:, :, l])
-
-        # ---- score evaluation & aggregation -------------------------------
-        dml_data = {k: jnp.asarray(np.asarray(data[k]))[None]
-                    for k in ("y", "d", "z") if k in data}
-        pred_tree = {k: jnp.asarray(v) for k, v in fitted.items()}
-        psi_a, psi_b = evaluate_score(self.model, dml_data, pred_tree,
-                                      self.score)
-        thetas = solve_theta(psi_a, psi_b)                  # (M,)
-        ses = score_se(psi_a, psi_b, thetas)
-        theta, se = aggregate_thetas(thetas, ses)
-        ci = confint(theta, se)
-
-        boot_ci = None
+        plan = self.plan
         if n_boot:
-            bt, se1 = multiplier_bootstrap(
-                psi_a[0], psi_b[0], float(thetas[0]),
-                jax.random.key(self.seed + 99), n_boot=n_boot)
-            boot_ci = boot_confint(float(thetas[0]), se1, bt)
-
-        self._psi = (np.asarray(psi_a), np.asarray(psi_b))
-        return DMLResult(theta=theta, se=se, ci=ci,
-                         thetas=np.asarray(thetas), ses=np.asarray(ses),
-                         report=report, boot_ci=boot_ci)
+            plan = plan.replace(
+                inference=replace(plan.inference, n_boot=n_boot))
+        res = estimate(plan, DMLData.from_dict(data), ledger=ledger)
+        self._psi = res.psi
+        return res

@@ -1,0 +1,233 @@
+"""The serving layer: plans + data in, per-request results out.
+
+``DMLSession`` is the multi-request front door: submit any number of
+(``DMLPlan``, ``DMLData``) pairs, then ``run()`` compiles them all into
+``WorkRequest``s and drains them through ONE warm backend.  On the wave
+backend the requests' task grids fuse into shared dispatch waves — many
+concurrent estimations amortize the same capacity cycles (the
+batch-processing throughput lever); on the sharded/inline backends they
+reuse the same warm compiled programs.
+
+``estimate(plan, data)`` is the one-shot convenience for a single request.
+
+Determinism: a request's result depends only on its own (plan, data) —
+fold draws, learner seeds, and score evaluation are keyed off
+``plan.resampling.seed`` — so a session-batched request returns exactly
+the theta it would get running alone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate_thetas, confint
+from repro.core.bootstrap import boot_confint, multiplier_bootstrap
+from repro.core.crossfit import (
+    TaskGrid, check_partition, draw_fold_masks, stitch_predictions,
+    subset_mask,
+)
+from repro.core.scores import evaluate_score, score_se, solve_theta
+from repro.core.spec import DMLData, DMLPlan
+from repro.learners import get_learner
+from repro.serverless.backends import (
+    BackendRunInfo, ExecutionBackend, PoolConfig, RunReport, Segment,
+    WorkRequest, make_backend,
+)
+from repro.serverless.ledger import TaskLedger
+
+
+@dataclass
+class DMLResult:
+    theta: float
+    se: float
+    ci: tuple
+    thetas: np.ndarray              # per-repetition estimates (M,)
+    ses: np.ndarray
+    report: RunReport
+    boot_ci: Optional[tuple] = None
+    request_id: Optional[int] = None
+
+    def summary(self) -> Dict:
+        out = {"theta": self.theta, "se": self.se, "ci": self.ci}
+        out.update({f"exec_{k}": v for k, v in self.report.summary().items()})
+        return out
+
+
+# ---------------------------------------------------------------------------
+# plan + data -> WorkRequest
+# ---------------------------------------------------------------------------
+def compile_request(plan: DMLPlan, data: DMLData,
+                    ledger: Optional[TaskLedger] = None,
+                    tag: object = None) -> WorkRequest:
+    """Lower a declarative request to executable arrays.
+
+    Builds the fold masks, per-nuisance targets and training weights, and
+    groups nuisances that share a (learner, params) pair into one
+    ``Segment`` so uniform grids run as a single fused batch while mixed
+    grids (IRM/IIVM propensities) get one fused batch per learner.
+    """
+    data = DMLData.from_dict(data)
+    rs = plan.resampling
+    n = data.n_obs
+    grid = TaskGrid(rs.n_rep, rs.n_folds, plan.n_nuisance)
+    masks = draw_fold_masks(n, rs.n_folds, rs.n_rep, rs.seed)
+    assert check_partition(masks)
+
+    targets = np.stack([data.role(ns.target) for ns in plan.nuisances])
+    train_w = np.empty((rs.n_rep, rs.n_folds, plan.n_nuisance, n), np.float32)
+    for l, ns in enumerate(plan.nuisances):
+        sub = subset_mask(ns.subset, data)
+        w = (~masks).astype(np.float32)          # train on I^c_{m,k}
+        if sub is not None:
+            w = w * sub.astype(np.float32)[None, None, :]
+        train_w[:, :, l, :] = w
+
+    # one segment per distinct (learner, params): uniform grids fuse into a
+    # single batch, mixed grids get one fused batch per learner.  Each
+    # segment draws its own PRNG stream, keyed off the plan seed and the
+    # first nuisance it owns.
+    groups: List[List[int]] = []
+    seen: Dict = {}
+    for l, ns in enumerate(plan.nuisances):
+        gi = seen.get(ns.learner_key)
+        if gi is None:
+            seen[ns.learner_key] = len(groups)
+            groups.append([l])
+        else:
+            groups[gi].append(l)
+    segments = [Segment(learner_fn=get_learner(plan.nuisances[g[0]].learner,
+                                               plan.nuisances[g[0]].param_dict),
+                        l_ids=tuple(g),
+                        key=jax.random.key(rs.seed + g[0]),
+                        cache_key=plan.nuisances[g[0]].learner_key)
+                for g in groups]
+
+    req = WorkRequest.create(grid, plan.scaling, data.x, targets, train_w,
+                             segments, ledger=ledger, tag=tag)
+    req.fold_masks = masks                      # needed for stitching
+    return req
+
+
+def assemble_result(plan: DMLPlan, data: DMLData, req: WorkRequest,
+                    request_id: Optional[int] = None) -> DMLResult:
+    """Stitch fold predictions, evaluate the score, run local inference."""
+    data = DMLData.from_dict(data)
+    preds = req.gathered_preds()                 # (M, K, L, N)
+    masks = req.fold_masks
+
+    fitted = {ns.name: stitch_predictions(masks, preds[:, :, l])
+              for l, ns in enumerate(plan.nuisances)}
+    dml_data = {k: jnp.asarray(v)[None] for k, v in
+                data.score_arrays().items()}
+    pred_tree = {k: jnp.asarray(v) for k, v in fitted.items()}
+    psi_a, psi_b = evaluate_score(plan.model, dml_data, pred_tree, plan.score)
+    thetas = solve_theta(psi_a, psi_b)                  # (M,)
+    ses = score_se(psi_a, psi_b, thetas)
+    theta, se = aggregate_thetas(thetas, ses, plan.inference.aggregation)
+    ci = confint(theta, se, plan.inference.level)
+
+    boot_ci = None
+    if plan.inference.n_boot:
+        bt, se1 = multiplier_bootstrap(
+            psi_a[0], psi_b[0], float(thetas[0]),
+            jax.random.key(plan.resampling.seed + 99),
+            n_boot=plan.inference.n_boot)
+        boot_ci = boot_confint(float(thetas[0]), se1, bt)
+
+    res = DMLResult(theta=theta, se=se, ci=ci, thetas=np.asarray(thetas),
+                    ses=np.asarray(ses), report=req.report, boot_ci=boot_ci,
+                    request_id=request_id)
+    res.psi = (np.asarray(psi_a), np.asarray(psi_b))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+@dataclass
+class _Pending:
+    request_id: int
+    plan: DMLPlan
+    data: DMLData
+    ledger: Optional[TaskLedger]
+
+
+class DMLSession:
+    """Batches many estimation requests onto one warm execution backend.
+
+    >>> sess = DMLSession(backend="wave", pool=PoolConfig(n_workers=8))
+    >>> a = sess.submit(plan_a, data_a)
+    >>> b = sess.submit(plan_b, data_b)
+    >>> results = sess.run()            # shared waves; [DMLResult, DMLResult]
+    >>> sess.result(a).theta
+
+    The backend persists across ``run()`` calls (warm pools / cached SPMD
+    programs).  ``last_run_info`` exposes cross-request wave accounting —
+    ``last_run_info.shared_waves > 0`` is the fusion at work.
+    """
+
+    def __init__(self, backend: Union[str, ExecutionBackend] = "wave",
+                 pool: Optional[PoolConfig] = None):
+        self.backend = make_backend(backend, pool)
+        self._queue: List[_Pending] = []
+        self._results: Dict[int, DMLResult] = {}
+        self._next_id = 0
+        self.last_run_info: Optional[BackendRunInfo] = None
+
+    # ------------------------------------------------------------------
+    def submit(self, plan: DMLPlan, data, *,
+               ledger: Optional[TaskLedger] = None) -> int:
+        """Queue one estimation request; returns its request id."""
+        data = DMLData.from_dict(data)
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(rid, plan, data, ledger))
+        return rid
+
+    def run(self) -> List[DMLResult]:
+        """Execute every queued request in shared waves; returns results
+        in submission order (also retrievable via ``result(id)``).
+
+        If the backend aborts mid-drain (e.g. retry budget exhausted),
+        the requests stay queued with their partially-completed ledgers,
+        so a later ``run()`` resumes instead of restarting.
+        """
+        if not self._queue:
+            return []
+        pending = list(self._queue)
+        reqs = [compile_request(p.plan, p.data, ledger=p.ledger,
+                                tag=p.request_id) for p in pending]
+        for p, req in zip(pending, reqs):
+            p.ledger = req.ledger           # keep completed rows on failure
+        self.last_run_info = self.backend.run_requests(reqs)
+        self._queue = self._queue[len(pending):]
+        out = []
+        for p, req in zip(pending, reqs):
+            res = assemble_result(p.plan, p.data, req,
+                                  request_id=p.request_id)
+            self._results[p.request_id] = res
+            out.append(res)
+        return out
+
+    def result(self, request_id: int) -> DMLResult:
+        return self._results[request_id]
+
+    def estimate(self, plan: DMLPlan, data, *,
+                 ledger: Optional[TaskLedger] = None) -> DMLResult:
+        """Submit + run a single request on this session's backend."""
+        rid = self.submit(plan, data, ledger=ledger)
+        self.run()
+        return self._results[rid]
+
+
+def estimate(plan: DMLPlan, data, *,
+             ledger: Optional[TaskLedger] = None,
+             backend: Union[str, ExecutionBackend, None] = None) -> DMLResult:
+    """One-shot estimation: plan + data -> result, backend from the plan."""
+    b = backend if backend is not None else plan.backend
+    sess = DMLSession(backend=b, pool=plan.pool)
+    return sess.estimate(plan, data, ledger=ledger)

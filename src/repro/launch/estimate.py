@@ -3,6 +3,8 @@
   PYTHONPATH=src python -m repro.launch.estimate                 # bonus PLR
   PYTHONPATH=src python -m repro.launch.estimate --scaling 'n_folds*n_rep' \
       --memory 512 --workers 16
+  PYTHONPATH=src python -m repro.launch.estimate --backend sharded  # SPMD
+      execution of the same plan (ExecutionBackend selection)
   PYTHONPATH=src python -m repro.launch.estimate --dryrun        # production
       mesh lowering + roofline of the fused cross-fit step (paper-technique
       dry-run cell)
@@ -19,26 +21,27 @@ import json
 
 
 def run_fit(args):
-    import jax
-    from repro.core import DoubleMLServerless
+    from repro.core import DMLData, DMLPlan, estimate
     from repro.data import make_bonus_data, make_plr_data
     from repro.serverless import PoolConfig
 
-    data = make_bonus_data() if args.data == "bonus" else make_plr_data(
+    raw = make_bonus_data() if args.data == "bonus" else make_plr_data(
         n_obs=args.n_obs, theta=0.5, seed=args.seed)
+    data = DMLData.from_dict(raw)
     pool = PoolConfig(n_workers=args.workers, memory_mb=args.memory,
-                      scaling=args.scaling, failure_rate=args.failure_rate,
+                      failure_rate=args.failure_rate,
                       straggler_rate=args.straggler_rate,
                       checkpoint_path=args.ledger,
                       simulate=args.simulate, base_work_s=0.2)
-    est = DoubleMLServerless(
-        model=args.model, n_folds=args.folds, n_rep=args.reps,
+    plan = DMLPlan.for_model(
+        args.model, n_folds=args.folds, n_rep=args.reps,
         learner=args.learner, learner_params={"reg": args.reg},
-        scaling=args.scaling, pool=pool, seed=args.seed)
-    res = est.fit(data, n_boot=args.boot)
+        scaling=args.scaling, backend=args.backend, pool=pool,
+        seed=args.seed, n_boot=args.boot)
+    res = estimate(plan, data)
     print(json.dumps(res.summary(), indent=1, default=float))
-    if "theta0" in data:
-        print(f"true theta: {data['theta0']}")
+    if data.theta0 is not None:
+        print(f"true theta: {data.theta0}")
 
 
 def run_dryrun(args):
@@ -132,6 +135,8 @@ def main():
     ap.add_argument("--reps", type=int, default=100)
     ap.add_argument("--scaling", default="n_rep",
                     choices=["n_rep", "n_folds*n_rep"])
+    ap.add_argument("--backend", default="wave",
+                    choices=["wave", "sharded", "inline"])
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--memory", type=int, default=1024)
     ap.add_argument("--failure-rate", type=float, default=0.0)

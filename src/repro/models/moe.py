@@ -30,6 +30,8 @@ from repro.models.param import PDecl
 from repro.models.layers import act_fn, mlp_decls, mlp_forward
 from repro.sharding.axes import LogicalRules, logical_constraint
 
+from repro.sharding.compat import shard_map_compat as _shard_map
+
 F32 = jnp.float32
 
 
@@ -164,8 +166,8 @@ def _moe_a2a(p, cfg: ArchConfig, x, e_pad: int, mesh, ep_axis: str,
         P(ep_axis, None, None),           # wo
     )
     out_specs = (P(dp_axes, ep_axis, None), P())
-    fn = jax.shard_map(block, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map(block, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs)
     return fn(x, p["router"], p["wi"], p["wo"])
 
 
@@ -202,8 +204,8 @@ def _moe_dense_ep(p, cfg: ArchConfig, x, e_pad: int, mesh, ep_axis: str,
     in_specs = (P(dp_axes, None, None), P(None, None),
                 P(ep_axis, None, None, None), P(ep_axis, None, None))
     out_specs = (P(dp_axes, None, None), P())
-    fn = jax.shard_map(block, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map(block, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs)
     return fn(x, p["router"], p["wi"], p["wo"])
 
 

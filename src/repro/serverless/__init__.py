@@ -1,8 +1,15 @@
+from repro.serverless.backends import (
+    BACKEND_NAMES, BACKENDS, BackendRunInfo, ExecutionBackend, InlineBackend,
+    PoolConfig, RunReport, Segment, ShardedBackend, WaveBackend, WorkRequest,
+    make_backend,
+)
 from repro.serverless.cost import Bill, BillingRecord, speedup_of, USD_PER_GB_S
-from repro.serverless.executor import PoolConfig, RunReport, ServerlessExecutor
+from repro.serverless.executor import ServerlessExecutor
 from repro.serverless.ledger import TaskLedger
 
 __all__ = [
     "Bill", "BillingRecord", "speedup_of", "USD_PER_GB_S", "PoolConfig",
-    "RunReport", "ServerlessExecutor", "TaskLedger",
+    "RunReport", "ServerlessExecutor", "TaskLedger", "ExecutionBackend",
+    "BackendRunInfo", "InlineBackend", "WaveBackend", "ShardedBackend",
+    "WorkRequest", "Segment", "BACKENDS", "BACKEND_NAMES", "make_backend",
 ]

@@ -1,0 +1,547 @@
+"""The pluggable execution layer: one task grid, three substrates.
+
+A ``WorkRequest`` is the compiled form of one estimation request: the task
+grid, the fused arrays (targets, training weights), one or more
+``Segment``s (contiguous learner groups — mixed-learner grids such as IRM
+carry one segment per distinct learner), and a durable ``TaskLedger``.
+
+An ``ExecutionBackend`` consumes a *batch* of WorkRequests and fills their
+ledgers.  All backends emit the same ``RunReport``/``TaskLedger``
+artifacts, so fault tolerance, billing, and resume behave identically at
+the API layer regardless of substrate:
+
+  WaveBackend     the serverless-analogue wave scheduler (paper §4):
+                  capacity-limited waves, fault injection + retries,
+                  straggler speculation, elastic worker schedules, Lambda
+                  billing.  Waves are SHARED across requests — many
+                  concurrent estimations ride the same dispatch cycles
+                  (the batch-processing cost lever).
+  ShardedBackend  one SPMD program per segment: the task grid laid over a
+                  jax Mesh via shard_map (launch/mesh.py), tasks sharded
+                  over the "data" axis, x replicated.
+  InlineBackend   single fused vmap call per segment — the pure reference
+                  implementation tests compare against.
+
+Determinism contract: a task's prediction depends only on (x, target,
+weights, learner) for deterministic learners, so every backend — and every
+wave composition, fault pattern, or shard count — produces identical
+predictions.  Key-consuming learners (mlp) are reproducible per backend
+but not bit-identical across backends.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import (
+    TYPE_CHECKING, Callable, Dict, List, Optional, Protocol, Sequence, Tuple,
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serverless.cost import Bill, BillingRecord, speedup_of
+from repro.serverless.ledger import DONE, TaskLedger
+
+if TYPE_CHECKING:       # avoid the core <-> serverless import cycle
+    from repro.core.crossfit import TaskGrid
+
+
+# ---------------------------------------------------------------------------
+# substrate configuration (immutable — plans/sessions share PoolConfigs)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PoolConfig:
+    """The knobs the paper's user controls (§4.2, §5.2).
+
+    Frozen: reusing one PoolConfig across estimators/sessions must never
+    let one caller's settings leak into another's (use
+    ``dataclasses.replace`` to derive variants).
+    """
+    n_workers: int = 8                  # concurrent lambda-analogue workers
+    memory_mb: int = 1024               # Lambda memory knob
+    scaling: str = "n_rep"              # paper's scaling parameter
+    timeout_s: float = 900.0            # Lambda 15-min cap
+    max_retries: int = 3
+    failure_rate: float = 0.0           # fault injection (per invocation)
+    straggler_rate: float = 0.0         # P(invocation is a straggler)
+    straggler_slowdown: float = 4.0
+    speculative_after: float = 2.0      # duplicate if > x median duration
+    simulate: bool = False              # model durations via the speed curve
+    base_work_s: float = 0.0            # simulated seconds per task @1 vCPU
+    dispatch_overhead_s: float = 0.005  # per-wave dispatch latency
+    seed: int = 0
+    checkpoint_path: Optional[str] = None
+    # elasticity: optional schedule of worker counts per wave (grow/shrink)
+    worker_schedule: Optional[Sequence[int]] = None
+
+    def lanes_per_worker(self) -> int:
+        """Worker 'memory' buys lane width (DESIGN.md §2 mapping)."""
+        return max(1, self.memory_mb // 256)
+
+
+@dataclass
+class RunReport:
+    fit_time_s: float = 0.0
+    response_time_s: float = 0.0
+    waves: int = 0
+    bill: Bill = field(default_factory=Bill)
+    wave_sizes: List[int] = field(default_factory=list)
+    failures: int = 0
+    stragglers: int = 0
+
+    def summary(self) -> Dict:
+        out = {"fit_time_s": self.fit_time_s,
+               "response_time_s": self.response_time_s,
+               "waves": self.waves, "failures": self.failures,
+               "stragglers": self.stragglers}
+        out.update(self.bill.summary())
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the unit of execution
+# ---------------------------------------------------------------------------
+@dataclass
+class Segment:
+    """A learner-uniform slice of a request's grid.
+
+    ``l_ids`` are the nuisance indices this segment owns; its invocations
+    are exactly those with ``inv % L in l_ids`` (both scaling levels place
+    l in the low digit of the invocation id).  ``cache_key`` is a hashable
+    identity of (learner, params) — requests built from equal specs share
+    warm compiled programs; when absent, backends fall back to object
+    identity.
+    """
+    learner_fn: Callable
+    l_ids: Tuple[int, ...]
+    key: jax.Array
+    cache_key: Optional[Tuple] = None
+
+
+@dataclass
+class WorkRequest:
+    """One estimation request, compiled to arrays + a durable ledger."""
+    grid: TaskGrid
+    scaling: str                        # invocation granularity (§4.2)
+    x: jnp.ndarray                      # (N, P)
+    targets: np.ndarray                 # (L, N)
+    train_w: np.ndarray                 # (M, K, L, N)
+    segments: List[Segment]
+    ledger: TaskLedger
+    report: RunReport
+    tag: object = None                  # caller's request id
+    fold_masks: Optional[np.ndarray] = None   # (M,K,N), set by the compiler
+
+    @classmethod
+    def create(cls, grid: TaskGrid, scaling: str, x, targets, train_w,
+               segments: List[Segment],
+               ledger: Optional[TaskLedger] = None,
+               report: Optional[RunReport] = None,
+               tag: object = None) -> "WorkRequest":
+        n_obs = int(np.asarray(targets).shape[-1])
+        n_inv = grid.n_invocations(scaling)
+        tpi = grid.tasks_per_invocation(scaling)
+        if ledger is None:
+            ledger = TaskLedger.create(n_inv, n_obs, tpi)
+        elif (ledger.n_invocations, ledger.tasks_per_invocation,
+              ledger.n_obs) != (n_inv, tpi, n_obs):
+            raise ValueError(
+                f"ledger shape ({ledger.n_invocations}, "
+                f"{ledger.tasks_per_invocation}, {ledger.n_obs}) does not "
+                f"match grid/scaling/data ({n_inv}, {tpi}, {n_obs}) — was it "
+                "saved under a different plan?")
+        return cls(grid=grid, scaling=scaling, x=jnp.asarray(x),
+                   targets=np.asarray(targets), train_w=np.asarray(train_w),
+                   segments=segments, ledger=ledger,
+                   report=report or RunReport(), tag=tag)
+
+    # ---- derived index maps (cached) ------------------------------------
+    def _index_maps(self):
+        if not hasattr(self, "_maps"):
+            g = self.grid
+            task_mat = g.invocation_task_ids(
+                np.arange(g.n_invocations(self.scaling)), self.scaling)
+            tm, tk, tl = g.task_coords()
+            seg_of_l = np.zeros(g.n_nuisance, np.int64)
+            for si, seg in enumerate(self.segments):
+                for l in seg.l_ids:
+                    seg_of_l[l] = si
+            self._maps = (task_mat, tm, tk, tl, seg_of_l)
+        return self._maps
+
+    def segment_of_inv(self, inv: np.ndarray) -> np.ndarray:
+        _, _, _, _, seg_of_l = self._index_maps()
+        return seg_of_l[np.asarray(inv) % self.grid.n_nuisance]
+
+    def wave_arrays(self, flat_tasks: np.ndarray):
+        """Gather (targets, weights) rows for flat task ids."""
+        _, tm, tk, tl = self._index_maps()[:4]
+        y = self.targets[tl[flat_tasks]]
+        w = self.train_w[tm[flat_tasks], tk[flat_tasks], tl[flat_tasks]]
+        return y, w
+
+    def gathered_preds(self) -> np.ndarray:
+        """Scatter ledger rows back to the (M, K, L, N) tensor."""
+        g = self.grid
+        task_mat, tm, tk, tl, _ = self._index_maps()
+        flat = task_mat.reshape(-1)
+        n_obs = self.ledger.n_obs
+        out = np.zeros((g.n_rep, g.n_folds, g.n_nuisance, n_obs), np.float32)
+        out[tm[flat], tk[flat], tl[flat]] = \
+            self.ledger.preds.reshape(-1, n_obs)
+        return out
+
+
+class ExecutionBackend(Protocol):
+    """Anything that can drain a batch of WorkRequests.
+
+    Contract: after ``run_requests`` returns, every request's ledger is
+    complete (or an exception was raised), its report reflects the work
+    performed in this call (appending to any prior state), and
+    ``req.gathered_preds()`` yields the (M, K, L, N) prediction tensor.
+    Pre-completed ledger rows (resume) must not be re-executed.
+    """
+    name: str
+
+    def run_requests(self, requests: Sequence[WorkRequest]) -> "BackendRunInfo":
+        ...
+
+
+@dataclass
+class BackendRunInfo:
+    """Cross-request accounting for one backend drain (session telemetry)."""
+    backend: str
+    waves: int = 0
+    wave_members: List[List[object]] = field(default_factory=list)
+
+    @property
+    def shared_waves(self) -> int:
+        """Waves that carried invocations from 2+ requests — the fusion
+        the multi-request session exists to create.  (Members lists are
+        deduplicated at construction.)"""
+        return sum(1 for m in self.wave_members if len(m) > 1)
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by backends
+# ---------------------------------------------------------------------------
+def _fill_rows(req: WorkRequest, inv_ids: np.ndarray, wall: float,
+               pool: PoolConfig):
+    """Record successful rows with measured billing (non-wave backends)."""
+    per = wall / max(len(inv_ids), 1)
+    for inv in inv_ids:
+        req.report.bill.add(BillingRecord(
+            invocation=int(inv), duration_s=per, memory_mb=pool.memory_mb))
+
+
+def _run_segment_pending(req: WorkRequest, call, pool: PoolConfig):
+    """Drive every pending invocation of ``req`` through ``call`` — one
+    fused evaluation per segment.  ``call(req, seg, y, w, key) ->
+    (B*tpi, N)``.  Shared by Inline and Sharded backends (they differ only
+    in how the fused call executes)."""
+    pending = req.ledger.pending()
+    if not len(pending):
+        return
+    task_mat = req._index_maps()[0]
+    tpi = req.grid.tasks_per_invocation(req.scaling)
+    n_obs = req.ledger.n_obs
+    seg_idx = req.segment_of_inv(pending)
+    t_all = time.perf_counter()
+    for si, seg in enumerate(req.segments):
+        inv_ids = pending[seg_idx == si]
+        if not len(inv_ids):
+            continue
+        flat = task_mat[inv_ids].reshape(-1)
+        y, w = req.wave_arrays(flat)
+        seg.key, sub = jax.random.split(seg.key)
+        t0 = time.perf_counter()
+        preds = call(req, seg, jnp.asarray(y), jnp.asarray(w), sub)
+        preds = np.asarray(jax.block_until_ready(preds), np.float32)
+        wall = time.perf_counter() - t0
+        preds = preds.reshape(len(inv_ids), tpi, n_obs)
+        for i, inv in enumerate(inv_ids):
+            req.ledger.record_success(int(inv), preds[i])
+        _fill_rows(req, inv_ids, wall, pool)
+        req.report.waves += 1
+        req.report.wave_sizes.append(len(inv_ids))
+    total = time.perf_counter() - t_all
+    req.report.fit_time_s += total
+    req.report.response_time_s += total
+    if pool.checkpoint_path:
+        req.ledger.save(pool.checkpoint_path)
+
+
+# ---------------------------------------------------------------------------
+# InlineBackend — pure fused-vmap reference
+# ---------------------------------------------------------------------------
+class InlineBackend:
+    """The whole pending grid in one fused call per segment.  No faults,
+    no waves, no capacity limit: the oracle the other backends must
+    agree with."""
+    name = "inline"
+
+    def __init__(self, pool: Optional[PoolConfig] = None):
+        self.pool = pool or PoolConfig()
+
+    def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
+        info = BackendRunInfo(backend=self.name)
+        for req in requests:
+            _run_segment_pending(
+                req,
+                lambda r, seg, y, w, key: seg.learner_fn(r.x, y, w, key),
+                self.pool)
+            info.waves += req.report.waves
+        return info
+
+
+# ---------------------------------------------------------------------------
+# ShardedBackend — SPMD over a device mesh
+# ---------------------------------------------------------------------------
+class ShardedBackend:
+    """The task grid as one SPMD program: tasks sharded over the mesh's
+    "data" axis via shard_map, x replicated on every device.  Reuses
+    launch/mesh.py meshes; stays warm across requests (jitted programs are
+    cached per learner)."""
+    name = "sharded"
+
+    def __init__(self, pool: Optional[PoolConfig] = None, mesh=None):
+        self.pool = pool or PoolConfig()
+        self._mesh = mesh
+        self._programs: Dict[object, Callable] = {}
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            self._mesh = make_host_mesh()
+        return self._mesh
+
+    def _n_shards(self) -> int:
+        return int(self.mesh.shape["data"])
+
+    def _program(self, seg: Segment) -> Callable:
+        key = seg.cache_key if seg.cache_key is not None \
+            else id(seg.learner_fn)
+        prog = self._programs.get(key)
+        if prog is None:
+            from jax.sharding import PartitionSpec as P
+            from repro.sharding.compat import shard_map_compat
+            fn = seg.learner_fn
+
+            def shard_fn(x, y, w, key_data):
+                return fn(x, y, w, jax.random.wrap_key_data(key_data))
+
+            prog = jax.jit(shard_map_compat(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(), P("data"), P("data"), P()),
+                out_specs=P("data")))
+            self._programs[key] = prog
+        return prog
+
+    def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
+        info = BackendRunInfo(backend=self.name)
+        n_shards = self._n_shards()
+
+        def call(req, seg, y, w, key):
+            # pad the task axis to the shard count (zero-weight rows are
+            # inert: the learners reduce them to the regularizer solution)
+            t = y.shape[0]
+            t_pad = ((t + n_shards - 1) // n_shards) * n_shards
+            if t_pad != t:
+                y = jnp.pad(y, ((0, t_pad - t), (0, 0)))
+                w = jnp.pad(w, ((0, t_pad - t), (0, 0)))
+            out = self._program(seg)(req.x, y, w, jax.random.key_data(key))
+            return out[:t]
+
+        for req in requests:
+            _run_segment_pending(req, call, self.pool)
+            info.waves += req.report.waves
+        return info
+
+
+# ---------------------------------------------------------------------------
+# WaveBackend — the serverless-analogue scheduler, multi-request
+# ---------------------------------------------------------------------------
+@dataclass
+class _Entry:
+    """One dispatched lane: (request, invocation, speculative?)."""
+    req_idx: int
+    inv: int
+    speculative: bool = False
+
+
+class WaveBackend:
+    """The paper's wave scheduler (§4) generalized to many requests.
+
+    One *invocation* = the paper's lambda call; each wave dispatches up to
+    ``n_workers * lanes_per_worker`` invocations drawn round-robin from
+    every request's pending set, so concurrent estimations share dispatch
+    cycles (fused waves).  Per wave the scheduler:
+
+      * injects faults (per-request Philox streams) and re-queues failures
+        (Lambda retry, first-attempt only so retries converge),
+      * duplicates straggler suspects when capacity is spare (speculative
+        execution, first-result-wins),
+      * re-reads the worker count (elastic shrink/grow),
+      * checkpoints every participating ledger.
+
+    Billing: measured (wall time of a request's fused call divided over its
+    lanes) or modeled via the Lambda memory/vCPU curve (simulate=True).
+    """
+    name = "wave"
+
+    def __init__(self, pool: Optional[PoolConfig] = None):
+        self.pool = pool or PoolConfig()
+
+    def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
+        pool = self.pool
+        info = BackendRunInfo(backend=self.name)
+        # per-request fault streams: request 0 reproduces the single-request
+        # executor draw-for-draw
+        rngs = [np.random.Generator(np.random.Philox(key=pool.seed + i))
+                for i in range(len(requests))]
+        t_start = time.perf_counter()
+        wave = 0
+        while True:
+            pendings = [req.ledger.pending() for req in requests]
+            if all(len(p) == 0 for p in pendings):
+                break
+            n_workers = pool.n_workers
+            if pool.worker_schedule is not None:
+                n_workers = pool.worker_schedule[
+                    min(wave, len(pool.worker_schedule) - 1)]
+            capacity = max(1, n_workers * pool.lanes_per_worker())
+
+            # ---- fill the wave: round-robin across requests -------------
+            batch: List[_Entry] = []
+            cursors = [0] * len(requests)
+            while len(batch) < capacity:
+                progressed = False
+                for ri, p in enumerate(pendings):
+                    if cursors[ri] < len(p) and len(batch) < capacity:
+                        batch.append(_Entry(ri, int(p[cursors[ri]])))
+                        cursors[ri] += 1
+                        progressed = True
+                if not progressed:
+                    break
+            spare = capacity - len(batch)
+            dispatch = list(batch)
+            if spare > 0 and pool.straggler_rate > 0 and batch:
+                dispatch += [_Entry(e.req_idx, e.inv, True)
+                             for e in batch[:min(spare, len(batch))]]
+
+            # ---- execute: one fused call per (request, segment) ---------
+            members: List[object] = []
+            for e in dispatch:
+                tag = requests[e.req_idx].tag
+                tag = e.req_idx if tag is None else tag
+                if tag not in members:
+                    members.append(tag)
+            info.wave_members.append(members)
+            for ri, req in enumerate(requests):
+                entries = [e for e in dispatch if e.req_idx == ri]
+                if not entries:
+                    continue
+                self._run_request_wave(req, entries, rngs[ri], pool, wave)
+            wave += 1
+            info.waves = wave
+            if pool.checkpoint_path:
+                for i, req in enumerate(requests):
+                    path = pool.checkpoint_path if len(requests) == 1 \
+                        else f"{pool.checkpoint_path}.r{i}"
+                    req.ledger.save(path)
+
+        total_wall = time.perf_counter() - t_start
+        for req in requests:
+            if not pool.simulate:
+                # accumulate (like the other backends) so an abort-and-
+                # resume report covers every drain that fed its bill
+                req.report.response_time_s += total_wall
+                req.report.fit_time_s += total_wall
+            else:
+                req.report.fit_time_s = (req.report.response_time_s
+                                         + pool.dispatch_overhead_s)
+        return info
+
+    # ------------------------------------------------------------------
+    def _run_request_wave(self, req: WorkRequest, entries: List[_Entry],
+                          rng, pool: PoolConfig, wave: int):
+        """Dispatch one request's share of a wave and book the results."""
+        task_mat = req._index_maps()[0]
+        tpi = req.grid.tasks_per_invocation(req.scaling)
+        n_obs = req.ledger.n_obs
+        ledger, report = req.ledger, req.report
+        inv_arr = np.array([e.inv for e in entries], np.int64)
+        seg_idx = req.segment_of_inv(inv_arr)
+
+        preds_rows = np.empty((len(entries), tpi, n_obs), np.float32)
+        wall = 0.0
+        for si, seg in enumerate(req.segments):
+            sel = np.where(seg_idx == si)[0]
+            if not len(sel):
+                continue
+            flat = task_mat[inv_arr[sel]].reshape(-1)
+            y, w = req.wave_arrays(flat)
+            seg.key, sub = jax.random.split(seg.key)
+            t0 = time.perf_counter()
+            preds = seg.learner_fn(req.x, jnp.asarray(y), jnp.asarray(w), sub)
+            preds = np.asarray(jax.block_until_ready(preds), np.float32)
+            wall += time.perf_counter() - t0
+            preds_rows[sel] = preds.reshape(len(sel), tpi, n_obs)
+
+        # --- per-invocation durations (measured or simulated) ------------
+        if pool.simulate:
+            base = pool.base_work_s * tpi / speedup_of(pool.memory_mb)
+            noise = rng.lognormal(0.0, 0.08, len(entries))
+            durs = base * noise
+        else:
+            durs = np.full(len(entries), wall / max(len(entries), 1))
+        is_strag = rng.random(len(entries)) < pool.straggler_rate
+        durs = np.where(is_strag, durs * pool.straggler_slowdown, durs)
+        report.stragglers += int(is_strag.sum())
+        # fault injection (first-attempt only so retries converge)
+        first_try = ledger.attempts[inv_arr] == 0
+        failed = (rng.random(len(entries)) < pool.failure_rate) & first_try
+        failed |= durs > pool.timeout_s                   # lambda timeout cap
+
+        for i, e in enumerate(entries):
+            if ledger.status[e.inv] == DONE:   # speculative lost the race
+                continue
+            if failed[i]:
+                if ledger.attempts[e.inv] >= pool.max_retries:
+                    raise RuntimeError(
+                        f"invocation {e.inv} exceeded retry budget")
+                ledger.record_failure(e.inv)
+                report.failures += 1
+                continue
+            ledger.record_success(int(e.inv), preds_rows[i])
+            report.bill.add(BillingRecord(
+                invocation=int(e.inv), duration_s=float(durs[i]),
+                memory_mb=pool.memory_mb,
+                retry=int(ledger.attempts[e.inv]),
+                speculative=e.speculative))
+        report.wave_sizes.append(len(entries))
+        report.waves += 1
+        if pool.simulate:
+            # response time = slowest invocation in flight this wave
+            report.response_time_s += float(np.max(durs)) \
+                + pool.dispatch_overhead_s
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+BACKENDS = {"wave": WaveBackend, "inline": InlineBackend,
+            "sharded": ShardedBackend}
+BACKEND_NAMES = tuple(BACKENDS)
+
+
+def make_backend(backend, pool: Optional[PoolConfig] = None):
+    """Resolve a backend name (or pass through an instance)."""
+    if isinstance(backend, str):
+        if backend not in BACKENDS:
+            raise KeyError(f"unknown backend {backend!r}; known: "
+                           f"{BACKEND_NAMES}")
+        return BACKENDS[backend](pool)
+    return backend

@@ -1,80 +1,31 @@
-"""The serverless-analogue executor (paper §4 adapted to a device mesh).
+"""Deprecated single-request executor facade.
 
-One *invocation* = the paper's lambda call:
-  scaling='n_rep'          -> M*L invocations, each fitting K folds
-  scaling='n_folds*n_rep'  -> M*K*L invocations, one fold each
+The wave scheduler now lives in ``repro.serverless.backends.WaveBackend``
+(together with the Sharded and Inline backends) and natively batches many
+requests into shared waves.  ``ServerlessExecutor`` is kept as a thin
+adapter for the legacy call shape
 
-Execution model (DESIGN.md §2): a *wave* dispatches up to
-``n_workers * lanes_per_worker`` invocations; all lanes of a wave run as one
-fused/vmapped batch (dense MXU work), the TPU-native replacement for FaaS
-concurrency.  Between waves the scheduler:
+    executor = ServerlessExecutor(learner_fn, grid, pool)
+    preds, ledger, report = executor.run(x, targets, train_w, key)
 
-  * injects faults (configurable rate) and re-queues failures (Lambda retry),
-  * duplicates straggler invocations (speculative execution, first-result-wins),
-  * re-reads the worker count (elastic shrink/grow),
-  * checkpoints the ledger (durable task state).
-
-Billing: per-invocation durations are either measured (CPU wall time of the
-wave divided over its lanes, ``simulate=False``) or modeled through the
-Lambda memory/vCPU speed curve (``simulate=True``, reproduces Fig. 3).
+``PoolConfig`` and ``RunReport`` are re-exported from backends for
+backward compatibility.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.crossfit import TaskGrid
-from repro.serverless.cost import Bill, BillingRecord, speedup_of
-from repro.serverless.ledger import DONE, TaskLedger
-
-
-@dataclass
-class PoolConfig:
-    """The knobs the paper's user controls (§4.2, §5.2)."""
-    n_workers: int = 8                  # concurrent lambda-analogue workers
-    memory_mb: int = 1024               # Lambda memory knob
-    scaling: str = "n_rep"              # paper's scaling parameter
-    timeout_s: float = 900.0            # Lambda 15-min cap
-    max_retries: int = 3
-    failure_rate: float = 0.0           # fault injection (per invocation)
-    straggler_rate: float = 0.0         # P(invocation is a straggler)
-    straggler_slowdown: float = 4.0
-    speculative_after: float = 2.0      # duplicate if > x median duration
-    simulate: bool = False              # model durations via the speed curve
-    base_work_s: float = 0.0            # simulated seconds per task @1 vCPU
-    dispatch_overhead_s: float = 0.005  # per-wave dispatch latency
-    seed: int = 0
-    checkpoint_path: Optional[str] = None
-    # elasticity: optional schedule of worker counts per wave (grow/shrink)
-    worker_schedule: Optional[Sequence[int]] = None
-
-
-@dataclass
-class RunReport:
-    fit_time_s: float = 0.0
-    response_time_s: float = 0.0
-    waves: int = 0
-    bill: Bill = field(default_factory=Bill)
-    wave_sizes: List[int] = field(default_factory=list)
-    failures: int = 0
-    stragglers: int = 0
-
-    def summary(self) -> Dict:
-        out = {"fit_time_s": self.fit_time_s,
-               "response_time_s": self.response_time_s,
-               "waves": self.waves, "failures": self.failures,
-               "stragglers": self.stragglers}
-        out.update(self.bill.summary())
-        return out
+from repro.serverless.backends import (        # noqa: F401  (re-exports)
+    PoolConfig, RunReport, Segment, WaveBackend, WorkRequest,
+)
+from repro.serverless.ledger import TaskLedger
 
 
 class ServerlessExecutor:
-    """Runs a DML task grid through the wave scheduler.
+    """Runs one DML task grid through the wave scheduler.
 
     learner_fn(x (N,P), y (T,N), w (T,N), key) -> (T,N) — the fused batch
     fit; T is the number of *tasks* in the wave (invocations x K for
@@ -86,28 +37,20 @@ class ServerlessExecutor:
         self.learner_fn = learner_fn
         self.grid = grid
         self.pool = pool
-        self._rng = np.random.Generator(np.random.Philox(key=pool.seed))
 
-    # -- mapping between invocations and (m, k, l) task tensors -------------
-    def _invocation_tasks(self, inv: np.ndarray):
+    # -- legacy introspection helpers ---------------------------------------
+    def _invocation_tasks(self, inv: np.ndarray) -> np.ndarray:
         """(B,) invocation ids -> (B, tpi) flat task ids (m*K+k)*L+l."""
-        g, s = self.grid, self.pool.scaling
-        if s == "n_rep":
-            m, l = np.divmod(inv, g.n_nuisance)
-            k = np.arange(g.n_folds)
-            return ((m[:, None] * g.n_folds + k[None, :]) * g.n_nuisance
-                    + l[:, None])
-        return inv[:, None]
+        return self.grid.invocation_task_ids(inv, self.pool.scaling)
 
     @property
     def tasks_per_invocation(self) -> int:
-        return self.grid.n_folds if self.pool.scaling == "n_rep" else 1
+        return self.grid.tasks_per_invocation(self.pool.scaling)
 
     def lanes_per_worker(self) -> int:
-        """Worker 'memory' buys lane width (DESIGN.md §2 mapping)."""
-        return max(1, self.pool.memory_mb // 256)
+        return self.pool.lanes_per_worker()
 
-    # -- main loop -----------------------------------------------------------
+    # -- main entry ----------------------------------------------------------
     def run(self, x, targets, train_w, key,
             ledger: Optional[TaskLedger] = None,
             report: Optional[RunReport] = None):
@@ -115,113 +58,10 @@ class ServerlessExecutor:
 
         Returns (preds (M,K,L,N), ledger, report).
         """
-        g, pool = self.grid, self.pool
-        n_obs = x.shape[0]
-        n_inv = g.n_invocations(pool.scaling)
-        tpi = self.tasks_per_invocation
-        if ledger is None:
-            ledger = TaskLedger.create(n_inv, n_obs, tpi)
-        report = report or RunReport()
-
-        m_idx, k_idx, l_idx = np.meshgrid(
-            np.arange(g.n_rep), np.arange(g.n_folds),
-            np.arange(g.n_nuisance), indexing="ij")
-        flat_m = m_idx.reshape(-1)
-        flat_k = k_idx.reshape(-1)
-        flat_l = l_idx.reshape(-1)
-
-        t_start = time.perf_counter()
-        wave = 0
-        durations_seen: List[float] = []
-        while not ledger.complete:
-            n_workers = pool.n_workers
-            if pool.worker_schedule is not None:
-                n_workers = pool.worker_schedule[
-                    min(wave, len(pool.worker_schedule) - 1)]
-            capacity = max(1, n_workers * self.lanes_per_worker())
-            pending = ledger.pending()
-            batch = pending[:capacity]
-            # straggler duplication: re-dispatch slowest-suspect half-done
-            # work speculatively when there is spare capacity
-            spare = capacity - len(batch)
-            spec: np.ndarray = np.empty(0, np.int64)
-            if spare > 0 and pool.straggler_rate > 0 and len(batch):
-                spec = batch[: min(spare, len(batch))]
-            dispatch = np.concatenate([batch, spec]).astype(np.int64)
-
-            task_ids = self._invocation_tasks(dispatch)      # (B, tpi)
-            flat_tasks = task_ids.reshape(-1)
-            tm, tk, tl = flat_m[flat_tasks], flat_k[flat_tasks], flat_l[flat_tasks]
-            y_wave = targets[tl]                             # (B*tpi, N)
-            w_wave = train_w[tm, tk, tl]                     # (B*tpi, N)
-
-            key, sub = jax.random.split(key)
-            t0 = time.perf_counter()
-            preds = self.learner_fn(x, jnp.asarray(y_wave),
-                                    jnp.asarray(w_wave), sub)
-            preds = np.asarray(jax.block_until_ready(preds), np.float32)
-            wave_wall = time.perf_counter() - t0
-            preds = preds.reshape(len(dispatch), tpi, n_obs)
-
-            # --- per-invocation durations (measured or simulated) ----------
-            if pool.simulate:
-                base = pool.base_work_s * tpi / speedup_of(pool.memory_mb)
-                noise = self._rng.lognormal(0.0, 0.08, len(dispatch))
-                durs = base * noise
-            else:
-                durs = np.full(len(dispatch),
-                               wave_wall / max(len(dispatch), 1))
-            # stragglers
-            is_strag = self._rng.random(len(dispatch)) < pool.straggler_rate
-            durs = np.where(is_strag, durs * pool.straggler_slowdown, durs)
-            report.stragglers += int(is_strag.sum())
-            # fault injection (first-attempt only so retries converge)
-            first_try = ledger.attempts[dispatch] == 0
-            failed = (self._rng.random(len(dispatch)) < pool.failure_rate) \
-                & first_try
-            # lambda timeout cap
-            timed_out = durs > pool.timeout_s
-            failed |= timed_out
-
-            for i, inv in enumerate(dispatch):
-                if ledger.status[inv] == DONE:     # speculative lost the race
-                    continue
-                if failed[i]:
-                    if ledger.attempts[inv] >= pool.max_retries:
-                        raise RuntimeError(
-                            f"invocation {inv} exceeded retry budget")
-                    ledger.record_failure(inv)
-                    report.failures += 1
-                    continue
-                ledger.record_success(int(inv), preds[i])
-                report.bill.add(BillingRecord(
-                    invocation=int(inv), duration_s=float(durs[i]),
-                    memory_mb=pool.memory_mb,
-                    retry=int(ledger.attempts[inv]),
-                    speculative=bool(i >= len(batch))))
-                durations_seen.append(float(durs[i]))
-
-            report.wave_sizes.append(len(dispatch))
-            wave += 1
-            report.waves = wave
-            if pool.checkpoint_path:
-                ledger.save(pool.checkpoint_path)
-            if pool.simulate:
-                # response time = slowest invocation in flight per wave
-                report.response_time_s += float(np.max(durs)) \
-                    + pool.dispatch_overhead_s
-
-        if not pool.simulate:
-            report.response_time_s = time.perf_counter() - t_start
-        report.fit_time_s = (time.perf_counter() - t_start
-                             if not pool.simulate
-                             else report.response_time_s
-                             + pool.dispatch_overhead_s)
-
-        # ---- scatter ledger rows back to the (M,K,L,N) tensor -------------
-        all_inv = np.arange(n_inv)
-        task_ids = self._invocation_tasks(all_inv).reshape(-1)
-        out = np.zeros((g.n_rep, g.n_folds, g.n_nuisance, n_obs), np.float32)
-        out[flat_m[task_ids], flat_k[task_ids], flat_l[task_ids]] = \
-            ledger.preds.reshape(-1, n_obs)
-        return out, ledger, report
+        seg = Segment(learner_fn=self.learner_fn,
+                      l_ids=tuple(range(self.grid.n_nuisance)), key=key)
+        req = WorkRequest.create(self.grid, self.pool.scaling, x, targets,
+                                 train_w, [seg], ledger=ledger,
+                                 report=report)
+        WaveBackend(self.pool).run_requests([req])
+        return req.gathered_preds(), req.ledger, req.report

@@ -1,0 +1,29 @@
+"""Cross-version jax compat shims for SPMD primitives.
+
+jax moved ``shard_map`` out of ``jax.experimental`` (and renamed
+``check_rep`` to ``check_vma``) around 0.6; everything in this repo goes
+through this helper so one module tracks the API drift.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` (jax >= 0.4.35), with Auto axis_types only on
+    versions that have them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, on any jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)

@@ -1,0 +1,191 @@
+"""The declarative front-end: DMLData validation, DMLPlan construction,
+config immutability (the PoolConfig aliasing regression), and the
+deprecated DoubleMLServerless shim."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DMLData, DMLPlan, DoubleMLServerless, NuisanceSpec, estimate,
+)
+from repro.core.session import compile_request
+from repro.data import make_irm_data, make_plr_data
+from repro.serverless import PoolConfig, TaskLedger
+
+
+# ---------------------------------------------------------------------------
+# DMLData
+# ---------------------------------------------------------------------------
+def test_dmldata_validates_and_coerces():
+    data = DMLData(x=np.ones((10, 3), np.float64), y=range(10),
+                   d=np.zeros(10))
+    assert data.x.dtype == np.float32 and data.x.shape == (10, 3)
+    assert data.n_obs == 10 and data.dim_x == 3
+    assert "z" not in data and "d" in data
+    assert data.score_arrays().keys() == {"y", "d"}
+
+
+def test_dmldata_rejects_bad_shapes_and_nans():
+    with pytest.raises(ValueError, match="rows"):
+        DMLData(x=np.ones((10, 3)), y=np.ones(9), d=np.ones(10))
+    with pytest.raises(ValueError, match="2-d"):
+        DMLData(x=np.ones(10), y=np.ones(10), d=np.ones(10))
+    bad = np.ones(10)
+    bad[3] = np.nan
+    with pytest.raises(ValueError, match="NaN"):
+        DMLData(x=np.ones((10, 3)), y=bad, d=np.ones(10))
+
+
+def test_dmldata_from_dict_roundtrip():
+    raw = make_plr_data(n_obs=50, dim_x=4, theta=0.3, seed=1)
+    data = DMLData.from_dict(raw)
+    assert data.theta0 == pytest.approx(0.3)
+    np.testing.assert_array_equal(data.role("y"), raw["y"])
+    assert DMLData.from_dict(data) is data          # idempotent
+    with pytest.raises(KeyError, match="no 'z'"):
+        data.role("z")
+
+
+def test_dmldata_is_immutable():
+    data = DMLData(x=np.ones((5, 2)), y=np.ones(5), d=np.ones(5))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        data.y = np.zeros(5)
+
+
+# ---------------------------------------------------------------------------
+# DMLPlan
+# ---------------------------------------------------------------------------
+def test_for_model_uniform_plr():
+    plan = DMLPlan.for_model("plr", learner="ridge",
+                             learner_params={"reg": 0.5}, n_folds=3, n_rep=2)
+    assert [ns.name for ns in plan.nuisances] == ["ml_l", "ml_m"]
+    assert plan.uniform
+    assert plan.nuisances[1].target == "d"
+    assert plan.nuisances[0].param_dict == {"reg": 0.5}
+
+
+def test_for_model_irm_propensity_goes_logistic():
+    """The old ``_learner_key`` classify-hack, now an explicit plan rule:
+    linear learners get a logistic propensity for binary treatments."""
+    plan = DMLPlan.for_model("irm", learner="ridge",
+                             learner_params={"reg": 2.0})
+    by_name = {ns.name: ns for ns in plan.nuisances}
+    assert by_name["ml_m"].learner == "logistic"
+    assert by_name["ml_m"].param_dict == {"reg": 2.0}
+    assert by_name["ml_g0"].learner == "ridge"
+    assert not plan.uniform
+
+
+def test_for_model_override_nuisance():
+    plan = DMLPlan.for_model(
+        "plr", learner="ridge",
+        overrides={"ml_m": NuisanceSpec.make("ml_m", "d", "lasso",
+                                             {"reg": 0.01})})
+    by_name = {ns.name: ns for ns in plan.nuisances}
+    assert by_name["ml_m"].learner == "lasso"
+    assert by_name["ml_m"].target == "d"        # role comes from the model
+    assert by_name["ml_l"].learner == "ridge"
+
+
+def test_plan_accepts_unhashable_param_values():
+    """List-valued hyperparameters (e.g. mlp hidden sizes) are
+    canonicalized to tuples so specs stay hashable and groupable."""
+    plan = DMLPlan.for_model("plr", learner="mlp",
+                             learner_params={"hidden": [8, 8], "lr": 1e-3})
+    assert plan.nuisances[0].param_dict["hidden"] == (8, 8)
+    assert plan.uniform
+    data = make_plr_data(n_obs=40, dim_x=3, theta=0.5, seed=1)
+    req = compile_request(plan.replace(
+        resampling=type(plan.resampling)(n_folds=2, n_rep=1)),
+        DMLData.from_dict(data))
+    assert len(req.segments) == 1            # grouping worked via hashing
+
+
+def test_plan_validation():
+    with pytest.raises(KeyError):
+        DMLPlan.for_model("nope")
+    with pytest.raises(ValueError, match="scaling"):
+        DMLPlan.for_model("plr", scaling="bogus")
+    with pytest.raises(ValueError, match="backend"):
+        DMLPlan.for_model("plr", backend="bogus")
+    with pytest.raises(ValueError, match="n_folds"):
+        DMLPlan.for_model("plr", n_folds=1)
+    plan = DMLPlan.for_model("plr")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        plan.score = "IV-type"
+
+
+# ---------------------------------------------------------------------------
+# config immutability — the aliasing regression
+# ---------------------------------------------------------------------------
+def test_shared_pool_is_never_mutated():
+    """One PoolConfig reused across estimators must not leak settings:
+    the old ``__init__`` did ``self.pool.scaling = scaling`` on the
+    caller's object."""
+    pool = PoolConfig(n_workers=4, scaling="n_rep")
+    plan_a = DMLPlan.for_model("plr", n_rep=2, n_folds=3,
+                               scaling="n_folds*n_rep", pool=pool)
+    plan_b = DMLPlan.for_model("plr", n_rep=2, n_folds=3,
+                               scaling="n_rep", pool=pool)
+    assert pool.scaling == "n_rep"                  # untouched
+    assert plan_a.scaling == "n_folds*n_rep"
+    assert plan_b.scaling == "n_rep"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pool.scaling = "n_folds*n_rep"
+
+    with pytest.warns(DeprecationWarning):
+        DoubleMLServerless(model="plr", scaling="n_folds*n_rep", pool=pool)
+    assert pool.scaling == "n_rep"                  # shim is clean too
+
+    # the two plans really do execute at different granularity
+    data = make_plr_data(n_obs=120, dim_x=4, theta=0.5, seed=2)
+    ra = estimate(plan_a, data)
+    rb = estimate(plan_b, data)
+    assert ra.report.bill.n_invocations == 2 * 3 * 2     # M*K*L
+    assert rb.report.bill.n_invocations == 2 * 2         # M*L
+    assert ra.theta == pytest.approx(rb.theta, abs=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# shim equivalence + the mixed-learner ledger regression
+# ---------------------------------------------------------------------------
+def test_shim_matches_declarative_api():
+    data = make_plr_data(n_obs=150, dim_x=5, theta=0.5, seed=4)
+    plan = DMLPlan.for_model("plr", learner="ridge",
+                             learner_params={"reg": 1.0}, n_folds=3, n_rep=2,
+                             seed=9, pool=PoolConfig(n_workers=4))
+    res_new = estimate(plan, DMLData.from_dict(data))
+    with pytest.warns(DeprecationWarning):
+        est = DoubleMLServerless(model="plr", learner="ridge",
+                                 learner_params={"reg": 1.0}, n_folds=3,
+                                 n_rep=2, seed=9,
+                                 pool=PoolConfig(n_workers=4))
+    res_old = est.fit(data)
+    assert res_old.theta == res_new.theta
+    assert res_old.se == res_new.se
+
+
+def test_mixed_learner_grid_honors_caller_ledger():
+    """IRM grids run one segment per learner; the old fit() dropped the
+    caller's ledger on that path, so resume re-billed everything."""
+    data = make_irm_data(n_obs=200, dim_x=4, theta=0.4, seed=5)
+    plan = DMLPlan.for_model("irm", learner="ridge", n_folds=3, n_rep=2,
+                             pool=PoolConfig(n_workers=4))
+    req_probe = compile_request(plan, DMLData.from_dict(data))
+    ledger = TaskLedger.create(req_probe.ledger.n_invocations,
+                               req_probe.ledger.n_obs,
+                               req_probe.ledger.tasks_per_invocation)
+    first = estimate(plan, data, ledger=ledger)
+    assert ledger.complete
+    assert first.report.bill.n_invocations == ledger.n_invocations
+    resumed = estimate(plan, data, ledger=ledger)
+    assert resumed.report.bill.n_invocations == 0        # nothing re-run
+    assert resumed.theta == first.theta
+
+    with pytest.warns(DeprecationWarning):
+        est = DoubleMLServerless(model="irm", learner="ridge", n_folds=3,
+                                 n_rep=2, pool=PoolConfig(n_workers=4))
+    shim_resumed = est.fit(data, ledger=ledger)
+    assert shim_resumed.report.bill.n_invocations == 0
+    assert shim_resumed.theta == first.theta

@@ -1,0 +1,115 @@
+"""ExecutionBackend parity: the same (DMLPlan, DMLData, seed) must yield
+identical (M,K,L,N) predictions and theta on every backend — including the
+wave backend under fault injection, retries, and speculation."""
+import numpy as np
+import pytest
+
+from repro.core import DMLData, DMLPlan, estimate
+from repro.core.session import assemble_result, compile_request
+from repro.data import make_irm_data, make_plr_data
+from repro.serverless import PoolConfig, make_backend
+from repro.serverless.backends import (
+    BACKEND_NAMES, InlineBackend, ShardedBackend, WaveBackend,
+)
+
+POOL = PoolConfig(n_workers=3, memory_mb=512)
+
+
+def _run_backend(backend, plan, data):
+    """Fresh compile + drain on one backend; returns (preds, result)."""
+    req = compile_request(plan, data)
+    backend.run_requests([req])
+    assert req.ledger.complete
+    return req.gathered_preds(), assemble_result(plan, data, req)
+
+
+@pytest.fixture(scope="module")
+def plr_case():
+    data = DMLData.from_dict(make_plr_data(n_obs=140, dim_x=5, theta=0.5,
+                                           seed=3))
+    plan = DMLPlan.for_model("plr", learner="ridge",
+                             learner_params={"reg": 1.0}, n_folds=3, n_rep=2,
+                             seed=7)
+    return plan, data
+
+
+@pytest.fixture(scope="module")
+def irm_case():
+    data = DMLData.from_dict(make_irm_data(n_obs=160, dim_x=4, theta=0.4,
+                                           seed=6))
+    plan = DMLPlan.for_model("irm", learner="ridge", n_folds=3, n_rep=2,
+                             seed=11)
+    return plan, data
+
+
+@pytest.mark.parametrize("case", ["plr_case", "irm_case"])
+@pytest.mark.parametrize("scaling", ["n_rep", "n_folds*n_rep"])
+def test_backend_parity(case, scaling, request):
+    plan, data = request.getfixturevalue(case)
+    plan = plan.replace(scaling=scaling)
+    p_inline, r_inline = _run_backend(InlineBackend(POOL), plan, data)
+    p_wave, r_wave = _run_backend(WaveBackend(POOL), plan, data)
+    p_shard, r_shard = _run_backend(ShardedBackend(POOL), plan, data)
+    np.testing.assert_allclose(p_wave, p_inline, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(p_shard, p_inline, rtol=1e-6, atol=1e-6)
+    assert r_wave.theta == pytest.approx(r_inline.theta, abs=1e-7)
+    assert r_shard.theta == pytest.approx(r_inline.theta, abs=1e-7)
+
+
+def test_wave_parity_under_faults_and_stragglers(plr_case):
+    """Fault injection + retries + speculative duplicates change the
+    schedule, never the estimate."""
+    plan, data = plr_case
+    p_ref, r_ref = _run_backend(InlineBackend(POOL), plan, data)
+    chaotic = PoolConfig(n_workers=2, memory_mb=512, failure_rate=0.4,
+                         straggler_rate=0.3, max_retries=10, seed=3)
+    p_wave, r_wave = _run_backend(WaveBackend(chaotic), plan, data)
+    assert r_wave.report.failures > 0
+    np.testing.assert_allclose(p_wave, p_ref, rtol=1e-6, atol=1e-6)
+    assert r_wave.theta == pytest.approx(r_ref.theta, abs=1e-7)
+
+
+def test_backend_selected_via_plan(plr_case):
+    plan, data = plr_case
+    thetas = {name: estimate(plan.replace(backend=name), data).theta
+              for name in BACKEND_NAMES}
+    assert len(set(thetas.values())) == 1
+
+
+def test_sharded_backend_stays_warm(plr_case):
+    """Compiled SPMD programs are cached by learner spec, not object
+    identity — a second request with an equal spec reuses the program."""
+    plan, data = plr_case
+    backend = ShardedBackend(POOL)
+    _run_backend(backend, plan, data)
+    assert len(backend._programs) == 1
+    _run_backend(backend, plan, data)        # fresh partial, same spec
+    assert len(backend._programs) == 1
+    other = plan.replace(
+        nuisances=tuple(
+            type(ns).make(ns.name, ns.target, ns.learner, {"reg": 9.0})
+            for ns in plan.nuisances))
+    _run_backend(backend, other, data)       # different params -> new entry
+    assert len(backend._programs) == 2
+
+
+def test_backends_resume_from_ledger(plr_case):
+    """All backends skip pre-completed ledger rows (durable resume)."""
+    plan, data = plr_case
+    for name in BACKEND_NAMES:
+        req = compile_request(plan, data)
+        make_backend(name, POOL).run_requests([req])
+        done = req.ledger
+        req2 = compile_request(plan, data, ledger=done)
+        make_backend(name, POOL).run_requests([req2])
+        assert req2.report.bill.n_invocations == 0
+        np.testing.assert_array_equal(req2.gathered_preds(),
+                                      req.gathered_preds())
+
+
+def test_make_backend_registry():
+    assert make_backend("wave", POOL).pool is POOL
+    with pytest.raises(KeyError):
+        make_backend("nope")
+    inst = InlineBackend(POOL)
+    assert make_backend(inst) is inst

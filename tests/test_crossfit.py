@@ -1,16 +1,20 @@
-"""Cross-fitting grid properties (partitions, scaling bijections, stitching)."""
+"""Cross-fitting grid properties (partitions, scaling bijections, stitching).
+
+Formerly hypothesis property tests; now seeded parametrize sweeps so the
+tier-1 suite collects on a clean environment (no hypothesis dependency).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.crossfit import (
     TaskGrid, TaskKey, check_partition, draw_fold_masks, stitch_predictions,
 )
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(11, 200), k=st.integers(2, 7), m=st.integers(1, 5),
-       seed=st.integers(0, 2**20))
+@pytest.mark.parametrize("n,k,m,seed", [
+    (11, 2, 1, 0), (23, 3, 2, 7), (57, 5, 3, 123), (100, 7, 5, 2**19),
+    (128, 4, 2, 31337), (199, 6, 4, 1), (200, 2, 5, 999983), (64, 7, 1, 42),
+])
 def test_fold_masks_partition(n, k, m, seed):
     masks = draw_fold_masks(n, k, m, seed)
     assert masks.shape == (m, k, n)
@@ -27,9 +31,10 @@ def test_fold_masks_deterministic():
     assert (a != c).any()
 
 
-@settings(max_examples=20, deadline=None)
-@given(m=st.integers(1, 6), k=st.integers(2, 6), l=st.integers(1, 4),
-       scaling=st.sampled_from(["n_rep", "n_folds*n_rep"]))
+@pytest.mark.parametrize("m,k,l", [
+    (1, 2, 1), (2, 3, 2), (3, 5, 3), (6, 2, 4), (4, 6, 1), (5, 4, 5),
+])
+@pytest.mark.parametrize("scaling", ["n_rep", "n_folds*n_rep"])
 def test_invocation_mapping_bijection(m, k, l, scaling):
     grid = TaskGrid(m, k, l)
     seen = set()
@@ -40,6 +45,26 @@ def test_invocation_mapping_bijection(m, k, l, scaling):
             assert flat not in seen
             seen.add(flat)
     assert len(seen) == grid.n_tasks
+
+
+@pytest.mark.parametrize("m,k,l", [(2, 3, 2), (3, 5, 1), (4, 2, 5)])
+@pytest.mark.parametrize("scaling", ["n_rep", "n_folds*n_rep"])
+def test_invocation_task_ids_matches_scalar_mapping(m, k, l, scaling):
+    """The vectorized mapping used by the backends must agree with the
+    per-key reference."""
+    grid = TaskGrid(m, k, l)
+    inv = np.arange(grid.n_invocations(scaling))
+    mat = grid.invocation_task_ids(inv, scaling)
+    assert mat.shape == (len(inv), grid.tasks_per_invocation(scaling))
+    for i in inv:
+        expect = [key.flat(k, l) for key in grid.tasks_of_invocation(int(i),
+                                                                     scaling)]
+        assert list(mat[i]) == expect
+    tm, tk, tl = grid.task_coords()
+    for key in grid.keys():
+        flat = key.flat(k, l)
+        assert (tm[flat], tk[flat], tl[flat]) == (key.rep, key.fold,
+                                                  key.nuisance)
 
 
 def test_paper_invocation_counts():
