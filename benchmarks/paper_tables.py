@@ -107,6 +107,107 @@ def session_throughput(n_requests: int = 4, n_rep: int = 10) -> Dict:
             "speedup": solo_s / batched_s}
 
 
+def _pr1_per_segment_drain(reqs) -> None:
+    """Replica of the PR-1 execution path: one fused jit call per
+    (request, segment) at *exact* array shapes — so every distinct
+    (tasks, N, P) combination retraces, which is precisely the cost the
+    megabatch compiler removes.  Kept here (not in the library) as the
+    "before" baseline for the session-throughput comparison."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.learners import get_learner
+
+    for req in reqs:
+        for seg in req.segments:
+            inv = req.grid.segment_invocations(seg.l_ids, req.scaling)
+            flat = np.concatenate([req.invocation_tasks(i) for i in inv])
+            y, w = req.wave_arrays(flat)
+            fn = get_learner(seg.learner, dict(seg.params))
+            preds = fn(req.x, jnp.asarray(y), jnp.asarray(w), seg.key)
+            jax.block_until_ready(preds)
+
+
+def megabatch_compile(n_requests: int = 32, n_rep: int = 2,
+                      repeats: int = 3) -> Dict:
+    """Megabatch compiler vs the PR-1 per-segment path on the
+    session-throughput workload: many small concurrent PLR requests, every
+    one with a *different* N (the serving reality), drained by one warm
+    wave pool.  Both paths start from identical pre-compiled WorkRequests;
+    only the drain is timed.
+
+    before  — per-(request, segment) fused calls at exact shapes: every
+              distinct N re-traces its own gram program and every request
+              pays its own eager linear-algebra dispatch chain.
+    after   — the wave backend over the megabatch compiler: all requests'
+              tasks bucketed by (learner, N-bucket, P-bucket) and served
+              by one cached program.
+
+    Emits tasks/sec (cold = first drain incl. compiles, warm = steady
+    state), waves, padding waste, and compile-cache hit rate — the
+    numbers BENCH_megabatch.json tracks across PRs.
+    """
+    import time as _time
+
+    from repro.core import DMLData, DMLPlan
+    from repro.core.session import compile_request
+    from repro.data import make_plr_data
+    from repro.serverless import PoolConfig, WaveBackend
+
+    pool = PoolConfig(n_workers=16, memory_mb=1024)
+    sizes = [100 + i for i in range(n_requests)]       # all pad to N=128/256
+    cases = [(DMLPlan.for_model("plr", n_folds=3, n_rep=n_rep,
+                                learner="ridge", learner_params={"reg": 1.0},
+                                seed=100 + i, pool=pool),
+              DMLData.from_dict(make_plr_data(n_obs=n, dim_x=8, theta=0.5,
+                                              seed=i)))
+             for i, n in enumerate(sizes)]
+    n_tasks = sum(p.resampling.n_rep * p.resampling.n_folds * p.n_nuisance
+                  for p, _ in cases)
+
+    def run_before():
+        reqs = [compile_request(p, d) for p, d in cases]
+        t0 = _time.perf_counter()
+        _pr1_per_segment_drain(reqs)
+        return _time.perf_counter() - t0
+
+    def run_after(backend):
+        reqs = [compile_request(p, d) for p, d in cases]
+        t0 = _time.perf_counter()
+        info = backend.run_requests(reqs)
+        return _time.perf_counter() - t0, info
+
+    # cold: fresh jit caches for both paths (first pass in this process),
+    # then warm repeats — burst traffic sees cold, steady serving warm.
+    before_cold = run_before()
+    before_warm = min(run_before() for _ in range(repeats))
+    backend = WaveBackend(pool)
+    after_cold, info = run_after(backend)
+    after_warm, _ = min(
+        (run_after(backend) for _ in range(repeats)), key=lambda t: t[0])
+    stats = backend.compiler.stats
+    return {
+        "n_requests": n_requests,
+        "n_tasks": n_tasks,
+        "before_cold_s": before_cold,
+        "before_warm_s": before_warm,
+        "after_cold_s": after_cold,
+        "after_warm_s": after_warm,
+        "tasks_per_sec": n_tasks / after_cold,
+        "tasks_per_sec_warm": n_tasks / after_warm,
+        "baseline_tasks_per_sec": n_tasks / before_cold,
+        "baseline_tasks_per_sec_warm": n_tasks / before_warm,
+        "speedup_cold": before_cold / after_cold,
+        "speedup_warm": before_warm / after_warm,
+        "waves": info.waves,
+        "buckets": info.buckets,
+        "shared_waves": info.shared_waves,
+        "padding_waste_pct": 100.0 * stats.padding.waste_frac,
+        "compile_cache_hit_rate": stats.hit_rate,
+        "programs_compiled": stats.misses,
+    }
+
+
 def fusion_speedup(n_tasks: int = 64) -> Dict:
     """Fused batched cross-fit vs per-task loop (same math)."""
     import jax

@@ -4,9 +4,16 @@
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run --only table1,fusion
   PYTHONPATH=src python -m benchmarks.run --fast      # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --smoke     # compiler-perf gate
 
 CSV columns: name, us_per_call (wall time of the benchmarked unit),
 derived (the paper-relevant figure for that table).
+
+The ``megabatch`` benchmark additionally writes machine-readable
+``BENCH_megabatch.json`` (tasks/sec before/after the compiler, waves,
+padding waste %, compile-cache hit rate) so the perf trajectory is
+tracked across PRs; ``--smoke`` runs just that at CI size and fails
+loudly if the compiler stops beating the per-segment path.
 """
 from __future__ import annotations
 
@@ -19,9 +26,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: megabatch benchmark only, small sizes, "
+                         "exit nonzero if the compiler regresses below the "
+                         "per-segment baseline")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--megabatch-json", default="BENCH_megabatch.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        only = {"megabatch"}
+        args.fast = True
 
     from benchmarks import paper_tables as T
 
@@ -72,6 +87,20 @@ def main() -> None:
                      f"speedup_vs_sequential={st['speedup']:.2f}x_"
                      f"shared_waves={st['shared_waves']}"))
 
+    if want("megabatch"):
+        mb = T.megabatch_compile(n_requests=12 if args.fast else 32,
+                                 n_rep=2,
+                                 repeats=2 if args.fast else 3)
+        results["megabatch"] = mb
+        rows.append(("megabatch_session_drain",
+                     mb["after_cold_s"] * 1e6,
+                     f"tasks_per_sec={mb['tasks_per_sec']:.0f}_"
+                     f"speedup_vs_pr1={mb['speedup_cold']:.1f}x_"
+                     f"hit_rate={mb['compile_cache_hit_rate']:.2f}_"
+                     f"waste={mb['padding_waste_pct']:.0f}%"))
+        with open(args.megabatch_json, "w") as f:
+            json.dump(mb, f, indent=1, default=float)
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -79,6 +108,16 @@ def main() -> None:
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(results, f, indent=1, default=float)
+
+    if args.smoke:
+        mb = results["megabatch"]
+        if mb["speedup_cold"] < 1.0:
+            print(f"SMOKE FAIL: megabatch cold speedup "
+                  f"{mb['speedup_cold']:.2f}x < 1x vs per-segment baseline",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"SMOKE OK: megabatch {mb['speedup_cold']:.1f}x cold / "
+              f"{mb['speedup_warm']:.1f}x warm vs per-segment baseline")
 
 
 if __name__ == "__main__":

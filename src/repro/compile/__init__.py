@@ -1,0 +1,25 @@
+"""The megabatch task compiler (ISSUE 2 tentpole).
+
+Lowers the union of all pending WorkRequests into a small set of bucketed,
+cached, fused programs:
+
+    plan (DMLPlan, DMLData)
+      -> task grid (core/crossfit.TaskGrid, M x K x L per request)
+      -> buckets (buckets.plan_buckets: learner x N-bucket x P-bucket)
+      -> programs (program.ProgramCache: jitted batched_fit_predict,
+                   Pallas batched_gram / batched_predict on the hot path)
+      -> waves (serverless/backends.py schedules bucket slices)
+
+Every execution backend is a thin scheduler over this layer.
+"""
+from repro.compile.buckets import (
+    BucketKey, Entry, MegabatchPlan, plan_buckets,
+)
+from repro.compile.program import (
+    CompileStats, ProgramCache, run_bucket, segment_batched_fn,
+)
+
+__all__ = [
+    "BucketKey", "Entry", "MegabatchPlan", "plan_buckets",
+    "CompileStats", "ProgramCache", "run_bucket", "segment_batched_fn",
+]

@@ -1,0 +1,123 @@
+"""Megabatch bucket planning: the whole cross-fitting grid -> few shapes.
+
+The planner takes the union of all pending ``WorkRequest``s — across
+sessions, repetitions, folds, nuisances, and mixed learner families — and
+groups every task into a **bucket** keyed by
+
+    (learner identity, padded N bucket, padded P bucket)
+
+Tasks inside a bucket are shape-compatible after padding, so one jitted
+program (see program.py) serves all of them regardless of which request
+they came from: the serverless-ML lesson (pack many small homogeneous
+work items into few large compiled invocations) applied to the paper's
+M x K x L task grid.
+
+Padding rules per learner family:
+
+  * registry learners that are feature-pad safe: N and P rounded up to
+    the next power of two (``pow2_bucket``) — <2x waste, and the long
+    tail of request shapes collapses onto a handful of programs;
+  * mlp (init scale depends on the true P): N padded, P exact;
+  * opaque callables (legacy ``ServerlessExecutor`` path): exact shapes —
+    we cannot prove padding is inert for arbitrary user code.
+
+The planner is pure bookkeeping (numpy only); execution and the warm
+program cache live in program.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.crossfit import pow2_bucket
+from repro.learners import FEATURE_PAD_SAFE
+
+Entry = Tuple[int, int]                 # (request index, invocation id)
+
+
+@dataclass(frozen=True)
+class BucketKey:
+    """Identity of one megabatch program family."""
+    learner: object                     # Segment.bucket_id (spec or opaque)
+    n_pad: int
+    p_pad: int
+
+
+@dataclass
+class MegabatchPlan:
+    """The lowered view of a batch of requests: every (request, segment)
+    mapped to its bucket, plus lazily-built padded data pages."""
+    requests: Sequence
+    bucket_of: Dict[Tuple[int, int], BucketKey] = field(default_factory=dict)
+    seg_of: Dict[Tuple[int, BucketKey], int] = field(default_factory=dict)
+    _pages: Dict[Tuple[int, int, int], np.ndarray] = field(
+        default_factory=dict)
+
+    # ---- planning shapes -------------------------------------------------
+    @property
+    def buckets(self) -> List[BucketKey]:
+        out: List[BucketKey] = []
+        for key in self.bucket_of.values():
+            if key not in out:
+                out.append(key)
+        return out
+
+    def page(self, req_idx: int, key: BucketKey) -> np.ndarray:
+        """The request's feature page padded to the bucket shape."""
+        pkey = (req_idx, key.n_pad, key.p_pad)
+        page = self._pages.get(pkey)
+        if page is None:
+            x = np.asarray(self.requests[req_idx].x, np.float32)
+            page = np.zeros((key.n_pad, key.p_pad), np.float32)
+            page[:x.shape[0], :x.shape[1]] = x
+            self._pages[pkey] = page
+        return page
+
+    # ---- entry grouping --------------------------------------------------
+    def group_entries(self, entries: Sequence[Entry]) \
+            -> Dict[BucketKey, List[Entry]]:
+        """Group (request, invocation) pairs by their bucket, preserving
+        order (deterministic program launch order)."""
+        groups: Dict[BucketKey, List[Entry]] = {}
+        by_req: Dict[int, List[int]] = {}
+        for ri, inv in entries:
+            by_req.setdefault(ri, []).append(inv)
+        for ri, invs in by_req.items():
+            req = self.requests[ri]
+            seg_idx = req.segment_of_inv(np.asarray(invs, np.int64))
+            for inv, si in zip(invs, seg_idx):
+                key = self.bucket_of[(ri, int(si))]
+                groups.setdefault(key, []).append((ri, int(inv)))
+        return groups
+
+    def pending_by_bucket(self) -> Dict[BucketKey, List[Entry]]:
+        """Every not-yet-DONE invocation of every request, bucketed."""
+        entries: List[Entry] = []
+        for ri, req in enumerate(self.requests):
+            entries.extend((ri, int(inv)) for inv in req.ledger.pending())
+        return self.group_entries(entries)
+
+def plan_buckets(requests: Sequence, *, min_n: int = 8,
+                 min_p: int = 8) -> MegabatchPlan:
+    """Assign every (request, segment) to a megabatch bucket."""
+    plan = MegabatchPlan(requests=list(requests))
+    for ri, req in enumerate(requests):
+        n = int(req.ledger.n_obs)
+        p = int(np.asarray(req.x).shape[1])
+        for si, seg in enumerate(req.segments):
+            if seg.learner is None:            # opaque callable: exact shapes
+                n_pad, p_pad = n, p
+            elif seg.learner in FEATURE_PAD_SAFE:
+                n_pad, p_pad = pow2_bucket(n, min_n), pow2_bucket(p, min_p)
+            else:                              # e.g. mlp: P must stay exact
+                n_pad, p_pad = pow2_bucket(n, min_n), p
+            key = BucketKey(seg.bucket_id, n_pad, p_pad)
+            plan.bucket_of[(ri, si)] = key
+            # first-wins: if two segments of one request collapse onto one
+            # bucket (their *resolved* params are equal), either resolves
+            # the same batched fn — per-task PRNG streams are looked up
+            # via segment_of_inv in run_bucket, never through this map
+            plan.seg_of.setdefault((ri, key), si)
+    return plan

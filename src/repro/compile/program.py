@@ -1,0 +1,184 @@
+"""Megabatch program build, cache, and execution.
+
+A **program** is one jitted function per (bucket, padded batch shape):
+
+    run(pages (D, N_pad, P_pad), data_idx (B,), y (B, N_pad),
+        w (B, N_pad), valid (B, N_pad), key_data (B, ...)) -> (B, N_pad)
+
+It gathers every task's feature page, rebuilds the per-task typed PRNG
+keys, and calls the learner family's ``batched_fit_predict`` — on the
+linear/ridge path that bottoms out in the fused Pallas kernels
+(``batched_gram`` / ``batched_predict`` in kernels/ops.py).  The batch
+axis B and page axis D are themselves pow2-bucketed, so repeat traffic of
+*any* composition hits a previously-compiled program: the warm cache is
+keyed by spec, never by object identity or request.
+
+``ProgramCache`` owns the programs plus hit/miss/padding accounting; the
+execution backends (serverless/backends.py) hold one instance each and
+stay warm across ``run_requests`` calls.  An optional ``partition`` hook
+wraps the program body before jit — ShardedBackend passes a shard_map
+over the batch axis (sharding/policy.py::megabatch_specs).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.crossfit import PaddingStats, pow2_bucket
+from repro.compile.buckets import BucketKey, Entry, MegabatchPlan
+from repro.learners import as_batched, get_batched_learner
+
+
+@dataclass
+class CompileStats:
+    """Warm-cache and padding accounting across program launches."""
+    hits: int = 0
+    misses: int = 0
+    launches: int = 0
+    padding: PaddingStats = field(default_factory=PaddingStats)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def summary(self) -> Dict:
+        return {"programs_compiled": self.misses,
+                "cache_hits": self.hits,
+                "cache_hit_rate": self.hit_rate,
+                "launches": self.launches,
+                "padding_waste_frac": self.padding.waste_frac,
+                "tasks": self.padding.tasks,
+                "padded_tasks": self.padding.padded_tasks}
+
+
+def segment_batched_fn(seg) -> Callable:
+    """Resolve a segment's megabatch implementation: registry learners get
+    their native batched form, opaque callables the vmap adapter."""
+    if seg.learner is not None:
+        return get_batched_learner(seg.learner, dict(seg.params))
+    return as_batched(seg.learner_fn)
+
+
+class ProgramCache:
+    """Spec-keyed cache of compiled megabatch programs.
+
+    Keys are ``(BucketKey, B_pad, D_pad)`` — pure value identity, so two
+    requests built from equal plans share programs, and a session's
+    repeat traffic never re-traces.
+    """
+
+    def __init__(self, partition: Optional[Callable] = None):
+        self._programs: Dict[Tuple, Callable] = {}
+        self.partition = partition
+        self.stats = CompileStats()
+
+    def program(self, key: BucketKey, b_pad: int, d_pad: int,
+                fn_thunk: Callable[[], Callable]) -> Callable:
+        pkey = (key, b_pad, d_pad)
+        prog = self._programs.get(pkey)
+        if prog is not None:
+            self.stats.hits += 1
+            return prog
+        self.stats.misses += 1
+        batched_fn = fn_thunk()
+
+        def run(pages, data_idx, y, w, valid, key_data):
+            xb = pages[data_idx]                       # (B, N_pad, P_pad)
+            keys = jax.random.wrap_key_data(key_data)  # (B,) typed keys
+            return batched_fn(xb, y, w, valid, keys)
+
+        if self.partition is not None:
+            run = self.partition(run)
+        prog = jax.jit(run)
+        self._programs[pkey] = prog
+        return prog
+
+
+def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
+               entries: Sequence[Entry], *, b_align: int = 1,
+               ) -> Tuple[Dict[Entry, np.ndarray], float]:
+    """Execute one bucket slice: stack the entries' tasks into the padded
+    megabatch tensors, launch the (cached) program, and scatter the
+    predictions back per invocation.
+
+    Returns ({(req_idx, inv): preds (tpi, n_obs)}, wall_seconds).
+    """
+    requests = plan.requests
+    n_pad, p_pad = key.n_pad, key.p_pad
+
+    # ---- gather per-entry task rows -------------------------------------
+    rows: List[Tuple[int, int, np.ndarray]] = []
+    for ri, inv in entries:
+        req = requests[ri]
+        rows.append((ri, inv, req.invocation_tasks(inv)))
+    n_tasks = sum(len(t) for _, _, t in rows)
+    b_pad = pow2_bucket(n_tasks, 8)
+    if b_align > 1:                       # shard_map: B divisible by shards
+        b_pad = ((b_pad + b_align - 1) // b_align) * b_align
+
+    # ---- data pages ------------------------------------------------------
+    page_idx: Dict[int, int] = {}
+    pages: List[np.ndarray] = []
+    for ri, _, _ in rows:
+        if ri not in page_idx:
+            page_idx[ri] = len(pages)
+            pages.append(plan.page(ri, key))
+    d_pad = pow2_bucket(len(pages), 1)
+    while len(pages) < d_pad:
+        pages.append(np.zeros((n_pad, p_pad), np.float32))
+    pages_arr = np.stack(pages)
+
+    # ---- stack task tensors ---------------------------------------------
+    def seg_of_entry(ri, inv):
+        """Exact segment of one invocation (robust to two segments of a
+        request collapsing onto one bucket after param resolution)."""
+        return int(requests[ri].segment_of_inv(
+            np.asarray([inv], np.int64))[0])
+
+    first = requests[rows[0][0]]
+    kd_probe = first.task_key_data(
+        seg_of_entry(rows[0][0], rows[0][1]), rows[0][2][:1])
+    y = np.zeros((b_pad, n_pad), np.float32)
+    w = np.zeros((b_pad, n_pad), np.float32)
+    valid = np.zeros((b_pad, n_pad), np.float32)
+    kd = np.zeros((b_pad,) + kd_probe.shape[1:], kd_probe.dtype)
+    didx = np.zeros((b_pad,), np.int32)
+    slices: List[Tuple[int, int, int, int, int]] = []
+    r0 = 0
+    true_cells = 0
+    for ri, inv, tasks in rows:
+        req = requests[ri]
+        n = int(req.ledger.n_obs)
+        ye, we = req.wave_arrays(tasks)
+        k = len(tasks)
+        y[r0:r0 + k, :n] = ye
+        w[r0:r0 + k, :n] = we
+        valid[r0:r0 + k, :n] = 1.0
+        kd[r0:r0 + k] = req.task_key_data(seg_of_entry(ri, inv), tasks)
+        didx[r0:r0 + k] = page_idx[ri]
+        slices.append((ri, inv, r0, k, n))
+        true_cells += k * n
+        r0 += k
+
+    # ---- launch ----------------------------------------------------------
+    seg = requests[rows[0][0]].segments[plan.seg_of[(rows[0][0], key)]]
+    prog = cache.program(key, b_pad, d_pad,
+                         lambda: segment_batched_fn(seg))
+    t0 = time.perf_counter()
+    out = prog(pages_arr, didx, y, w, valid, kd)
+    out = np.asarray(jax.block_until_ready(out), np.float32)
+    wall = time.perf_counter() - t0
+
+    cache.stats.launches += 1
+    cache.stats.padding = cache.stats.padding.merge(PaddingStats(
+        true_cells=true_cells, padded_cells=b_pad * n_pad,
+        tasks=n_tasks, padded_tasks=b_pad))
+
+    results = {(ri, inv): out[a:a + k, :n]
+               for ri, inv, a, k, n in slices}
+    return results, wall

@@ -109,6 +109,13 @@ class TaskGrid:
                     * self.n_nuisance + l[:, None])
         return inv[:, None]
 
+    def segment_invocations(self, l_ids, scaling: str) -> np.ndarray:
+        """Invocation ids owned by a learner segment (both scaling levels
+        place the nuisance index in the low digit) — the unit the megabatch
+        bucket planner groups."""
+        inv = np.arange(self.n_invocations(scaling), dtype=np.int64)
+        return inv[np.isin(inv % self.n_nuisance, np.asarray(l_ids))]
+
     def task_coords(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(m, k, l) arrays of length n_tasks indexed by flat task id."""
         t = np.arange(self.n_tasks, dtype=np.int64)
@@ -116,6 +123,37 @@ class TaskGrid:
         k = (t // self.n_nuisance) % self.n_folds
         m = t // (self.n_nuisance * self.n_folds)
         return m, k, l
+
+
+def pow2_bucket(n: int, min_size: int = 8) -> int:
+    """Smallest power of two >= max(n, min_size) — the shape-bucketing rule
+    the megabatch compiler uses for N, P, batch, and page axes.  Pow2
+    growth bounds padding waste at <2x while collapsing the long tail of
+    request shapes onto a handful of compiled programs."""
+    n = max(int(n), int(min_size))
+    return 1 << (n - 1).bit_length()
+
+
+@dataclass(frozen=True)
+class PaddingStats:
+    """Padding accounting for one set of bucketed program launches."""
+    true_cells: int = 0                 # sum over tasks of their true N
+    padded_cells: int = 0               # sum over launches of B_pad * N_pad
+    tasks: int = 0
+    padded_tasks: int = 0
+
+    def merge(self, other: "PaddingStats") -> "PaddingStats":
+        return PaddingStats(self.true_cells + other.true_cells,
+                            self.padded_cells + other.padded_cells,
+                            self.tasks + other.tasks,
+                            self.padded_tasks + other.padded_tasks)
+
+    @property
+    def waste_frac(self) -> float:
+        """Fraction of padded program cells that carry no real data."""
+        if not self.padded_cells:
+            return 0.0
+        return 1.0 - self.true_cells / self.padded_cells
 
 
 def stitch_predictions(fold_masks: np.ndarray, fold_preds: np.ndarray):

@@ -31,8 +31,8 @@ from repro.core.crossfit import (
     subset_mask,
 )
 from repro.core.scores import evaluate_score, score_se, solve_theta
-from repro.core.spec import DMLData, DMLPlan
-from repro.learners import get_learner
+from repro.core.spec import DMLData, DMLPlan, _hashable
+from repro.learners import resolve_params
 from repro.serverless.backends import (
     BackendRunInfo, ExecutionBackend, PoolConfig, RunReport, Segment,
     WorkRequest, make_backend,
@@ -88,8 +88,10 @@ def compile_request(plan: DMLPlan, data: DMLData,
 
     # one segment per distinct (learner, params): uniform grids fuse into a
     # single batch, mixed grids get one fused batch per learner.  Each
-    # segment draws its own PRNG stream, keyed off the plan seed and the
-    # first nuisance it owns.
+    # segment carries the spec the megabatch compiler buckets on —
+    # hyperparameters resolved against the *data shape* here (e.g.
+    # kernel_ridge's gamma), so padded bucket execution stays
+    # padding-invariant — and the base PRNG key tasks fold_in from.
     groups: List[List[int]] = []
     seen: Dict = {}
     for l, ns in enumerate(plan.nuisances):
@@ -99,17 +101,34 @@ def compile_request(plan: DMLPlan, data: DMLData,
             groups.append([l])
         else:
             groups[gi].append(l)
-    segments = [Segment(learner_fn=get_learner(plan.nuisances[g[0]].learner,
-                                               plan.nuisances[g[0]].param_dict),
-                        l_ids=tuple(g),
-                        key=jax.random.key(rs.seed + g[0]),
-                        cache_key=plan.nuisances[g[0]].learner_key)
-                for g in groups]
+    segments = []
+    for g in groups:
+        ns = plan.nuisances[g[0]]
+        params = resolve_params(ns.learner, ns.param_dict,
+                                n_obs=n, dim_x=data.dim_x)
+        ptuple = tuple(sorted((k, _hashable(v)) for k, v in params.items()))
+        segments.append(Segment(l_ids=tuple(g),
+                                key=jax.random.key(rs.seed + g[0]),
+                                cache_key=(ns.learner, ptuple),
+                                learner=ns.learner, params=ptuple))
 
     req = WorkRequest.create(grid, plan.scaling, data.x, targets, train_w,
                              segments, ledger=ledger, tag=tag)
     req.fold_masks = masks                      # needed for stitching
     return req
+
+
+def compile_raw_request(grid: TaskGrid, scaling: str, x, targets, train_w,
+                        learner_fn, key, *, ledger=None, report=None,
+                        tag: object = None) -> WorkRequest:
+    """Lower a raw-array request (the deprecated ``ServerlessExecutor``
+    call shape) onto the same compiled execution path as plan-built
+    requests: one opaque-callable segment, executed by the megabatch
+    compiler at exact shapes via the vmap adapter."""
+    seg = Segment(learner_fn=learner_fn,
+                  l_ids=tuple(range(grid.n_nuisance)), key=key)
+    return WorkRequest.create(grid, scaling, x, targets, train_w, [seg],
+                              ledger=ledger, report=report, tag=tag)
 
 
 def assemble_result(plan: DMLPlan, data: DMLData, req: WorkRequest,

@@ -1,0 +1,118 @@
+"""Pallas TPU kernels for megabatch (bucketed) cross-fit programs.
+
+The megabatch compiler (repro/compile) stacks tasks from *different*
+requests — hence different datasets — into one ``(B, N_pad, P_pad)``
+tensor, so unlike ``crossfit_gram`` (one shared X, many masks) each task
+here carries its own feature page.  Two kernels cover the hot linear
+path:
+
+``batched_gram_pallas``     per-task masked normal equations
+                            G_b = X_b' diag(w_b) X_b,  b_b = X_b'(w_b*y_b)
+                            accumulated tile-by-tile over the padded N
+                            axis; padded rows carry w == 0 so they are
+                            arithmetically inert.
+``batched_predict_pallas``  the masked GEMV epilogue
+                            preds_b = valid_b * (X_b @ beta_b)
+                            that scatters fitted coefficients back to
+                            per-row predictions, zeroing padding lanes.
+
+Tiling mirrors crossfit_gram.py: grid (task_blocks, n_blocks); per-task X
+tiles (bb, bn, P) live in VMEM; the (bb, P, P) f32 accumulator persists in
+the output block across the inner n-block loop.  P is padded to a
+multiple of 128 (lanes) by the ops.py wrapper; bn is a multiple of 8
+(sublanes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _gram_kernel(x_ref, w_ref, y_ref, g_ref, b_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    x = x_ref[...].astype(F32)                     # (bb, bn, P)
+    w = w_ref[...].astype(F32)                     # (bb, bn)
+    y = y_ref[...].astype(F32)                     # (bb, bn)
+    wx = w[:, :, None] * x                         # (bb, bn, P)
+    # batched MXU contraction over the bn axis, one matmul per task lane
+    g_ref[...] += jax.lax.dot_general(
+        wx, x, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=F32)
+    b_ref[...] += jnp.einsum("bn,bnp->bp", w * y, x,
+                             preferred_element_type=F32)
+
+
+def batched_gram_pallas(xs, w, y, *, block_b: int = 8, block_n: int = 256,
+                        interpret: bool = False):
+    """xs: (B, N, P); w, y: (B, N) -> (G (B,P,P) f32, b (B,P) f32).
+
+    N must be a multiple of block_n and B of block_b (wrapper pads).
+    """
+    b_dim, n, p = xs.shape
+    assert n % block_n == 0 and b_dim % block_b == 0, \
+        (b_dim, n, block_b, block_n)
+    grid = (b_dim // block_b, n // block_n)
+    g, bv = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, p, p), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_b, p), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, p, p), F32),
+            jax.ShapeDtypeStruct((b_dim, p), F32),
+        ],
+        interpret=interpret,
+    )(xs, w, y)
+    return g, bv
+
+
+def _predict_kernel(x_ref, beta_ref, v_ref, o_ref):
+    x = x_ref[...].astype(F32)                     # (bb, bn, P)
+    beta = beta_ref[...].astype(F32)               # (bb, P)
+    v = v_ref[...].astype(F32)                     # (bb, bn)
+    # per-task GEMV on the MXU: (bb, bn, P) x (bb, P) -> (bb, bn)
+    pred = jax.lax.dot_general(
+        x, beta, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=F32)
+    o_ref[...] = pred * v                          # mask padding lanes
+
+
+def batched_predict_pallas(xs, beta, valid, *, block_b: int = 8,
+                           block_n: int = 256, interpret: bool = False):
+    """xs: (B, N, P); beta: (B, P); valid: (B, N) -> preds (B, N) f32.
+
+    The masked GEMM/predict epilogue: rows with valid == 0 (padding)
+    output exactly 0.  N must be a multiple of block_n, B of block_b.
+    """
+    b_dim, n, p = xs.shape
+    assert n % block_n == 0 and b_dim % block_b == 0, \
+        (b_dim, n, block_b, block_n)
+    grid = (b_dim // block_b, n // block_n)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_b, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, n), F32),
+        interpret=interpret,
+    )(xs, beta, valid)

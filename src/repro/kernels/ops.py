@@ -18,6 +18,7 @@ from repro import runtime
 from repro.kernels import ref
 from repro.kernels.crossfit_gram import crossfit_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.megabatch import batched_gram_pallas, batched_predict_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -69,6 +70,62 @@ def crossfit_gram(x, w, y, reg: float = 0.0):
     if reg:
         g = g + reg * jnp.eye(p0, dtype=g.dtype)
     return g, b
+
+
+@functools.partial(jax.jit, static_argnames=("reg",))
+def batched_gram(xs, w, y, reg: float = 0.0):
+    """Per-task masked normal equations with per-task features.
+
+    xs: (B, N, P); w/y: (B, N).  Returns G (B,P,P) f32, b (B,P) f32 —
+    sliced back to the true P after lane padding.  The megabatch analogue
+    of ``crossfit_gram`` for buckets that mix datasets.
+    """
+    if not _use_pallas():
+        return ref.batched_gram_ref(xs, w, y, reg)
+    b_dim, n, p = xs.shape
+    block_n = 256 if n >= 256 else 8
+    xp, _ = _pad_to(xs, 2, 128)          # lane-align features
+    p0 = p
+    xp, _ = _pad_to(xp, 1, block_n)      # N to a block multiple
+    padn = xp.shape[1] - n
+    if padn:                              # padded rows get zero weight
+        w = jnp.pad(w, ((0, 0), (0, padn)))
+        y = jnp.pad(y, ((0, 0), (0, padn)))
+    xp, b0 = _pad_to(xp, 0, 8)           # task-batch to sublane multiple
+    w, _ = _pad_to(w, 0, 8)
+    y, _ = _pad_to(y, 0, 8)
+    g, bv = batched_gram_pallas(xp, w, y, block_b=8, block_n=block_n,
+                                interpret=_interpret())
+    g = g[:b0, :p0, :p0]
+    bv = bv[:b0, :p0]
+    if reg:
+        g = g + reg * jnp.eye(p0, dtype=g.dtype)
+    return g, bv
+
+
+@jax.jit
+def batched_predict(xs, beta, valid):
+    """Masked per-task GEMV epilogue: valid_b * (X_b @ beta_b).
+
+    xs: (B, N, P); beta: (B, P); valid: (B, N) -> (B, N) f32 with padding
+    rows exactly 0.
+    """
+    if not _use_pallas():
+        return ref.batched_predict_ref(xs, beta, valid)
+    b_dim, n, p = xs.shape
+    block_n = 256 if n >= 256 else 8
+    xp, _ = _pad_to(xs, 2, 128)
+    bp, _ = _pad_to(beta, 1, 128)
+    xp, n0 = _pad_to(xp, 1, block_n)
+    padn = xp.shape[1] - n
+    if padn:
+        valid = jnp.pad(valid, ((0, 0), (0, padn)))
+    xp, b0 = _pad_to(xp, 0, 8)
+    bp, _ = _pad_to(bp, 0, 8)
+    valid, _ = _pad_to(valid, 0, 8)
+    out = batched_predict_pallas(xp, bp, valid, block_b=8, block_n=block_n,
+                                 interpret=_interpret())
+    return out[:b0, :n0]
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

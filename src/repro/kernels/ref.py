@@ -28,6 +28,29 @@ def crossfit_gram_ref(x, w, y, reg: float = 0.0):
     return g, b
 
 
+def batched_gram_ref(xs, w, y, reg: float = 0.0):
+    """Per-task masked Gram with per-task features (megabatch buckets).
+
+    xs: (B, N, P) per-task feature pages; w/y: (B, N).  Returns
+    (G (B,P,P), b (B,P)) with G_b = X_b' diag(w_b) X_b + reg*I and
+    b_b = X_b'(w_b*y_b).  Padded rows must carry w == 0.
+    """
+    xf = xs.astype(F32)
+    wf = w.astype(F32)
+    yf = y.astype(F32)
+    g = jnp.einsum("bnp,bn,bnq->bpq", xf, wf, xf)
+    if reg:
+        g = g + reg * jnp.eye(xs.shape[-1], dtype=F32)
+    b = jnp.einsum("bn,bnp->bp", wf * yf, xf)
+    return g, b
+
+
+def batched_predict_ref(xs, beta, valid):
+    """Masked per-task GEMV: preds_b = valid_b * (X_b @ beta_b)."""
+    pred = jnp.einsum("bnp,bp->bn", xs.astype(F32), beta.astype(F32))
+    return pred * valid.astype(F32)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None):
     """Masked softmax attention oracle.

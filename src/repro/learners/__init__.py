@@ -1,3 +1,9 @@
-from repro.learners.base import LearnerFn, get_learner, LEARNERS
+from repro.learners.base import (
+    BATCHED_LEARNERS, FEATURE_PAD_SAFE, LEARNERS, LearnerFn, as_batched,
+    get_batched_learner, get_learner, resolve_params,
+)
 
-__all__ = ["LearnerFn", "get_learner", "LEARNERS"]
+__all__ = [
+    "LearnerFn", "get_learner", "get_batched_learner", "as_batched",
+    "resolve_params", "LEARNERS", "BATCHED_LEARNERS", "FEATURE_PAD_SAFE",
+]

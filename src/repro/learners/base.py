@@ -1,13 +1,21 @@
 """Learner registry.
 
-A learner is a batched pure function
-    fn(x (N,P), y (T,N), w (T,N), key) -> preds (T,N)
-operating on the fold-mask task batch (paper: one scikit-learn fit per
-lambda; here: the whole task batch in fused/vmapped form).
+Every family registers two pure functions:
 
-``get_learner(name, params)`` binds hyperparameters.  Classification-capable
-learners accept ``classify=True`` via params (used for IRM/IIVM propensity
-nuisances).
+  shared-X form   fn(x (N,P), y (T,N), w (T,N), key) -> preds (T,N)
+                  the fold-mask task batch over one dataset (paper: one
+                  scikit-learn fit per lambda; here: fused/vmapped).
+  megabatch form  fn(xs (B,N,P), y (B,N), w (B,N), valid (B,N), keys (B,))
+                  -> preds (B,N) — per-task feature pages with padding
+                  masks, executed by the bucketed programs the compiler
+                  (repro/compile) builds.  ``keys`` is a (B,) typed key
+                  array (one PRNG stream per task).
+
+``get_learner`` / ``get_batched_learner`` bind hyperparameters.
+``resolve_params`` binds data-dependent defaults (e.g. kernel_ridge's
+gamma) at *compile* time so padded execution is padding-invariant.
+Classification-capable learners accept ``classify=True`` via params (used
+for IRM/IIVM propensity nuisances).
 """
 from __future__ import annotations
 
@@ -16,12 +24,16 @@ from typing import Callable, Dict, Mapping
 
 import jax
 
-from repro.learners.kernel_ridge import kernel_ridge_fit_predict
-from repro.learners.linear import (
-    lasso_fit_predict, logistic_fit_predict, ols_fit_predict,
-    ridge_fit_predict,
+from repro.learners.kernel_ridge import (
+    kernel_ridge_batched_fit_predict, kernel_ridge_fit_predict,
 )
-from repro.learners.mlp import mlp_fit_predict
+from repro.learners.linear import (
+    lasso_batched_fit_predict, lasso_fit_predict,
+    logistic_batched_fit_predict, logistic_fit_predict,
+    ols_batched_fit_predict, ols_fit_predict,
+    ridge_batched_fit_predict, ridge_fit_predict,
+)
+from repro.learners.mlp import mlp_batched_fit_predict, mlp_fit_predict
 
 LearnerFn = Callable
 
@@ -35,12 +47,46 @@ LEARNERS: Dict[str, Callable] = {
     "mlp": mlp_fit_predict,
 }
 
+BATCHED_LEARNERS: Dict[str, Callable] = {
+    "ols": ols_batched_fit_predict,
+    "ridge": ridge_batched_fit_predict,
+    "lasso": lasso_batched_fit_predict,
+    "logistic": logistic_batched_fit_predict,
+    "kernel_ridge": kernel_ridge_batched_fit_predict,
+    "mlp": mlp_batched_fit_predict,
+}
 
-def get_learner(name: str, params: Mapping | None = None) -> LearnerFn:
-    if name not in LEARNERS:
-        raise KeyError(f"unknown learner {name!r}; known: {list(LEARNERS)}")
+# Families whose megabatch form is invariant to zero-padded feature lanes
+# (linear algebra sees inert columns; kernel_ridge's rbf distances ignore
+# zero columns once gamma is resolved).  mlp is excluded: its init scale
+# is sqrt(2/P), so the bucket planner keeps mlp buckets at the exact P.
+FEATURE_PAD_SAFE = frozenset(
+    {"ols", "ridge", "lasso", "logistic", "kernel_ridge"})
+
+
+def resolve_params(name: str, params: Mapping | None, *, n_obs: int,
+                   dim_x: int) -> Dict:
+    """Bind data-dependent hyperparameter defaults at compile time.
+
+    The megabatch programs run on padded shapes, so any default derived
+    from the *data* shape (kernel_ridge's gamma = 1/P, landmark count
+    capped by N) must be pinned to the true shape before bucketing —
+    otherwise padding would leak into the estimate.
+    """
     params = dict(params or {})
-    fn = LEARNERS[name]
+    if name == "kernel_ridge":
+        if params.get("gamma") is None:
+            params["gamma"] = 1.0 / dim_x
+        params["n_landmarks"] = min(params.get("n_landmarks", 128), n_obs)
+    return params
+
+
+def _bind(table: Dict[str, Callable], name: str,
+          params: Mapping | None) -> LearnerFn:
+    if name not in table:
+        raise KeyError(f"unknown learner {name!r}; known: {list(table)}")
+    params = dict(params or {})
+    fn = table[name]
     if name in ("ols", "ridge", "lasso") and params.pop("classify", False):
         # linear probability model for propensities: fit as regression,
         # clip in the score (scores.py clips) — the DoubleML-compatible path.
@@ -48,3 +94,24 @@ def get_learner(name: str, params: Mapping | None = None) -> LearnerFn:
     if params:
         fn = functools.partial(fn, **params)
     return fn
+
+
+def get_learner(name: str, params: Mapping | None = None) -> LearnerFn:
+    return _bind(LEARNERS, name, params)
+
+
+def get_batched_learner(name: str, params: Mapping | None = None) -> LearnerFn:
+    """Resolve the megabatch form: fn(xs, y, w, valid, keys) -> preds."""
+    return _bind(BATCHED_LEARNERS, name, params)
+
+
+def as_batched(fn: Callable) -> Callable:
+    """Adapt an opaque shared-X learner callable to the megabatch
+    signature (one vmap lane per task, per-task key streams) — the
+    fallback for user-supplied learner functions that never registered a
+    batched form (legacy ``ServerlessExecutor`` path)."""
+    def batched(xs, y, w, valid, keys):
+        return jax.vmap(
+            lambda x1, y1, w1, k1: fn(x1, y1[None], w1[None], k1)[0]
+        )(xs, y, w, keys)
+    return batched

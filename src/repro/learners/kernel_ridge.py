@@ -1,6 +1,13 @@
 """Nyström kernel ridge — the TPU-friendly stand-in for the paper's random
 forest (DESIGN.md §2 "Changed assumptions"): nonparametric capacity with
 MXU-shaped math.  RBF features via m landmarks, then the fused ridge path.
+
+Landmark selection is a Gumbel top-k over the valid rows, with one scalar
+Gumbel drawn per row from fold_in(key, row): the draw depends only on
+(key, row index) — never on the array length — so the megabatch form is
+*padding-invariant*: appending masked padding rows cannot change which
+landmarks are chosen.  (A single shaped gumbel(key, (n,)) draw would not
+give this: jax's bit generation depends on the full requested shape.)
 """
 from __future__ import annotations
 
@@ -8,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.learners.linear import ridge_fit_predict
+from repro.learners.linear import ridge_batched_fit_predict, ridge_fit_predict
 
 F32 = jnp.float32
 
@@ -19,14 +26,29 @@ def _rbf(a, b, gamma: float):
     return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
 
 
+def _landmark_idx(key, n: int, m: int, valid=None):
+    """m row indices drawn uniformly without replacement (Gumbel top-k),
+    restricted to valid rows when a mask is given.  Per-row fold_in
+    streams keep the draw independent of n (padding-invariant)."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+    gz = jax.vmap(lambda k: jax.random.gumbel(k, ()))(keys)
+    if valid is not None:
+        gz = jnp.where(valid > 0, gz, -jnp.inf)
+    _, idx = jax.lax.top_k(gz, m)
+    return idx
+
+
 def nystrom_features(x, key, *, n_landmarks: int = 128,
-                     gamma: float | None = None):
-    """phi(x) (N, m) with K ~= phi phi^T."""
+                     gamma: float | None = None, valid=None):
+    """phi(x) (N, m) with K ~= phi phi^T.
+
+    ``valid`` (N,) restricts landmark candidates to real rows (megabatch
+    padding); callers must keep n_landmarks <= #valid rows.
+    """
     x = x.astype(F32)
     n, p = x.shape
     m = min(n_landmarks, n)
-    idx = jax.random.choice(key, n, (m,), replace=False)
-    lm = x[idx]
+    lm = x[_landmark_idx(key, n, m, valid)]
     if gamma is None:
         gamma = 1.0 / p            # sklearn's "scale"-ish default
     kmm = _rbf(lm, lm, gamma) + 1e-6 * jnp.eye(m, dtype=F32)
@@ -43,3 +65,18 @@ def kernel_ridge_fit_predict(x, y, w, key, *, reg: float = 1.0,
                              gamma: float | None = None):
     phi = nystrom_features(x, key, n_landmarks=n_landmarks, gamma=gamma)
     return ridge_fit_predict(phi, y, w, reg=reg, intercept=True)
+
+
+def kernel_ridge_batched_fit_predict(xs, y, w, valid, keys, *,
+                                     reg: float = 1.0,
+                                     n_landmarks: int = 128,
+                                     gamma: float | None = None):
+    """Megabatch Nyström ridge: per-task landmarks (per-task keys), then
+    the fused batched ridge on the feature pages."""
+    def feat(x1, v1, k1):
+        return nystrom_features(x1, k1, n_landmarks=n_landmarks,
+                                gamma=gamma, valid=v1)
+
+    phi = jax.vmap(feat)(xs, valid, keys)
+    return ridge_batched_fit_predict(phi, y, w, valid, reg=reg,
+                                     intercept=True)

@@ -1,9 +1,19 @@
 """Linear nuisance learners on batched masked fits.
 
-Every learner has the batched signature
-    fn(x (N,P), y (T,N), w (T,N), key) -> preds (T,N)
-where w holds per-task training weights (0 on the held-out fold).  Fits are
-fused across tasks (the crossfit_gram kernel / batched linear algebra), the
+Two entry points per family (learners/base.py registers both):
+
+  shared-X form   fn(x (N,P), y (T,N), w (T,N), key) -> preds (T,N)
+                  all T tasks share one dataset; w holds per-task training
+                  weights (0 on the held-out fold).
+  megabatch form  fn(xs (B,N,P), y (B,N), w (B,N), valid (B,N), keys (B,))
+                  -> preds (B,N) — every task carries its own (padded)
+                  feature page, so one compiled program serves tasks from
+                  many requests/datasets at once (repro/compile buckets).
+                  ``valid`` marks real observation rows (0 = N-padding);
+                  training weights are already 0 on padded rows, and
+                  predictions on padded rows are returned as exactly 0.
+
+Fits are fused across tasks (crossfit_gram / batched_gram kernels), the
 paper's M*K*L task grid collapsing into MXU batch dimensions.
 """
 from __future__ import annotations
@@ -45,15 +55,53 @@ def ols_fit_predict(x, y, w, key=None, *, intercept: bool = True):
     return ridge_fit_predict(x, y, w, key, reg=1e-8, intercept=intercept)
 
 
-def lasso_fit_predict(x, y, w, key=None, *, reg: float = 0.01,
-                      n_iter: int = 200, intercept: bool = True):
-    """FISTA on the weighted lasso; fixed iteration count (vmappable).
+# ---------------------------------------------------------------------------
+# megabatch (per-task feature page) forms
+# ---------------------------------------------------------------------------
+def _augment_b(xs):
+    """Add intercept column to every task page: (B,N,P) -> (B,N,P+1)."""
+    ones = jnp.ones(xs.shape[:2] + (1,), xs.dtype)
+    return jnp.concatenate([xs, ones], axis=-1)
 
-    reg is the l1 penalty on standardized features, per-observation scale.
+
+def _solve_spd(g, b):
+    """Batched SPD solve via Cholesky: g (B,P,P), b (B,P) -> (B,P)."""
+    chol = jax.vmap(jnp.linalg.cholesky)(g)
+    return jax.vmap(lambda c, bb: jax.scipy.linalg.cho_solve((c, True), bb))(
+        chol, b)
+
+
+def ridge_batched_fit_predict(xs, y, w, valid, keys=None, *, reg: float = 1.0,
+                              intercept: bool = True):
+    """Closed-form weighted ridge over a megabatch bucket.
+
+    Padded feature lanes (zero columns) get beta == 0 under the ridge
+    penalty and padded rows carry w == 0, so padding never leaks into the
+    fit — the bucketed result equals the unpadded fit to float precision.
     """
-    xa = _augment(x) if intercept else x
-    n, p = xa.shape
-    g, b = ops.crossfit_gram(xa, w, y)                        # (T,P,P),(T,P)
+    xa = _augment_b(xs) if intercept else xs
+    g, b = ops.batched_gram(xa, w, y, reg=float(reg))
+    if intercept and reg:
+        p = xa.shape[-1]
+        g = g.at[:, p - 1, p - 1].add(-float(reg) + 1e-8)
+    beta = _solve_spd(g, b)
+    return ops.batched_predict(xa, beta, valid)
+
+
+def ols_batched_fit_predict(xs, y, w, valid, keys=None, *,
+                            intercept: bool = True):
+    return ridge_batched_fit_predict(xs, y, w, valid, keys, reg=1e-8,
+                                     intercept=intercept)
+
+
+def _fista_beta(g, b, w, *, reg: float, intercept: bool, n_iter: int):
+    """FISTA on per-task normal equations (shared by both lasso forms).
+
+    g (T,P,P), b (T,P) unnormalized moments; w (T,N) training weights
+    (used only for the per-observation normalization).  Fixed iteration
+    count so the whole solve stays vmappable/jittable.
+    """
+    p = g.shape[-1]
     nw = jnp.maximum(jnp.sum(w, axis=1), 1.0)                 # (T,)
     g = g / nw[:, None, None]
     b = b / nw[:, None]
@@ -83,10 +131,37 @@ def lasso_fit_predict(x, y, w, key=None, *, reg: float = 0.01,
         zeta = beta_new + ((tk - 1.0) / tk1) * (beta_new - beta)
         return (beta_new, zeta, tk1), None
 
-    beta0 = jnp.zeros((w.shape[0], p), F32)
+    beta0 = jnp.zeros((g.shape[0], p), F32)
     (beta, _, _), _ = jax.lax.scan(body, (beta0, beta0, jnp.ones((), F32)),
                                    None, length=n_iter)
+    return beta
+
+
+def lasso_fit_predict(x, y, w, key=None, *, reg: float = 0.01,
+                      n_iter: int = 200, intercept: bool = True):
+    """FISTA on the weighted lasso; fixed iteration count (vmappable).
+
+    reg is the l1 penalty on standardized features, per-observation scale.
+    """
+    xa = _augment(x) if intercept else x
+    g, b = ops.crossfit_gram(xa, w, y)                        # (T,P,P),(T,P)
+    beta = _fista_beta(g, b, w, reg=reg, intercept=intercept, n_iter=n_iter)
     return jnp.einsum("np,tp->tn", xa, beta)
+
+
+def lasso_batched_fit_predict(xs, y, w, valid, keys=None, *,
+                              reg: float = 0.01, n_iter: int = 200,
+                              intercept: bool = True):
+    """Megabatch lasso: identical FISTA solve on per-task feature pages.
+
+    Padded feature lanes see zero gradient and the l1 penalty keeps their
+    beta at exactly 0; padded rows carry w == 0 and drop out of the
+    moments, so bucketing is invisible to the estimate.
+    """
+    xa = _augment_b(xs) if intercept else xs
+    g, b = ops.batched_gram(xa, w, y)
+    beta = _fista_beta(g, b, w, reg=reg, intercept=intercept, n_iter=n_iter)
+    return ops.batched_predict(xa, beta, valid)
 
 
 def logistic_fit_predict(x, y, w, key=None, *, reg: float = 1.0,
@@ -115,3 +190,36 @@ def logistic_fit_predict(x, y, w, key=None, *, reg: float = 1.0,
         return jax.nn.sigmoid(xf @ beta)
 
     return jax.vmap(one)(y.astype(F32), w.astype(F32))
+
+
+def logistic_batched_fit_predict(xs, y, w, valid, keys=None, *,
+                                 reg: float = 1.0, n_iter: int = 32,
+                                 intercept: bool = True):
+    """Megabatch IRLS logistic: per-task Newton solves on per-task pages.
+
+    The s-smoothing term (1e-6) adds a vanishing curvature on padded rows
+    and the l2 penalty keeps padded-lane betas near 0; predictions on
+    padded rows are masked to exactly 0 on return.
+    """
+    xa = _augment_b(xs) if intercept else xs
+    p = xa.shape[-1]
+
+    def one(xf, yt, wt):
+        xf = xf.astype(F32)
+        beta = jnp.zeros((p,), F32)
+        eye = jnp.eye(p, dtype=F32) * reg
+
+        def newton(beta, _):
+            eta = xf @ beta
+            mu = jax.nn.sigmoid(eta)
+            s = wt * mu * (1.0 - mu) + 1e-6
+            grad = xf.T @ (wt * (mu - yt)) + reg * beta
+            hess = jnp.einsum("np,n,nq->pq", xf, s, xf) + eye
+            delta = jax.scipy.linalg.solve(hess, grad, assume_a="pos")
+            return beta - delta, None
+
+        beta, _ = jax.lax.scan(newton, beta, None, length=n_iter)
+        return jax.nn.sigmoid(xf @ beta)
+
+    probs = jax.vmap(one)(xa, y.astype(F32), w.astype(F32))
+    return probs * valid.astype(F32)

@@ -35,18 +35,10 @@ def _fwd(params, x):
     return h[..., 0]
 
 
-def mlp_fit_predict(x, y, w, key, *, hidden=(64, 64), lr: float = 3e-3,
-                    n_steps: int = 300, classify: bool = False):
-    """x (N,P); y/w (T,N) -> preds (T,N)."""
-    x = x.astype(F32)
-    mu = jnp.mean(x, 0)
-    sd = jnp.std(x, 0) + 1e-8
-    xs = (x - mu) / sd
-    t = y.shape[0]
-    keys = jax.random.split(key, t)
-
+def _train_one_fn(xs, hidden, lr, n_steps, classify):
+    """Build the single-task trainer closed over standardized features."""
     def train_one(yt, wt, k):
-        params = _init_mlp(k, x.shape[1], tuple(hidden))
+        params = _init_mlp(k, xs.shape[1], tuple(hidden))
         m0 = jax.tree.map(jnp.zeros_like, params)
         v0 = jax.tree.map(jnp.zeros_like, params)
 
@@ -75,4 +67,42 @@ def mlp_fit_predict(x, y, w, key, *, hidden=(64, 64), lr: float = 3e-3,
         pred = _fwd(params, xs)
         return jax.nn.sigmoid(pred) if classify else pred
 
+    return train_one
+
+
+def mlp_fit_predict(x, y, w, key, *, hidden=(64, 64), lr: float = 3e-3,
+                    n_steps: int = 300, classify: bool = False):
+    """x (N,P); y/w (T,N) -> preds (T,N)."""
+    x = x.astype(F32)
+    mu = jnp.mean(x, 0)
+    sd = jnp.std(x, 0) + 1e-8
+    xs = (x - mu) / sd
+    t = y.shape[0]
+    keys = jax.random.split(key, t)
+    train_one = _train_one_fn(xs, hidden, lr, n_steps, classify)
     return jax.vmap(train_one)(y.astype(F32), w.astype(F32), keys)
+
+
+def mlp_batched_fit_predict(xs, y, w, valid, keys, *, hidden=(64, 64),
+                            lr: float = 3e-3, n_steps: int = 300,
+                            classify: bool = False):
+    """Megabatch form: every task trains on its own (padded) feature page.
+
+    Standardization uses masked moments over the valid rows only, so
+    padding rows (zero features, zero weight) never shift mu/sd and the
+    padded fit matches the unpadded one; per-task keys come from the
+    compiler (fold_in of the request seed by flat task id), making results
+    independent of bucket composition and wave schedule.
+    """
+    def one(x1, yt, wt, v1, k):
+        x1 = x1.astype(F32)
+        nv = jnp.maximum(jnp.sum(v1), 1.0)
+        mu = jnp.sum(x1 * v1[:, None], 0) / nv
+        var = jnp.sum(v1[:, None] * (x1 - mu) ** 2, 0) / nv
+        sd = jnp.sqrt(var) + 1e-8
+        x1 = (x1 - mu) / sd * v1[:, None]      # padding rows stay exactly 0
+        train_one = _train_one_fn(x1, hidden, lr, n_steps, classify)
+        return train_one(yt, wt, k) * v1
+
+    return jax.vmap(one)(xs, y.astype(F32), w.astype(F32),
+                         valid.astype(F32), keys)

@@ -74,6 +74,21 @@ def _route(p, m: MoEConfig, x_flat, e_pad: int):
     return top_w, top_e, aux
 
 
+def _capacity(t: int, m: MoEConfig, e_pad: int) -> int:
+    """Per-expert token capacity for a dispatch pool of ``t`` tokens.
+
+    Serving-size pools (t <= 256) are dropless — every token can land on a
+    single expert.  One rule shared by the local and EP paths: the a2a
+    block used to apply the trained-capacity formula to its *local* shard
+    pool, which dropped tokens the dropless oracle kept (the jax-0.4.x
+    "a2a mismatch" was never the exchange, it was this).
+    """
+    if t <= 256:
+        return t
+    return max(int(np.ceil(t * m.top_k / e_pad * m.capacity_factor)),
+               m.top_k)
+
+
 def _expert_mlp(wi, wo, h, act: str):
     """h: (E, C, d) grouped tokens -> (E, C, d)."""
     uv = jnp.einsum("ecd,edgf->ecgf", h, wi)
@@ -118,11 +133,7 @@ def _moe_local(p, cfg: ArchConfig, x, e_pad: int):
     xf = x.reshape(-1, d)
     t = xf.shape[0]
     top_w, top_e, aux = _route(p, m, xf, e_pad)
-    if t <= 256:      # serving-size batches: dropless (capacity = all tokens)
-        cap = t
-    else:
-        cap = max(int(np.ceil(t * m.top_k / e_pad * m.capacity_factor)),
-                  m.top_k)
+    cap = _capacity(t, m, e_pad)
     buf, se, pos_c, st, sw, keep = _capacity_dispatch(xf, top_w, top_e, e_pad, cap)
     y_buf = _expert_mlp(p["wi"], p["wo"], buf, cfg.act)
     y = _combine(y_buf, se, pos_c, st, sw, keep, t, cap)
@@ -143,7 +154,7 @@ def _moe_a2a(p, cfg: ArchConfig, x, e_pad: int, mesh, ep_axis: str,
         xf = xb.reshape(-1, d)
         t = xf.shape[0]
         top_w, top_e, aux = _route({"router": router_w}, m, xf, e_pad)
-        cap = max(int(np.ceil(t * m.top_k / e_pad * m.capacity_factor)), m.top_k)
+        cap = _capacity(t, m, e_pad)
         buf, se, pos_c, st, sw, keep = _capacity_dispatch(
             xf, top_w, top_e, e_pad, cap)
         # (E, cap, d) -> exchange: every shard keeps rows for its local experts

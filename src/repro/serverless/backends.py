@@ -1,32 +1,40 @@
-"""The pluggable execution layer: one task grid, three substrates.
+"""The pluggable execution layer: one task grid, three thin schedulers.
 
 A ``WorkRequest`` is the compiled form of one estimation request: the task
 grid, the fused arrays (targets, training weights), one or more
 ``Segment``s (contiguous learner groups — mixed-learner grids such as IRM
 carry one segment per distinct learner), and a durable ``TaskLedger``.
 
-An ``ExecutionBackend`` consumes a *batch* of WorkRequests and fills their
-ledgers.  All backends emit the same ``RunReport``/``TaskLedger``
-artifacts, so fault tolerance, billing, and resume behave identically at
-the API layer regardless of substrate:
+Execution goes through the **megabatch compiler** (repro/compile): the
+union of every pending request's tasks is bucketed by (learner family,
+padded N, padded P), stacked into ``(B, N_pad, P_pad)`` tensors with
+validity masks, and run by one jitted program per bucket (Pallas
+batched_gram / batched_predict on the hot linear path).  Each backend is
+a thin scheduler over those compiled buckets:
 
   WaveBackend     the serverless-analogue wave scheduler (paper §4):
                   capacity-limited waves, fault injection + retries,
                   straggler speculation, elastic worker schedules, Lambda
-                  billing.  Waves are SHARED across requests — many
-                  concurrent estimations ride the same dispatch cycles
-                  (the batch-processing cost lever).
-  ShardedBackend  one SPMD program per segment: the task grid laid over a
-                  jax Mesh via shard_map (launch/mesh.py), tasks sharded
-                  over the "data" axis, x replicated.
-  InlineBackend   single fused vmap call per segment — the pure reference
-                  implementation tests compare against.
+                  billing.  Waves are SHARED across requests — a wave's
+                  lanes map onto bucket slices, so one warm program
+                  serves every task of a bucket regardless of which
+                  request it came from.
+  ShardedBackend  the same bucket programs shard_map'd over the mesh's
+                  "data" axis (sharding/policy.py::megabatch_specs),
+                  pages replicated, the task-batch axis sharded.
+  InlineBackend   each bucket drained in one direct program call — the
+                  reference scheduler tests compare against.
 
-Determinism contract: a task's prediction depends only on (x, target,
-weights, learner) for deterministic learners, so every backend — and every
-wave composition, fault pattern, or shard count — produces identical
-predictions.  Key-consuming learners (mlp) are reproducible per backend
-but not bit-identical across backends.
+All backends emit the same ``RunReport``/``TaskLedger`` artifacts, so
+fault tolerance, billing, and resume behave identically at the API layer,
+and each holds a persistent spec-keyed ``ProgramCache`` so repeat traffic
+through a ``DMLSession`` never re-traces.
+
+Determinism contract: every task draws its PRNG stream as
+fold_in(segment seed, flat task id) at *compile* time, so predictions are
+independent of backend, bucket composition, wave schedule, fault pattern,
+and shard count — bitwise, for every learner family including the
+key-consuming ones (mlp, kernel_ridge).
 """
 from __future__ import annotations
 
@@ -44,7 +52,26 @@ from repro.serverless.cost import Bill, BillingRecord, speedup_of
 from repro.serverless.ledger import DONE, TaskLedger
 
 if TYPE_CHECKING:       # avoid the core <-> serverless import cycle
+    from repro.compile import CompileStats, ProgramCache
     from repro.core.crossfit import TaskGrid
+
+
+def _compile():
+    """Deferred import of the megabatch compiler.
+
+    repro.compile reaches into repro.core.crossfit whose package __init__
+    imports this module (spec.py needs BACKEND_NAMES), so the compiler
+    must load lazily — at which point the cycle is already resolved.
+    """
+    import repro.compile as compile_mod
+    return compile_mod
+
+
+@jax.jit
+def _fold_key_table(base_key, ids):
+    """(n,) task ids -> (n, key_width) key data via per-id fold_in."""
+    return jax.vmap(
+        lambda i: jax.random.key_data(jax.random.fold_in(base_key, i)))(ids)
 
 
 # ---------------------------------------------------------------------------
@@ -108,15 +135,32 @@ class Segment:
 
     ``l_ids`` are the nuisance indices this segment owns; its invocations
     are exactly those with ``inv % L in l_ids`` (both scaling levels place
-    l in the low digit of the invocation id).  ``cache_key`` is a hashable
-    identity of (learner, params) — requests built from equal specs share
-    warm compiled programs; when absent, backends fall back to object
-    identity.
+    l in the low digit of the invocation id).
+
+    ``learner``/``params`` name a registry learner with compile-time
+    resolved hyperparameters — the megabatch compiler buckets on them and
+    resolves the family's ``batched_fit_predict``.  ``learner_fn`` is the
+    legacy opaque-callable path (ServerlessExecutor): such segments run
+    through the vmap adapter at exact shapes.  ``cache_key`` is the hashable
+    spec identity — requests built from equal specs share warm compiled
+    programs; when absent, buckets fall back to object identity.
+
+    ``key`` seeds the segment's PRNG: task t draws fold_in(key, t), fixed
+    at compile time so no schedule can perturb the estimate.
     """
-    learner_fn: Callable
-    l_ids: Tuple[int, ...]
-    key: jax.Array
+    learner_fn: Optional[Callable] = None
+    l_ids: Tuple[int, ...] = ()
+    key: Optional[jax.Array] = None
     cache_key: Optional[Tuple] = None
+    learner: Optional[str] = None
+    params: Tuple = ()
+
+    @property
+    def bucket_id(self):
+        """Value identity when the spec is known, object identity else."""
+        if self.cache_key is not None:
+            return self.cache_key
+        return ("opaque", id(self.learner_fn))
 
 
 @dataclass
@@ -174,6 +218,27 @@ class WorkRequest:
         _, _, _, _, seg_of_l = self._index_maps()
         return seg_of_l[np.asarray(inv) % self.grid.n_nuisance]
 
+    def invocation_tasks(self, inv: int) -> np.ndarray:
+        """Flat task ids of one invocation (tpi,)."""
+        return self._index_maps()[0][int(inv)]
+
+    def task_key_data(self, seg_idx: int, flat_tasks: np.ndarray) -> np.ndarray:
+        """Per-task PRNG key data: fold_in(segment key, flat task id).
+
+        Fixed at compile time and cached per segment, so a task's stream
+        is identical however buckets, waves, retries, or shards slice the
+        grid — the determinism contract for key-consuming learners.
+        """
+        if not hasattr(self, "_key_tables"):
+            self._key_tables: Dict[int, np.ndarray] = {}
+        table = self._key_tables.get(seg_idx)
+        if table is None:
+            base = self.segments[seg_idx].key
+            table = np.asarray(_fold_key_table(
+                base, jnp.arange(self.grid.n_tasks)))
+            self._key_tables[seg_idx] = table
+        return table[np.asarray(flat_tasks, np.int64)]
+
     def wave_arrays(self, flat_tasks: np.ndarray):
         """Gather (targets, weights) rows for flat task ids."""
         _, tm, tk, tl = self._index_maps()[:4]
@@ -214,6 +279,8 @@ class BackendRunInfo:
     backend: str
     waves: int = 0
     wave_members: List[List[object]] = field(default_factory=list)
+    buckets: int = 0                    # distinct megabatch buckets drained
+    compile: Optional[CompileStats] = None   # backend's warm-cache stats
 
     @property
     def shared_waves(self) -> int:
@@ -235,80 +302,83 @@ def _fill_rows(req: WorkRequest, inv_ids: np.ndarray, wall: float,
             invocation=int(inv), duration_s=per, memory_mb=pool.memory_mb))
 
 
-def _run_segment_pending(req: WorkRequest, call, pool: PoolConfig):
-    """Drive every pending invocation of ``req`` through ``call`` — one
-    fused evaluation per segment.  ``call(req, seg, y, w, key) ->
-    (B*tpi, N)``.  Shared by Inline and Sharded backends (they differ only
-    in how the fused call executes)."""
-    pending = req.ledger.pending()
-    if not len(pending):
-        return
-    task_mat = req._index_maps()[0]
-    tpi = req.grid.tasks_per_invocation(req.scaling)
-    n_obs = req.ledger.n_obs
-    seg_idx = req.segment_of_inv(pending)
+def _drain_compiled(requests: Sequence[WorkRequest], cache: ProgramCache,
+                    pool: PoolConfig, info: BackendRunInfo, *,
+                    b_align: int = 1):
+    """Drain every pending invocation of every request through the
+    megabatch compiler: one program launch per bucket, all requests
+    fused.  Shared by the Inline and Sharded backends (they differ only
+    in the partitioner their ProgramCache wraps programs with)."""
+    comp = _compile()
+    plan = comp.plan_buckets(requests)
+    groups = plan.pending_by_bucket()
+    info.buckets = len(groups)
+    info.compile = cache.stats
     t_all = time.perf_counter()
-    for si, seg in enumerate(req.segments):
-        inv_ids = pending[seg_idx == si]
-        if not len(inv_ids):
-            continue
-        flat = task_mat[inv_ids].reshape(-1)
-        y, w = req.wave_arrays(flat)
-        seg.key, sub = jax.random.split(seg.key)
-        t0 = time.perf_counter()
-        preds = call(req, seg, jnp.asarray(y), jnp.asarray(w), sub)
-        preds = np.asarray(jax.block_until_ready(preds), np.float32)
-        wall = time.perf_counter() - t0
-        preds = preds.reshape(len(inv_ids), tpi, n_obs)
-        for i, inv in enumerate(inv_ids):
-            req.ledger.record_success(int(inv), preds[i])
-        _fill_rows(req, inv_ids, wall, pool)
-        req.report.waves += 1
-        req.report.wave_sizes.append(len(inv_ids))
+    touched = set()
+    for bkey, entries in groups.items():
+        results, wall = comp.run_bucket(plan, cache, bkey, entries,
+                                        b_align=b_align)
+        info.waves += 1
+        per_req: Dict[int, List[int]] = {}
+        for ri, inv in entries:
+            per_req.setdefault(ri, []).append(inv)
+        for ri, invs in per_req.items():
+            req = requests[ri]
+            for inv in invs:
+                req.ledger.record_success(int(inv), results[(ri, inv)])
+            _fill_rows(req, np.asarray(invs),
+                       wall * len(invs) / len(entries), pool)
+            req.report.waves += 1
+            req.report.wave_sizes.append(len(invs))
+            touched.add(ri)
     total = time.perf_counter() - t_all
-    req.report.fit_time_s += total
-    req.report.response_time_s += total
-    if pool.checkpoint_path:
-        req.ledger.save(pool.checkpoint_path)
+    for ri in touched:
+        requests[ri].report.fit_time_s += total
+        requests[ri].report.response_time_s += total
+        if pool.checkpoint_path:
+            # same layout as WaveBackend: per-request suffix when batched
+            path = pool.checkpoint_path if len(requests) == 1 \
+                else f"{pool.checkpoint_path}.r{ri}"
+            requests[ri].ledger.save(path)
 
 
 # ---------------------------------------------------------------------------
-# InlineBackend — pure fused-vmap reference
+# InlineBackend — direct bucket drain, the reference scheduler
 # ---------------------------------------------------------------------------
 class InlineBackend:
-    """The whole pending grid in one fused call per segment.  No faults,
-    no waves, no capacity limit: the oracle the other backends must
-    agree with."""
+    """Every pending bucket in one direct program call.  No faults, no
+    capacity limit: the oracle the other schedulers must agree with."""
     name = "inline"
 
     def __init__(self, pool: Optional[PoolConfig] = None):
         self.pool = pool or PoolConfig()
+        self.compiler = _compile().ProgramCache()
+
+    @property
+    def _programs(self) -> Dict:
+        return self.compiler._programs
 
     def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
         info = BackendRunInfo(backend=self.name)
-        for req in requests:
-            _run_segment_pending(
-                req,
-                lambda r, seg, y, w, key: seg.learner_fn(r.x, y, w, key),
-                self.pool)
-            info.waves += req.report.waves
+        _drain_compiled(requests, self.compiler, self.pool, info)
         return info
 
 
 # ---------------------------------------------------------------------------
-# ShardedBackend — SPMD over a device mesh
+# ShardedBackend — the bucket programs SPMD over a device mesh
 # ---------------------------------------------------------------------------
 class ShardedBackend:
-    """The task grid as one SPMD program: tasks sharded over the mesh's
-    "data" axis via shard_map, x replicated on every device.  Reuses
-    launch/mesh.py meshes; stays warm across requests (jitted programs are
-    cached per learner)."""
+    """The same megabatch programs with the task-batch axis shard_map'd
+    over the mesh's "data" axis (pages replicated on every device;
+    sharding/policy.py::megabatch_specs).  Reuses launch/mesh.py meshes;
+    stays warm across requests via the spec-keyed ProgramCache."""
     name = "sharded"
 
     def __init__(self, pool: Optional[PoolConfig] = None, mesh=None):
         self.pool = pool or PoolConfig()
         self._mesh = mesh
-        self._programs: Dict[object, Callable] = {}
+        self._compiler: Optional[ProgramCache] = None
 
     @property
     def mesh(self):
@@ -320,43 +390,29 @@ class ShardedBackend:
     def _n_shards(self) -> int:
         return int(self.mesh.shape["data"])
 
-    def _program(self, seg: Segment) -> Callable:
-        key = seg.cache_key if seg.cache_key is not None \
-            else id(seg.learner_fn)
-        prog = self._programs.get(key)
-        if prog is None:
-            from jax.sharding import PartitionSpec as P
+    @property
+    def compiler(self) -> ProgramCache:
+        if self._compiler is None:
             from repro.sharding.compat import shard_map_compat
-            fn = seg.learner_fn
+            from repro.sharding.policy import megabatch_specs
+            in_specs, out_specs = megabatch_specs("data")
+            mesh = self.mesh
 
-            def shard_fn(x, y, w, key_data):
-                return fn(x, y, w, jax.random.wrap_key_data(key_data))
+            def partition(fn):
+                return shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
+                                        out_specs=out_specs)
 
-            prog = jax.jit(shard_map_compat(
-                shard_fn, mesh=self.mesh,
-                in_specs=(P(), P("data"), P("data"), P()),
-                out_specs=P("data")))
-            self._programs[key] = prog
-        return prog
+            self._compiler = _compile().ProgramCache(partition=partition)
+        return self._compiler
+
+    @property
+    def _programs(self) -> Dict:
+        return self.compiler._programs
 
     def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
         info = BackendRunInfo(backend=self.name)
-        n_shards = self._n_shards()
-
-        def call(req, seg, y, w, key):
-            # pad the task axis to the shard count (zero-weight rows are
-            # inert: the learners reduce them to the regularizer solution)
-            t = y.shape[0]
-            t_pad = ((t + n_shards - 1) // n_shards) * n_shards
-            if t_pad != t:
-                y = jnp.pad(y, ((0, t_pad - t), (0, 0)))
-                w = jnp.pad(w, ((0, t_pad - t), (0, 0)))
-            out = self._program(seg)(req.x, y, w, jax.random.key_data(key))
-            return out[:t]
-
-        for req in requests:
-            _run_segment_pending(req, call, self.pool)
-            info.waves += req.report.waves
+        _drain_compiled(requests, self.compiler, self.pool, info,
+                        b_align=self._n_shards())
         return info
 
 
@@ -377,7 +433,10 @@ class WaveBackend:
     One *invocation* = the paper's lambda call; each wave dispatches up to
     ``n_workers * lanes_per_worker`` invocations drawn round-robin from
     every request's pending set, so concurrent estimations share dispatch
-    cycles (fused waves).  Per wave the scheduler:
+    cycles (fused waves).  A wave's lanes are then grouped by megabatch
+    bucket and executed as one compiled program launch per bucket — one
+    warm "worker program" serves every task of a bucket regardless of
+    which request it came from.  Per wave the scheduler:
 
       * injects faults (per-request Philox streams) and re-queues failures
         (Lambda retry, first-attempt only so retries converge),
@@ -386,23 +445,32 @@ class WaveBackend:
       * re-reads the worker count (elastic shrink/grow),
       * checkpoints every participating ledger.
 
-    Billing: measured (wall time of a request's fused call divided over its
-    lanes) or modeled via the Lambda memory/vCPU curve (simulate=True).
+    Billing: measured (a request's share of its buckets' program wall
+    time divided over its lanes) or modeled via the Lambda memory/vCPU
+    curve (simulate=True).
     """
     name = "wave"
 
     def __init__(self, pool: Optional[PoolConfig] = None):
         self.pool = pool or PoolConfig()
+        self.compiler = _compile().ProgramCache()
+
+    @property
+    def _programs(self) -> Dict:
+        return self.compiler._programs
 
     def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
         pool = self.pool
         info = BackendRunInfo(backend=self.name)
+        plan = _compile().plan_buckets(requests)
+        info.compile = self.compiler.stats
         # per-request fault streams: request 0 reproduces the single-request
         # executor draw-for-draw
         rngs = [np.random.Generator(np.random.Philox(key=pool.seed + i))
                 for i in range(len(requests))]
         t_start = time.perf_counter()
         wave = 0
+        seen_buckets = set()
         while True:
             pendings = [req.ledger.pending() for req in requests]
             if all(len(p) == 0 for p in pendings):
@@ -431,7 +499,7 @@ class WaveBackend:
                 dispatch += [_Entry(e.req_idx, e.inv, True)
                              for e in batch[:min(spare, len(batch))]]
 
-            # ---- execute: one fused call per (request, segment) ---------
+            # ---- execute: one compiled launch per bucket in the wave ----
             members: List[object] = []
             for e in dispatch:
                 tag = requests[e.req_idx].tag
@@ -439,12 +507,28 @@ class WaveBackend:
                 if tag not in members:
                     members.append(tag)
             info.wave_members.append(members)
+            unique: Dict[Tuple[int, int], None] = {}
+            for e in dispatch:              # speculative lanes share results
+                unique.setdefault((e.req_idx, e.inv))
+            results: Dict[Tuple[int, int], np.ndarray] = {}
+            wall_of_req: Dict[int, float] = {}
+            for bkey, ents in plan.group_entries(list(unique)).items():
+                seen_buckets.add(bkey)
+                res, bwall = _compile().run_bucket(plan, self.compiler,
+                                                   bkey, ents)
+                results.update(res)
+                per = bwall / len(ents)
+                for ri, _ in ents:
+                    wall_of_req[ri] = wall_of_req.get(ri, 0.0) + per
             for ri, req in enumerate(requests):
                 entries = [e for e in dispatch if e.req_idx == ri]
                 if not entries:
                     continue
-                self._run_request_wave(req, entries, rngs[ri], pool, wave)
+                self._book_request_wave(req, ri, entries, results,
+                                        rngs[ri], pool,
+                                        wall_of_req.get(ri, 0.0))
             wave += 1
+            info.buckets = len(seen_buckets)
             info.waves = wave
             if pool.checkpoint_path:
                 for i, req in enumerate(requests):
@@ -465,30 +549,21 @@ class WaveBackend:
         return info
 
     # ------------------------------------------------------------------
-    def _run_request_wave(self, req: WorkRequest, entries: List[_Entry],
-                          rng, pool: PoolConfig, wave: int):
-        """Dispatch one request's share of a wave and book the results."""
-        task_mat = req._index_maps()[0]
+    def _book_request_wave(self, req: WorkRequest, ri: int,
+                           entries: List[_Entry], results: Dict,
+                           rng, pool: PoolConfig, wall: float):
+        """Book one request's share of a wave: billing, fault injection,
+        retries, speculation.  Predictions were already computed by the
+        wave's bucket launches (``results``) — scheduling chaos can only
+        reorder work, never change an estimate."""
         tpi = req.grid.tasks_per_invocation(req.scaling)
         n_obs = req.ledger.n_obs
         ledger, report = req.ledger, req.report
         inv_arr = np.array([e.inv for e in entries], np.int64)
-        seg_idx = req.segment_of_inv(inv_arr)
 
         preds_rows = np.empty((len(entries), tpi, n_obs), np.float32)
-        wall = 0.0
-        for si, seg in enumerate(req.segments):
-            sel = np.where(seg_idx == si)[0]
-            if not len(sel):
-                continue
-            flat = task_mat[inv_arr[sel]].reshape(-1)
-            y, w = req.wave_arrays(flat)
-            seg.key, sub = jax.random.split(seg.key)
-            t0 = time.perf_counter()
-            preds = seg.learner_fn(req.x, jnp.asarray(y), jnp.asarray(w), sub)
-            preds = np.asarray(jax.block_until_ready(preds), np.float32)
-            wall += time.perf_counter() - t0
-            preds_rows[sel] = preds.reshape(len(sel), tpi, n_obs)
+        for i, e in enumerate(entries):
+            preds_rows[i] = results[(ri, e.inv)]
 
         # --- per-invocation durations (measured or simulated) ------------
         if pool.simulate:

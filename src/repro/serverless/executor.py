@@ -2,14 +2,16 @@
 
 The wave scheduler now lives in ``repro.serverless.backends.WaveBackend``
 (together with the Sharded and Inline backends) and natively batches many
-requests into shared waves.  ``ServerlessExecutor`` is kept as a thin
-adapter for the legacy call shape
+requests into shared waves over the megabatch compiler.
+``ServerlessExecutor`` is kept as a thin adapter for the legacy call shape
 
     executor = ServerlessExecutor(learner_fn, grid, pool)
     preds, ledger, report = executor.run(x, targets, train_w, key)
 
-``PoolConfig`` and ``RunReport`` are re-exported from backends for
-backward compatibility.
+Request assembly lives in ``core.session.compile_raw_request`` — the same
+single execution path every front-end uses; this module no longer builds
+``WorkRequest``s itself.  ``PoolConfig`` and ``RunReport`` are re-exported
+from backends for backward compatibility.
 """
 from __future__ import annotations
 
@@ -58,10 +60,9 @@ class ServerlessExecutor:
 
         Returns (preds (M,K,L,N), ledger, report).
         """
-        seg = Segment(learner_fn=self.learner_fn,
-                      l_ids=tuple(range(self.grid.n_nuisance)), key=key)
-        req = WorkRequest.create(self.grid, self.pool.scaling, x, targets,
-                                 train_w, [seg], ledger=ledger,
-                                 report=report)
+        from repro.core.session import compile_raw_request
+        req = compile_raw_request(self.grid, self.pool.scaling, x, targets,
+                                  train_w, self.learner_fn, key,
+                                  ledger=ledger, report=report)
         WaveBackend(self.pool).run_requests([req])
         return req.gathered_preds(), req.ledger, req.report

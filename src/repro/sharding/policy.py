@@ -48,6 +48,22 @@ VARIANTS: Dict[str, Variant] = {v.name: v for v in [
 ]}
 
 
+def megabatch_specs(batch_axis: str = "data"):
+    """PartitionSpecs for a megabatch bucket program (repro/compile).
+
+    The program signature is (pages, data_idx, y, w, valid, key_data) ->
+    preds; pages (the per-request feature pages) are replicated so every
+    shard can gather any task's dataset, and every per-task tensor is
+    sharded along the task-batch axis — the compiler pads B to a multiple
+    of the shard count.
+    """
+    from jax.sharding import PartitionSpec as P
+    in_specs = (P(), P(batch_axis), P(batch_axis), P(batch_axis),
+                P(batch_axis), P(batch_axis))
+    out_specs = P(batch_axis)
+    return in_specs, out_specs
+
+
 def apply_variant(arch_name: str, shape_kind: str, d_model: int,
                   variant: str):
     v = VARIANTS[variant]

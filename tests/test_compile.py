@@ -1,0 +1,229 @@
+"""Megabatch compiler: bucket planning edge cases, padding parity, and the
+warm spec-keyed program cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compile import plan_buckets, run_bucket
+from repro.core import DMLData, DMLPlan, DMLSession, TaskGrid, estimate
+from repro.core.crossfit import PaddingStats, pow2_bucket
+from repro.core.session import compile_raw_request, compile_request
+from repro.data import make_irm_data, make_plr_data
+from repro.learners import get_batched_learner, get_learner
+from repro.serverless import InlineBackend, PoolConfig, WaveBackend
+
+
+def _plr(n_obs, seed, *, n_folds=3, n_rep=2, learner="ridge", **kw):
+    data = DMLData.from_dict(make_plr_data(n_obs=n_obs, dim_x=5, theta=0.5,
+                                           seed=seed))
+    plan = DMLPlan.for_model("plr", learner=learner,
+                             learner_params=kw.pop("learner_params",
+                                                   {"reg": 1.0}),
+                             n_folds=n_folds, n_rep=n_rep, seed=seed + 100,
+                             **kw)
+    return plan, data
+
+
+# ---------------------------------------------------------------------------
+# bucket planning
+# ---------------------------------------------------------------------------
+def test_pow2_bucket_rule():
+    assert pow2_bucket(1) == 8           # floor
+    assert pow2_bucket(8) == 8
+    assert pow2_bucket(9) == 16
+    assert pow2_bucket(100) == 128
+    assert pow2_bucket(128) == 128
+
+
+def test_mixed_n_requests_share_one_bucket():
+    """Requests with different N in the same pow2 bucket share a program;
+    mixed learner families (IRM ridge + logistic) split buckets."""
+    reqs = [compile_request(*_plr(n, seed=i))
+            for i, n in enumerate((90, 100, 120))]
+    plan = plan_buckets(reqs)
+    assert len(plan.buckets) == 1                      # all pad to N=128
+    key = plan.buckets[0]
+    assert key.n_pad == 128 and key.p_pad == 8
+    assert plan.page(0, key).shape == (128, 8)
+
+    irm_data = DMLData.from_dict(make_irm_data(n_obs=100, dim_x=4, theta=0.4,
+                                               seed=5))
+    irm_plan = DMLPlan.for_model("irm", learner="ridge",
+                                 learner_params={"reg": 1.0}, n_folds=3,
+                                 n_rep=2, seed=9)
+    plan2 = plan_buckets(reqs + [compile_request(irm_plan, irm_data)])
+    # ridge buckets fuse across PLR+IRM; logistic propensity is its own
+    assert len(plan2.buckets) == 2
+
+
+def test_pending_by_bucket_skips_done_rows():
+    req = compile_request(*_plr(100, seed=0))
+    InlineBackend().run_requests([req])
+    assert req.ledger.complete
+    plan = plan_buckets([req])
+    assert plan.pending_by_bucket() == {}
+
+
+def test_opaque_callable_buckets_use_exact_shapes():
+    grid = TaskGrid(2, 3, 2)
+    n, p = 101, 5
+    rng = np.random.default_rng(0)
+    from repro.core.crossfit import draw_fold_masks
+    masks = draw_fold_masks(n, 3, 2, 0)
+    train_w = np.repeat((~masks).astype(np.float32)[:, :, None], 2, axis=2)
+    req = compile_raw_request(
+        grid, "n_rep", rng.normal(size=(n, p)).astype(np.float32),
+        rng.normal(size=(2, n)).astype(np.float32), train_w,
+        get_learner("ridge", {"reg": 1.0}), jax.random.key(0))
+    plan = plan_buckets([req])
+    key = plan.buckets[0]
+    assert (key.n_pad, key.p_pad) == (n, p)            # no padding proof
+
+
+def test_single_task_buckets_execute():
+    """Per-fold scaling with n_rep=1: every invocation is a single task;
+    buckets of size 1 still pad, compile, and round-trip correctly."""
+    plan, data = _plr(60, seed=3, n_rep=1, scaling="n_folds*n_rep")
+    req = compile_request(plan, data)
+    bplan = plan_buckets([req])
+    (bkey,) = bplan.buckets
+    from repro.compile import ProgramCache
+    cache = ProgramCache()
+    results, _ = run_bucket(bplan, cache, bkey, [(0, 0)])
+    assert results[(0, 0)].shape == (1, data.n_obs)
+    ref = estimate(plan, data, backend="inline")
+    wav = estimate(plan, data, backend="wave")
+    np.testing.assert_allclose(ref.theta, wav.theta, rtol=0, atol=1e-7)
+
+
+def test_ragged_folds_parity():
+    """K does not divide N: fold sizes differ by one; bucketed execution
+    must agree with the inline reference exactly."""
+    plan, data = _plr(101, seed=4, n_folds=3)
+    req_i = compile_request(plan, data)
+    InlineBackend().run_requests([req_i])
+    req_w = compile_request(plan, data)
+    WaveBackend(PoolConfig(n_workers=2, memory_mb=256)).run_requests([req_w])
+    np.testing.assert_allclose(req_w.gathered_preds(),
+                               req_i.gathered_preds(), rtol=1e-6, atol=1e-6)
+
+
+def test_irm_subset_masks_shrink_effective_n():
+    """IRM's d0/d1 nuisances train on strict subsets; the padded-masked
+    bucket fits must agree with the inline reference."""
+    data = DMLData.from_dict(make_irm_data(n_obs=150, dim_x=4, theta=0.4,
+                                           seed=6))
+    plan = DMLPlan.for_model("irm", learner="ridge", n_folds=3, n_rep=2,
+                             seed=11)
+    req = compile_request(plan, data)
+    # subset weights really shrink the training rows
+    w_all = req.train_w[0, 0, 2]                     # ml_m: subset "all"
+    w_d1 = req.train_w[0, 0, 1]                      # ml_g1: subset d1
+    assert w_d1.sum() < w_all.sum()
+    req_i = compile_request(plan, data)
+    InlineBackend().run_requests([req_i])
+    req_w = compile_request(plan, data)
+    WaveBackend(PoolConfig(n_workers=3, memory_mb=256)).run_requests([req_w])
+    np.testing.assert_allclose(req_w.gathered_preds(),
+                               req_i.gathered_preds(), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# padded-masked fit parity, every learner family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,params,tol", [
+    ("ridge", {"reg": 1.0}, 1e-5),
+    ("ols", {}, 1e-5),
+    ("lasso", {"reg": 0.01}, 1e-4),
+    ("logistic", {"reg": 1.0}, 1e-5),
+    ("kernel_ridge", {"reg": 1.0, "n_landmarks": 32, "gamma": 0.2}, 1e-5),
+    ("mlp", {"hidden": (8,), "n_steps": 30}, 1e-4),
+])
+def test_padded_masked_fit_matches_unpadded(name, params, tol):
+    """The compiler's contract: padding rows (valid=0, w=0) and padded
+    feature lanes never move a fit.  Exact parity (to float reduction
+    order) on every learner family, key-consuming ones included."""
+    rng = np.random.default_rng(0)
+    B, N, P = 6, 100, 5
+    xs = rng.normal(size=(B, N, P)).astype(np.float32)
+    y = rng.normal(size=(B, N)).astype(np.float32)
+    w = (rng.random((B, N)) > 0.3).astype(np.float32)
+    if name == "logistic":
+        y = (y > 0).astype(np.float32)
+    valid = np.ones((B, N), np.float32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(7), i))(
+        jnp.arange(B))
+    fn = get_batched_learner(name, params)
+
+    def pad(a, n_extra, p_extra=0):
+        if a.ndim == 3:
+            return np.pad(a, ((0, 0), (0, n_extra), (0, p_extra)))
+        return np.pad(a, ((0, 0), (0, n_extra)))
+
+    p_extra = 0 if name == "mlp" else 3      # mlp buckets at exact P
+    out = np.asarray(fn(jnp.asarray(xs), jnp.asarray(y), jnp.asarray(w),
+                        jnp.asarray(valid), keys))
+    outp = np.asarray(fn(jnp.asarray(pad(xs, 28, p_extra)),
+                         jnp.asarray(pad(y, 28)), jnp.asarray(pad(w, 28)),
+                         jnp.asarray(pad(valid, 28)), keys))
+    np.testing.assert_allclose(outp[:, :N], out, rtol=tol, atol=tol)
+    assert float(np.abs(outp[:, N:]).max()) == 0.0   # masked tail exact 0
+
+
+# ---------------------------------------------------------------------------
+# warm program cache + padding accounting
+# ---------------------------------------------------------------------------
+def test_program_cache_hits_on_repeat_traffic():
+    """Repeat traffic through a session re-uses compiled programs: the
+    second run() of same-bucket requests traces nothing new."""
+    sess = DMLSession(backend="wave", pool=PoolConfig(n_workers=8))
+    sess.submit(*_plr(90, seed=1))
+    sess.submit(*_plr(100, seed=2))
+    sess.run()
+    stats = sess.backend.compiler.stats
+    misses_first = stats.misses
+    assert misses_first >= 1
+    assert sess.last_run_info.buckets == 1           # N=90/100 fused
+    sess.submit(*_plr(95, seed=3))                   # new N, same bucket
+    sess.submit(*_plr(121, seed=4))                  # pads to 128 too
+    sess.run()
+    assert stats.misses == misses_first              # zero new traces
+    assert stats.hits > 0
+    assert 0.0 < stats.hit_rate <= 1.0
+
+
+def test_padding_stats_accounting():
+    s = PaddingStats(true_cells=80, padded_cells=100, tasks=8,
+                     padded_tasks=16)
+    assert s.waste_frac == pytest.approx(0.2)
+    merged = s.merge(PaddingStats(20, 100, 2, 4))
+    assert merged.true_cells == 100 and merged.padded_cells == 200
+    assert PaddingStats().waste_frac == 0.0
+
+
+def test_multi_request_checkpoints_do_not_clobber(tmp_path):
+    """Batched inline/sharded drains write one checkpoint per request
+    (same .r{i} layout as the wave backend), never one shared file."""
+    import os
+    path = os.path.join(tmp_path, "ck")
+    from repro.serverless import TaskLedger
+    reqs = [compile_request(*_plr(n, seed=i)) for i, n in enumerate((90, 70))]
+    InlineBackend(PoolConfig(checkpoint_path=path)).run_requests(reqs)
+    for i, req in enumerate(reqs):
+        led = TaskLedger.load(f"{path}.r{i}")
+        assert led.complete and led.n_obs == req.ledger.n_obs
+    # single request: bare path, as before
+    req = compile_request(*_plr(80, seed=9))
+    InlineBackend(PoolConfig(checkpoint_path=path)).run_requests([req])
+    assert TaskLedger.load(path).n_obs == 80
+
+
+def test_backend_info_reports_compile_stats():
+    req = compile_request(*_plr(100, seed=8))
+    backend = InlineBackend()
+    info = backend.run_requests([req])
+    assert info.compile is not None
+    assert info.compile.launches >= 1
+    assert info.compile.padding.padded_tasks >= info.compile.padding.tasks
+    assert 0.0 <= info.compile.padding.waste_frac < 1.0

@@ -8,6 +8,9 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.crossfit_gram import crossfit_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.megabatch import (
+    batched_gram_pallas, batched_predict_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
@@ -65,6 +68,65 @@ def test_gram_additivity_over_disjoint_masks(seed):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(b[0] + b[1]), np.asarray(b[2]),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# megabatch kernels (per-task feature pages)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n,p,bn", [
+    (8, 128, 8, 8), (16, 256, 16, 128), (8, 64, 24, 8),
+])
+def test_batched_gram_sweep(b, n, p, bn):
+    k = jax.random.key(b + n + p)
+    xs = jax.random.normal(k, (b, n, p), jnp.float32)
+    w = (jax.random.uniform(jax.random.fold_in(k, 1), (b, n)) > 0.4) \
+        .astype(jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(k, 2), (b, n), jnp.float32)
+    xs_pad = jnp.pad(xs, ((0, 0), (0, 0), (0, 128 - p)))
+    g, bv = batched_gram_pallas(xs_pad, w, y, block_b=8, block_n=bn,
+                                interpret=True)
+    g0, b0 = ref.batched_gram_ref(xs, w, y)
+    scale = max(float(jnp.max(jnp.abs(g0))), 1.0)
+    assert float(jnp.max(jnp.abs(g[:, :p, :p] - g0))) / scale < 2e-4
+    bscale = max(float(jnp.max(jnp.abs(b0))), 1.0)
+    assert float(jnp.max(jnp.abs(bv[:, :p] - b0))) / bscale < 2e-4
+
+
+def test_batched_gram_matches_crossfit_gram_on_shared_x():
+    """A bucket whose tasks all share one dataset must reproduce the
+    shared-X crossfit_gram kernel exactly (same math, new layout)."""
+    k = jax.random.key(3)
+    n, p, t = 128, 8, 8
+    x = jax.random.normal(k, (n, p), jnp.float32)
+    w = (jax.random.uniform(jax.random.fold_in(k, 1), (t, n)) > 0.3) \
+        .astype(jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(k, 2), (t, n), jnp.float32)
+    xs = jnp.broadcast_to(x, (t, n, p))
+    xs_pad = jnp.pad(xs, ((0, 0), (0, 0), (0, 128 - p)))
+    g, bv = batched_gram_pallas(xs_pad, w, y, block_b=8, block_n=8,
+                                interpret=True)
+    g0, b0 = ref.crossfit_gram_ref(x, w, y)
+    np.testing.assert_allclose(np.asarray(g[:, :p, :p]), np.asarray(g0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(bv[:, :p]), np.asarray(b0),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,n,p,bn", [(8, 128, 8, 8), (16, 256, 32, 128)])
+def test_batched_predict_masks_padding(b, n, p, bn):
+    k = jax.random.key(b * n + p)
+    xs = jax.random.normal(k, (b, n, p), jnp.float32)
+    beta = jax.random.normal(jax.random.fold_in(k, 1), (b, p), jnp.float32)
+    valid = (jax.random.uniform(jax.random.fold_in(k, 2), (b, n)) > 0.25) \
+        .astype(jnp.float32)
+    xs_pad = jnp.pad(xs, ((0, 0), (0, 0), (0, 128 - p)))
+    beta_pad = jnp.pad(beta, ((0, 0), (0, 128 - p)))
+    o = batched_predict_pallas(xs_pad, beta_pad, valid, block_b=8,
+                               block_n=bn, interpret=True)
+    o0 = ref.batched_predict_ref(xs, beta, valid)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o0), rtol=1e-4,
+                               atol=1e-4)
+    assert float(jnp.max(jnp.abs(jnp.where(valid == 0, o, 0.0)))) == 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -73,11 +73,6 @@ print(json.dumps({"rel_err": err / scale}))
 """
 
 
-@pytest.mark.xfail(
-    reason="a2a exchange numerically off vs the local oracle on jax 0.4.x "
-           "(pre-existing; see ROADMAP open items — needs an all_to_all "
-           "semantics audit in models/moe.py::_moe_a2a)",
-    strict=False)
 def test_ep_a2a_matches_local_oracle():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
