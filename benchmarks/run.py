@@ -11,9 +11,13 @@ derived (the paper-relevant figure for that table).
 
 The ``megabatch`` benchmark additionally writes machine-readable
 ``BENCH_megabatch.json`` (tasks/sec before/after the compiler, waves,
-padding waste %, compile-cache hit rate) so the perf trajectory is
-tracked across PRs; ``--smoke`` runs just that at CI size and fails
-loudly if the compiler stops beating the per-segment path.
+padding waste %, compile-cache hit rate) and the ``asyncdrain`` benchmark
+writes ``BENCH_asyncdrain.json`` (steady-state tasks/sec, page-pool hit
+rate, transfer bytes saved, padding waste, bitwise parity vs the inline
+path) so the perf trajectory is tracked across PRs; ``--smoke`` runs both
+at CI size and fails loudly if the compiler regresses below the
+per-segment path, the page pool stops serving steady traffic from device
+residency, or async results drift from the synchronous path.
 """
 from __future__ import annotations
 
@@ -27,15 +31,16 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI gate: megabatch benchmark only, small sizes, "
-                         "exit nonzero if the compiler regresses below the "
-                         "per-segment baseline")
+                    help="CI gate: megabatch + asyncdrain benchmarks only, "
+                         "small sizes, exit nonzero on compiler/page-pool/"
+                         "parity regressions")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--megabatch-json", default="BENCH_megabatch.json")
+    ap.add_argument("--asyncdrain-json", default="BENCH_asyncdrain.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke:
-        only = {"megabatch"}
+        only = {"megabatch", "asyncdrain"}
         args.fast = True
 
     from benchmarks import paper_tables as T
@@ -97,9 +102,25 @@ def main() -> None:
                      f"tasks_per_sec={mb['tasks_per_sec']:.0f}_"
                      f"speedup_vs_pr1={mb['speedup_cold']:.1f}x_"
                      f"hit_rate={mb['compile_cache_hit_rate']:.2f}_"
-                     f"waste={mb['padding_waste_pct']:.0f}%"))
+                     f"waste={mb['padding_waste_pct']:.0f}%_"
+                     f"b_waste={mb['padding_waste_b_pct']:.0f}%"
+                     f"(pow2_was_{mb['padding_waste_b_pow2_pct']:.0f}%)"))
         with open(args.megabatch_json, "w") as f:
             json.dump(mb, f, indent=1, default=float)
+
+    if want("asyncdrain"):
+        ad = T.async_drain(n_requests_per_family=1, n_rep=2,
+                           rounds=3 if args.fast else 5)
+        results["asyncdrain"] = ad
+        rows.append(("asyncdrain_steady_round",
+                     ad["steady_s"] / ad["rounds"] * 1e6,
+                     f"tasks_per_sec={ad['steady_tasks_per_sec']:.0f}_"
+                     f"page_hit_rate={ad['page_pool_hit_rate']:.2f}_"
+                     f"h2d_bytes={ad['page_bytes_h2d_steady']}_"
+                     f"saved_bytes={ad['transfer_bytes_saved']}_"
+                     f"parity={ad['bitwise_parity_all']}"))
+        with open(args.asyncdrain_json, "w") as f:
+            json.dump(ad, f, indent=1, default=float)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -111,13 +132,28 @@ def main() -> None:
 
     if args.smoke:
         mb = results["megabatch"]
+        ad = results["asyncdrain"]
+        fail = None
         if mb["speedup_cold"] < 1.0:
-            print(f"SMOKE FAIL: megabatch cold speedup "
-                  f"{mb['speedup_cold']:.2f}x < 1x vs per-segment baseline",
-                  file=sys.stderr)
+            fail = (f"megabatch cold speedup {mb['speedup_cold']:.2f}x < 1x "
+                    "vs per-segment baseline")
+        elif ad["page_pool_hit_rate"] < 0.9:
+            fail = (f"page-pool steady hit rate "
+                    f"{ad['page_pool_hit_rate']:.2f} < 0.9")
+        elif ad["page_bytes_h2d_steady"] != 0:
+            fail = (f"steady-state drains re-transferred "
+                    f"{ad['page_bytes_h2d_steady']} bytes host->device")
+        elif not ad["bitwise_parity_all"]:
+            bad = [k for k, v in ad["bitwise_parity"].items() if not v]
+            fail = f"async vs inline bitwise parity broken for {bad}"
+        if fail:
+            print(f"SMOKE FAIL: {fail}", file=sys.stderr)
             sys.exit(1)
         print(f"SMOKE OK: megabatch {mb['speedup_cold']:.1f}x cold / "
-              f"{mb['speedup_warm']:.1f}x warm vs per-segment baseline")
+              f"{mb['speedup_warm']:.1f}x warm vs per-segment baseline; "
+              f"asyncdrain {ad['steady_tasks_per_sec']:.0f} tasks/s steady, "
+              f"page hit rate {ad['page_pool_hit_rate']:.2f}, "
+              f"bitwise parity {ad['bitwise_parity_all']}")
 
 
 if __name__ == "__main__":

@@ -47,13 +47,45 @@ class BucketKey:
 
 @dataclass
 class MegabatchPlan:
-    """The lowered view of a batch of requests: every (request, segment)
-    mapped to its bucket, plus lazily-built padded data pages."""
-    requests: Sequence
+    """The lowered view of a stream of requests: every (request, segment)
+    mapped to its bucket, plus lazily-built padded data pages.
+
+    The plan is **incremental**: ``admit()`` lowers one request at a time,
+    so the continuous-admission drain engine can extend a live plan while
+    earlier requests are already executing.  ``plan_buckets`` stays as the
+    batch convenience (admit everything up front).
+    """
+    requests: List = field(default_factory=list)
     bucket_of: Dict[Tuple[int, int], BucketKey] = field(default_factory=dict)
     seg_of: Dict[Tuple[int, BucketKey], int] = field(default_factory=dict)
+    min_n: int = 8
+    min_p: int = 8
     _pages: Dict[Tuple[int, int, int], np.ndarray] = field(
         default_factory=dict)
+
+    # ---- continuous admission -------------------------------------------
+    def admit(self, req) -> int:
+        """Lower one request into the plan; returns its request index."""
+        ri = len(self.requests)
+        self.requests.append(req)
+        n = int(req.ledger.n_obs)
+        p = int(np.asarray(req.x).shape[1])
+        for si, seg in enumerate(req.segments):
+            if seg.learner is None:            # opaque callable: exact shapes
+                n_pad, p_pad = n, p
+            elif seg.learner in FEATURE_PAD_SAFE:
+                n_pad = pow2_bucket(n, self.min_n)
+                p_pad = pow2_bucket(p, self.min_p)
+            else:                              # e.g. mlp: P must stay exact
+                n_pad, p_pad = pow2_bucket(n, self.min_n), p
+            key = BucketKey(seg.bucket_id, n_pad, p_pad)
+            self.bucket_of[(ri, si)] = key
+            # first-wins: if two segments of one request collapse onto one
+            # bucket (their *resolved* params are equal), either resolves
+            # the same batched fn — per-task PRNG streams are looked up
+            # via segment_of_inv in run_bucket, never through this map
+            self.seg_of.setdefault((ri, key), si)
+        return ri
 
     # ---- planning shapes -------------------------------------------------
     @property
@@ -101,23 +133,9 @@ class MegabatchPlan:
 
 def plan_buckets(requests: Sequence, *, min_n: int = 8,
                  min_p: int = 8) -> MegabatchPlan:
-    """Assign every (request, segment) to a megabatch bucket."""
-    plan = MegabatchPlan(requests=list(requests))
-    for ri, req in enumerate(requests):
-        n = int(req.ledger.n_obs)
-        p = int(np.asarray(req.x).shape[1])
-        for si, seg in enumerate(req.segments):
-            if seg.learner is None:            # opaque callable: exact shapes
-                n_pad, p_pad = n, p
-            elif seg.learner in FEATURE_PAD_SAFE:
-                n_pad, p_pad = pow2_bucket(n, min_n), pow2_bucket(p, min_p)
-            else:                              # e.g. mlp: P must stay exact
-                n_pad, p_pad = pow2_bucket(n, min_n), p
-            key = BucketKey(seg.bucket_id, n_pad, p_pad)
-            plan.bucket_of[(ri, si)] = key
-            # first-wins: if two segments of one request collapse onto one
-            # bucket (their *resolved* params are equal), either resolves
-            # the same batched fn — per-task PRNG streams are looked up
-            # via segment_of_inv in run_bucket, never through this map
-            plan.seg_of.setdefault((ri, key), si)
+    """Assign every (request, segment) to a megabatch bucket (batch form
+    of ``MegabatchPlan.admit``)."""
+    plan = MegabatchPlan(min_n=min_n, min_p=min_p)
+    for req in requests:
+        plan.admit(req)
     return plan

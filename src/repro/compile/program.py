@@ -9,9 +9,13 @@ It gathers every task's feature page, rebuilds the per-task typed PRNG
 keys, and calls the learner family's ``batched_fit_predict`` — on the
 linear/ridge path that bottoms out in the fused Pallas kernels
 (``batched_gram`` / ``batched_predict`` in kernels/ops.py).  The batch
-axis B and page axis D are themselves pow2-bucketed, so repeat traffic of
-*any* composition hits a previously-compiled program: the warm cache is
-keyed by spec, never by object identity or request.
+axis B is wave-capacity-aligned (``aligned_bucket``: multiples of the
+lane quantum, so steady traffic lands on the same few shapes with <1
+quantum of waste) and the page axis D is pow2-bucketed, so repeat traffic
+of *any* composition hits a previously-compiled program: the warm cache
+is keyed by spec, never by object identity or request.  Feature pages
+come from the device-resident ``PagePool`` (pages.py) when the backend
+passes one — warm drains then perform zero host->device page transfer.
 
 ``ProgramCache`` owns the programs plus hit/miss/padding accounting; the
 execution backends (serverless/backends.py) hold one instance each and
@@ -28,8 +32,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.crossfit import PaddingStats, pow2_bucket
+from repro.core.crossfit import PaddingStats, aligned_bucket, pow2_bucket
 from repro.compile.buckets import BucketKey, Entry, MegabatchPlan
+from repro.compile.pages import PagePool
 from repro.learners import as_batched, get_batched_learner
 
 
@@ -99,86 +104,140 @@ class ProgramCache:
         return prog
 
 
+# One launch carries exactly B_BLOCK task lanes (invocations are atomic
+# within a launch; only a single invocation wider than the block raises
+# the launch's B, to aligned_bucket(tpi)).  A *constant* launch shape is
+# the bitwise schedule-invariance contract: per-lane results depend on
+# the compiled B (XLA reduction tiling) but not on lane position or other
+# lanes' contents, so fixing B makes every scheduler — inline whole-bucket
+# drains, capacity-limited waves, out-of-order async slices — produce
+# identical floats.  It also collapses the B axis onto one compiled
+# program per bucket and caps B padding at the final partial block
+# (vs pow2's up-to-2x on every drain).  16 would cut single-request
+# B waste further but doubles launch count and halves steady throughput
+# on the session benches — 32 is the measured sweet spot.
+#
+# Caveat: ShardedBackend aligns B up to its shard count, so bitwise
+# parity with the other schedulers holds when the shard count divides
+# B_BLOCK (1/2/4/8/16/32-way meshes; a 3-way mesh compiles B=33 and
+# agrees only to float tolerance).
+B_BLOCK = 32
+
+
+def _chunk_rows(rows, b_block: int):
+    """Split (ri, inv, tasks) rows into launches of <= b_block tasks,
+    keeping invocations atomic."""
+    chunks: List[List] = []
+    cur, cur_tasks = [], 0
+    for row in rows:
+        k = len(row[2])
+        if cur and cur_tasks + k > b_block:
+            chunks.append(cur)
+            cur, cur_tasks = [], 0
+        cur.append(row)
+        cur_tasks += k
+    if cur:
+        chunks.append(cur)
+    return chunks
+
+
 def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
                entries: Sequence[Entry], *, b_align: int = 1,
+               pages: Optional[PagePool] = None, b_block: int = B_BLOCK,
                ) -> Tuple[Dict[Entry, np.ndarray], float]:
-    """Execute one bucket slice: stack the entries' tasks into the padded
-    megabatch tensors, launch the (cached) program, and scatter the
-    predictions back per invocation.
+    """Execute one bucket slice: stack the entries' tasks into padded
+    megabatch tensors, launch the (cached) fixed-shape program once per
+    ``B_BLOCK`` chunk, and scatter the predictions back per invocation.
+
+    When a ``PagePool`` is passed, feature pages come from the
+    device-resident pool (zero host->device transfer on warm pages, and
+    the whole page stack is the cached array object on repeat
+    compositions); otherwise pages are stacked on the host as before.
 
     Returns ({(req_idx, inv): preds (tpi, n_obs)}, wall_seconds).
     """
     requests = plan.requests
     n_pad, p_pad = key.n_pad, key.p_pad
 
-    # ---- gather per-entry task rows -------------------------------------
     rows: List[Tuple[int, int, np.ndarray]] = []
     for ri, inv in entries:
         req = requests[ri]
         rows.append((ri, inv, req.invocation_tasks(inv)))
-    n_tasks = sum(len(t) for _, _, t in rows)
-    b_pad = pow2_bucket(n_tasks, 8)
-    if b_align > 1:                       # shard_map: B divisible by shards
-        b_pad = ((b_pad + b_align - 1) // b_align) * b_align
 
-    # ---- data pages ------------------------------------------------------
-    page_idx: Dict[int, int] = {}
-    pages: List[np.ndarray] = []
-    for ri, _, _ in rows:
-        if ri not in page_idx:
-            page_idx[ri] = len(pages)
-            pages.append(plan.page(ri, key))
-    d_pad = pow2_bucket(len(pages), 1)
-    while len(pages) < d_pad:
-        pages.append(np.zeros((n_pad, p_pad), np.float32))
-    pages_arr = np.stack(pages)
-
-    # ---- stack task tensors ---------------------------------------------
     def seg_of_entry(ri, inv):
         """Exact segment of one invocation (robust to two segments of a
         request collapsing onto one bucket after param resolution)."""
         return int(requests[ri].segment_of_inv(
             np.asarray([inv], np.int64))[0])
 
-    first = requests[rows[0][0]]
-    kd_probe = first.task_key_data(
-        seg_of_entry(rows[0][0], rows[0][1]), rows[0][2][:1])
-    y = np.zeros((b_pad, n_pad), np.float32)
-    w = np.zeros((b_pad, n_pad), np.float32)
-    valid = np.zeros((b_pad, n_pad), np.float32)
-    kd = np.zeros((b_pad,) + kd_probe.shape[1:], kd_probe.dtype)
-    didx = np.zeros((b_pad,), np.int32)
-    slices: List[Tuple[int, int, int, int, int]] = []
-    r0 = 0
-    true_cells = 0
-    for ri, inv, tasks in rows:
-        req = requests[ri]
-        n = int(req.ledger.n_obs)
-        ye, we = req.wave_arrays(tasks)
-        k = len(tasks)
-        y[r0:r0 + k, :n] = ye
-        w[r0:r0 + k, :n] = we
-        valid[r0:r0 + k, :n] = 1.0
-        kd[r0:r0 + k] = req.task_key_data(seg_of_entry(ri, inv), tasks)
-        didx[r0:r0 + k] = page_idx[ri]
-        slices.append((ri, inv, r0, k, n))
-        true_cells += k * n
-        r0 += k
+    results: Dict[Entry, np.ndarray] = {}
+    wall = 0.0
+    for chunk in _chunk_rows(rows, b_block):
+        n_tasks = sum(len(t) for _, _, t in chunk)
+        b_pad = aligned_bucket(max(n_tasks, b_block), 8, b_align)
 
-    # ---- launch ----------------------------------------------------------
-    seg = requests[rows[0][0]].segments[plan.seg_of[(rows[0][0], key)]]
-    prog = cache.program(key, b_pad, d_pad,
-                         lambda: segment_batched_fn(seg))
-    t0 = time.perf_counter()
-    out = prog(pages_arr, didx, y, w, valid, kd)
-    out = np.asarray(jax.block_until_ready(out), np.float32)
-    wall = time.perf_counter() - t0
+        # ---- data pages (lane order = first appearance in the chunk) ----
+        page_idx: Dict[int, int] = {}
+        chunk_pages: List = []
+        for ri, _, _ in chunk:
+            if ri not in page_idx:
+                page_idx[ri] = len(chunk_pages)
+                chunk_pages.append(ri)
+        if pages is not None:
+            pages_arr = pages.stack(
+                [(pages.page_key(requests[ri], n_pad, p_pad), requests[ri])
+                 for ri in chunk_pages], n_pad, p_pad)
+        else:
+            host_pages = [plan.page(ri, key) for ri in chunk_pages]
+            d_pad = pow2_bucket(len(host_pages), 1)
+            while len(host_pages) < d_pad:
+                host_pages.append(np.zeros((n_pad, p_pad), np.float32))
+            pages_arr = np.stack(host_pages)
 
-    cache.stats.launches += 1
+        # ---- stack task tensors -----------------------------------------
+        first = requests[chunk[0][0]]
+        kd_probe = first.task_key_data(
+            seg_of_entry(chunk[0][0], chunk[0][1]), chunk[0][2][:1])
+        y = np.zeros((b_pad, n_pad), np.float32)
+        w = np.zeros((b_pad, n_pad), np.float32)
+        valid = np.zeros((b_pad, n_pad), np.float32)
+        kd = np.zeros((b_pad,) + kd_probe.shape[1:], kd_probe.dtype)
+        didx = np.zeros((b_pad,), np.int32)
+        slices: List[Tuple[int, int, int, int, int]] = []
+        r0 = 0
+        true_cells = 0
+        for ri, inv, tasks in chunk:
+            req = requests[ri]
+            n = int(req.ledger.n_obs)
+            ye, we = req.wave_arrays(tasks)
+            k = len(tasks)
+            y[r0:r0 + k, :n] = ye
+            w[r0:r0 + k, :n] = we
+            valid[r0:r0 + k, :n] = 1.0
+            kd[r0:r0 + k] = req.task_key_data(seg_of_entry(ri, inv), tasks)
+            didx[r0:r0 + k] = page_idx[ri]
+            slices.append((ri, inv, r0, k, n))
+            true_cells += k * n
+            r0 += k
+
+        # ---- launch -----------------------------------------------------
+        d_pad = int(pages_arr.shape[0])
+        seg = requests[chunk[0][0]].segments[plan.seg_of[(chunk[0][0], key)]]
+        prog = cache.program(key, b_pad, d_pad,
+                             lambda: segment_batched_fn(seg))
+        t0 = time.perf_counter()
+        out = prog(pages_arr, didx, y, w, valid, kd)
+        out = np.asarray(jax.block_until_ready(out), np.float32)
+        wall += time.perf_counter() - t0
+
+        cache.stats.launches += 1
+        cache.stats.padding = cache.stats.padding.merge(PaddingStats(
+            true_cells=true_cells, padded_cells=b_pad * n_pad,
+            tasks=n_tasks, padded_tasks=b_pad))
+        for ri, inv, a, k, n in slices:
+            results[(ri, inv)] = out[a:a + k, :n]
+    # what the old rule (one pow2 launch per bucket slice) would have cost
+    total_tasks = sum(len(t) for _, _, t in rows)
     cache.stats.padding = cache.stats.padding.merge(PaddingStats(
-        true_cells=true_cells, padded_cells=b_pad * n_pad,
-        tasks=n_tasks, padded_tasks=b_pad))
-
-    results = {(ri, inv): out[a:a + k, :n]
-               for ri, inv, a, k, n in slices}
+        padded_tasks_pow2=pow2_bucket(total_tasks, 8)))
     return results, wall

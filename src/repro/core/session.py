@@ -1,24 +1,36 @@
 """The serving layer: plans + data in, per-request results out.
 
-``DMLSession`` is the multi-request front door: submit any number of
-(``DMLPlan``, ``DMLData``) pairs, then ``run()`` compiles them all into
-``WorkRequest``s and drains them through ONE warm backend.  On the wave
-backend the requests' task grids fuse into shared dispatch waves — many
-concurrent estimations amortize the same capacity cycles (the
-batch-processing throughput lever); on the sharded/inline backends they
-reuse the same warm compiled programs.
+``DMLSession`` is the multi-request front door, built around a
+**continuous-admission drain engine**: ``submit()`` enqueues a request
+immediately; the engine admits queued requests into the backend's live
+``DrainState`` (extending the megabatch bucket plan incrementally),
+dispatches waves without a global barrier, and completes each request's
+``TaskLedger`` the moment its buckets land — early requests deliver their
+``DMLResult`` (and fire ``on_complete`` callbacks) while later ones are
+still executing.  ``poll()`` advances the engine by one wave; ``run()``
+and ``estimate()`` are blocking wrappers over the same event loop, so the
+batch-synchronous public API is unchanged.
+
+On the wave backend the requests' task grids fuse into shared dispatch
+waves — many concurrent estimations amortize the same capacity cycles
+(the batch-processing throughput lever); on the sharded/inline backends
+they reuse the same warm compiled programs.  The backend's device-resident
+page pool persists across drains, so steady-state serving re-transfers no
+feature pages.
 
 ``estimate(plan, data)`` is the one-shot convenience for a single request.
 
 Determinism: a request's result depends only on its own (plan, data) —
 fold draws, learner seeds, and score evaluation are keyed off
-``plan.resampling.seed`` — so a session-batched request returns exactly
-the theta it would get running alone.
+``plan.resampling.seed``, and per-task PRNG streams are fixed at compile
+time — so a session-batched request returns bitwise the predictions it
+would get running alone, regardless of admission order or out-of-order
+bucket completion.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +46,8 @@ from repro.core.scores import evaluate_score, score_se, solve_theta
 from repro.core.spec import DMLData, DMLPlan, _hashable
 from repro.learners import resolve_params
 from repro.serverless.backends import (
-    BackendRunInfo, ExecutionBackend, PoolConfig, RunReport, Segment,
-    WorkRequest, make_backend,
+    BackendRunInfo, DrainState, ExecutionBackend, PoolConfig, RunReport,
+    Segment, WorkRequest, make_backend,
 )
 from repro.serverless.ledger import TaskLedger
 
@@ -113,7 +125,8 @@ def compile_request(plan: DMLPlan, data: DMLData,
                                 learner=ns.learner, params=ptuple))
 
     req = WorkRequest.create(grid, plan.scaling, data.x, targets, train_w,
-                             segments, ledger=ledger, tag=tag)
+                             segments, ledger=ledger, tag=tag,
+                             data_key=data.fingerprint())
     req.fold_masks = masks                      # needed for stitching
     return req
 
@@ -121,10 +134,10 @@ def compile_request(plan: DMLPlan, data: DMLData,
 def compile_raw_request(grid: TaskGrid, scaling: str, x, targets, train_w,
                         learner_fn, key, *, ledger=None, report=None,
                         tag: object = None) -> WorkRequest:
-    """Lower a raw-array request (the deprecated ``ServerlessExecutor``
-    call shape) onto the same compiled execution path as plan-built
-    requests: one opaque-callable segment, executed by the megabatch
-    compiler at exact shapes via the vmap adapter."""
+    """Lower a raw-array request (an opaque user-supplied learner callable
+    over explicit grid arrays) onto the same compiled execution path as
+    plan-built requests: one opaque-callable segment, executed by the
+    megabatch compiler at exact shapes via the vmap adapter."""
     seg = Segment(learner_fn=learner_fn,
                   l_ids=tuple(range(grid.n_nuisance)), key=key)
     return WorkRequest.create(grid, scaling, x, targets, train_w, [seg],
@@ -165,7 +178,7 @@ def assemble_result(plan: DMLPlan, data: DMLData, req: WorkRequest,
 
 
 # ---------------------------------------------------------------------------
-# the session
+# the session: continuous-admission drain engine
 # ---------------------------------------------------------------------------
 @dataclass
 class _Pending:
@@ -173,10 +186,14 @@ class _Pending:
     plan: DMLPlan
     data: DMLData
     ledger: Optional[TaskLedger]
+    on_complete: Optional[Callable] = None
+    req: Optional[WorkRequest] = None       # set at admission
+    admitted: bool = False
 
 
 class DMLSession:
-    """Batches many estimation requests onto one warm execution backend.
+    """Serves many estimation requests from one warm execution backend
+    through a continuous-admission drain engine.
 
     >>> sess = DMLSession(backend="wave", pool=PoolConfig(n_workers=8))
     >>> a = sess.submit(plan_a, data_a)
@@ -184,9 +201,26 @@ class DMLSession:
     >>> results = sess.run()            # shared waves; [DMLResult, DMLResult]
     >>> sess.result(a).theta
 
-    The backend persists across ``run()`` calls (warm pools / cached SPMD
-    programs).  ``last_run_info`` exposes cross-request wave accounting —
-    ``last_run_info.shared_waves > 0`` is the fusion at work.
+    ``submit()`` only enqueues; admission into the backend's live
+    ``DrainState`` happens lazily, so requests submitted while earlier
+    ones are draining join the *same* drain (no barrier between batches).
+    ``poll()`` advances the drain by one wave and returns the ids of
+    requests that completed in that wave — the non-blocking interface;
+    ``wait(rid)`` / ``run()`` / ``estimate()`` are blocking wrappers.
+    Completion order is recorded in ``completion_order`` and surfaced
+    through per-request ``on_complete`` callbacks the moment a request's
+    ledger fills, while other requests are still executing.
+
+    The backend persists across ``run()`` calls (warm pools, cached SPMD
+    programs, device-resident feature pages).  ``last_run_info`` exposes
+    cross-request wave accounting — ``last_run_info.shared_waves > 0`` is
+    the fusion at work; ``.pages`` is the page-pool telemetry;
+    ``.autoscale`` the autoscaler's decisions.
+
+    If the backend aborts mid-drain (e.g. retry budget exhausted), the
+    incomplete requests stay queued with their partially-completed
+    ledgers; a later ``run()`` resumes exactly the missing invocations —
+    including after swapping ``self.backend`` for a healthier pool.
     """
 
     def __init__(self, backend: Union[str, ExecutionBackend] = "wave",
@@ -194,53 +228,149 @@ class DMLSession:
         self.backend = make_backend(backend, pool)
         self._queue: List[_Pending] = []
         self._results: Dict[int, DMLResult] = {}
+        self._requests: Dict[int, WorkRequest] = {}
         self._next_id = 0
+        self.completion_order: List[int] = []
         self.last_run_info: Optional[BackendRunInfo] = None
+        self._state: Optional[DrainState] = None
+        self._state_backend: Optional[ExecutionBackend] = None
 
-    # ------------------------------------------------------------------
+    # ---- admission ----------------------------------------------------
     def submit(self, plan: DMLPlan, data, *,
-               ledger: Optional[TaskLedger] = None) -> int:
-        """Queue one estimation request; returns its request id."""
+               ledger: Optional[TaskLedger] = None,
+               on_complete: Optional[Callable] = None) -> int:
+        """Queue one estimation request; returns its request id.
+
+        ``on_complete(result)`` fires the moment the request's ledger
+        completes — possibly waves before the whole drain finishes.
+        """
         data = DMLData.from_dict(data)
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(_Pending(rid, plan, data, ledger))
+        self._queue.append(_Pending(rid, plan, data, ledger,
+                                    on_complete=on_complete))
         return rid
 
-    def run(self) -> List[DMLResult]:
-        """Execute every queued request in shared waves; returns results
-        in submission order (also retrievable via ``result(id)``).
+    def _drain_state(self) -> DrainState:
+        """The live drain, rebuilt if the backend was swapped (previously
+        admitted-but-incomplete requests re-enter with their ledgers, so
+        the new drain resumes instead of restarting)."""
+        if self._state is None or self._state_backend is not self.backend:
+            self._state = self.backend.begin_drain()
+            self._state_backend = self.backend
+            for p in self._queue:
+                p.admitted = False
+        return self._state
 
-        If the backend aborts mid-drain (e.g. retry budget exhausted),
-        the requests stay queued with their partially-completed ledgers,
-        so a later ``run()`` resumes instead of restarting.
-        """
-        if not self._queue:
-            return []
-        pending = list(self._queue)
-        reqs = [compile_request(p.plan, p.data, ledger=p.ledger,
-                                tag=p.request_id) for p in pending]
-        for p, req in zip(pending, reqs):
+    def _admit_queued(self):
+        if not self._queue and self._state is None:
+            return                          # idle: keep last drain's info
+        state = self._drain_state()
+        for p in self._queue:
+            if p.admitted:
+                continue
+            req = compile_request(p.plan, p.data, ledger=p.ledger,
+                                  tag=p.request_id)
             p.ledger = req.ledger           # keep completed rows on failure
-        self.last_run_info = self.backend.run_requests(reqs)
-        self._queue = self._queue[len(pending):]
-        out = []
-        for p, req in zip(pending, reqs):
-            res = assemble_result(p.plan, p.data, req,
+            p.req = req
+            self.backend.admit(state, req)
+            p.admitted = True
+        self.last_run_info = state.info
+
+    # ---- the event loop -----------------------------------------------
+    def _harvest(self) -> List[int]:
+        """Assemble results for every admitted request whose ledger just
+        completed; fires callbacks; removes them from the queue."""
+        finished: List[int] = []
+        for p in list(self._queue):
+            if not (p.admitted and p.req.ledger.complete):
+                continue
+            res = assemble_result(p.plan, p.data, p.req,
                                   request_id=p.request_id)
             self._results[p.request_id] = res
-            out.append(res)
-        return out
+            self._requests[p.request_id] = p.req
+            self.completion_order.append(p.request_id)
+            self._queue.remove(p)
+            finished.append(p.request_id)
+            if p.on_complete is not None:
+                p.on_complete(res)
+        return finished
 
+    def _retire_idle_state(self):
+        """Drop the drain state once nothing is queued: the next submit
+        starts a fresh drain (warm caches live on the *backend* — program
+        cache and page pool survive; only the admission bookkeeping and
+        its telemetry, already exposed via ``last_run_info``, retire)."""
+        if not self._queue and self._state is not None:
+            self._state = None
+            self._state_backend = None
+
+    def poll(self) -> List[int]:
+        """Admit anything queued, advance the drain by one wave, and
+        return the ids of requests that completed in that wave."""
+        if not self._queue and self._state is None:
+            return []
+        self._admit_queued()
+        self.backend.step(self._drain_state())
+        done = self._harvest()
+        self._retire_idle_state()
+        return done
+
+    def wait(self, request_id: int) -> DMLResult:
+        """Drive the drain until one request completes; requests admitted
+        behind it keep executing in the shared waves meanwhile."""
+        if request_id in self._results:
+            return self._results[request_id]
+        if all(p.request_id != request_id for p in self._queue):
+            raise KeyError(f"unknown request id {request_id}")
+        self._admit_queued()
+        state = self._drain_state()
+        self._harvest()                     # resumed-complete ledgers
+        while request_id not in self._results:
+            progressed = self.backend.step(state)
+            self._harvest()
+            if not progressed and request_id not in self._results:
+                raise RuntimeError(
+                    f"drain stalled with request {request_id} incomplete")
+        self._retire_idle_state()
+        return self._results[request_id]
+
+    def run(self) -> List[DMLResult]:
+        """Drain every currently-queued request; returns their results in
+        submission order (also retrievable via ``result(id)``).  Requests
+        submitted *during* the drain (e.g. from callbacks) are admitted
+        into the same drain and may complete here too."""
+        self._admit_queued()
+        targets = [p.request_id for p in self._queue]
+        if not targets:
+            return []
+        state = self._drain_state()
+        self._harvest()                     # resumed-complete ledgers
+        while any(rid not in self._results for rid in targets):
+            progressed = self.backend.step(state)
+            self._harvest()
+            self._admit_queued()            # continuous admission
+            if not progressed and \
+                    any(rid not in self._results for rid in targets):
+                raise RuntimeError("drain stalled with incomplete requests")
+        self._retire_idle_state()
+        return [self._results[rid] for rid in targets]
+
+    # ---- results ------------------------------------------------------
     def result(self, request_id: int) -> DMLResult:
         return self._results[request_id]
 
+    def request(self, request_id: int) -> WorkRequest:
+        """The compiled WorkRequest of a completed request (its
+        ``gathered_preds()`` is the full prediction tensor — used by the
+        parity benchmarks)."""
+        return self._requests[request_id]
+
     def estimate(self, plan: DMLPlan, data, *,
                  ledger: Optional[TaskLedger] = None) -> DMLResult:
-        """Submit + run a single request on this session's backend."""
+        """Submit + drain a single request on this session's backend."""
         rid = self.submit(plan, data, ledger=ledger)
-        self.run()
-        return self._results[rid]
+        return self.wait(rid)
 
 
 def estimate(plan: DMLPlan, data, *,

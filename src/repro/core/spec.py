@@ -22,7 +22,9 @@ from typing import Dict, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.core.scores import SPECS
-from repro.serverless.backends import BACKEND_NAMES, PoolConfig
+from repro.serverless.backends import (
+    BACKEND_NAMES, PoolConfig, fingerprint_array,
+)
 
 _ROLES = ("x", "y", "d", "z", "cluster")
 _SCALINGS = ("n_rep", "n_folds*n_rep")
@@ -77,6 +79,16 @@ class DMLData:
         known = {k: data[k] for k in _ROLES if k in data}
         t0 = data.get("theta0")
         return cls(theta0=float(t0) if t0 is not None else None, **known)
+
+    def fingerprint(self) -> Tuple[str, Tuple[int, ...]]:
+        """Content identity of the feature matrix (cached): the device
+        page-pool key, so repeat traffic over the same dataset — same
+        object or an equal copy — shares one resident feature page."""
+        fp = getattr(self, "_fingerprint", None)
+        if fp is None:
+            fp = fingerprint_array(self.x)
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
     # ---- access ----------------------------------------------------------
     @property

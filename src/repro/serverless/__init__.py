@@ -1,15 +1,17 @@
+from repro.serverless.autoscale import AutoscaleDecision, OccupancyAutoscaler
 from repro.serverless.backends import (
-    BACKEND_NAMES, BACKENDS, BackendRunInfo, ExecutionBackend, InlineBackend,
-    PoolConfig, RunReport, Segment, ShardedBackend, WaveBackend, WorkRequest,
-    make_backend,
+    BACKEND_NAMES, BACKENDS, BackendRunInfo, DrainState, ExecutionBackend,
+    InlineBackend, PoolConfig, RunReport, Segment, ShardedBackend,
+    WaveBackend, WorkRequest, make_backend,
 )
 from repro.serverless.cost import Bill, BillingRecord, speedup_of, USD_PER_GB_S
-from repro.serverless.executor import ServerlessExecutor
 from repro.serverless.ledger import TaskLedger
 
 __all__ = [
+    "AutoscaleDecision", "OccupancyAutoscaler",
     "Bill", "BillingRecord", "speedup_of", "USD_PER_GB_S", "PoolConfig",
-    "RunReport", "ServerlessExecutor", "TaskLedger", "ExecutionBackend",
-    "BackendRunInfo", "InlineBackend", "WaveBackend", "ShardedBackend",
-    "WorkRequest", "Segment", "BACKENDS", "BACKEND_NAMES", "make_backend",
+    "RunReport", "TaskLedger", "ExecutionBackend",
+    "BackendRunInfo", "DrainState", "InlineBackend", "WaveBackend",
+    "ShardedBackend", "WorkRequest", "Segment", "BACKENDS", "BACKEND_NAMES",
+    "make_backend",
 ]

@@ -1,0 +1,127 @@
+"""Occupancy-driven, cost-aware worker autoscaling (ISSUE 3, backend layer).
+
+Replaces the static ``PoolConfig.worker_schedule`` with a policy that
+sizes each wave from live signals the compiler already reports:
+
+  * **queue depth** — pending invocations across every admitted request,
+  * **bucket occupancy** — how full the next wave's B buckets would be
+    (capacity beyond the queue burns padded lanes),
+  * **padding waste** — the compiler's running B/N padding fraction,
+    which inflates the effective per-lane work.
+
+Each candidate worker count is priced through the paper's Lambda cost
+model (serverless/cost.py): more workers drain the queue in fewer waves
+(latency down) but bill more padded lane-seconds (cost up).  The policy
+minimizes ``latency + cost_weight * GB-seconds`` — the same latency/cost
+frontier as the paper's Figure 3 memory study, applied to pool width.
+The decision is a pure function of the observed state, so a drain's
+schedule is reproducible; and because per-task PRNG is fixed at compile
+time, no schedule the autoscaler picks can move an estimate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, List
+
+from repro.serverless.cost import speedup_of
+
+if TYPE_CHECKING:                        # avoid backends <-> autoscale cycle
+    from repro.serverless.backends import PoolConfig
+
+
+@dataclass(frozen=True)
+class AutoscaleDecision:
+    """One wave-sizing decision plus the signals it was derived from."""
+    n_workers: int
+    capacity: int                       # n_workers * lanes_per_worker
+    queue_depth: int                    # pending invocations observed
+    est_waves: int
+    est_occupancy: float                # depth / (waves * capacity)
+    est_time_s: float                   # modeled drain latency
+    est_gb_s: float                     # modeled billed GB-seconds
+    padding_waste: float                # compiler signal used for pricing
+
+
+class OccupancyAutoscaler:
+    """Sizes the next wave of a continuous drain.
+
+    Stateless apart from an EMA of measured invocation durations (used to
+    price candidates when the pool is not in simulate mode).
+    """
+
+    def __init__(self, pool: "PoolConfig", *, cost_weight: float = None,
+                 candidates: List[int] = None):
+        self.pool = pool
+        self.cost_weight = (pool.autoscale_cost_weight
+                            if cost_weight is None else cost_weight)
+        self._cands = candidates
+        self._ema_inv_s = None          # measured per-invocation seconds
+        self.decisions: List[AutoscaleDecision] = []
+
+    # ------------------------------------------------------------------
+    def observe(self, duration_s: float):
+        """Feed a measured per-invocation duration (EMA, alpha=0.3)."""
+        if duration_s <= 0:
+            return
+        if self._ema_inv_s is None:
+            self._ema_inv_s = duration_s
+        else:
+            self._ema_inv_s = 0.7 * self._ema_inv_s + 0.3 * duration_s
+
+    def _per_invocation_s(self, tasks_per_invocation: int) -> float:
+        """Modeled duration of one invocation at the pool's memory."""
+        pool = self.pool
+        if pool.simulate and pool.base_work_s > 0:
+            return pool.base_work_s * tasks_per_invocation \
+                / speedup_of(pool.memory_mb)
+        if self._ema_inv_s is not None:
+            return self._ema_inv_s
+        # no signal yet: a unit work model still ranks candidates correctly
+        return 1.0 / speedup_of(pool.memory_mb)
+
+    def _candidates(self) -> List[int]:
+        if self._cands is not None:
+            return self._cands
+        pool = self.pool
+        out, w = [], max(1, pool.min_workers)
+        while w < pool.max_workers:
+            out.append(w)
+            w *= 2
+        out.append(pool.max_workers)
+        return out
+
+    # ------------------------------------------------------------------
+    def decide(self, queue_depth: int, *, tasks_per_invocation: int = 1,
+               padding_waste: float = 0.0) -> AutoscaleDecision:
+        """Pick the worker count for the next wave given the live queue."""
+        pool = self.pool
+        lanes = pool.lanes_per_worker()
+        depth = max(int(queue_depth), 1)
+        per_inv = self._per_invocation_s(tasks_per_invocation)
+        # padded lanes do real work under wave-capacity-aligned B buckets
+        per_lane = per_inv * (1.0 + max(0.0, min(padding_waste, 1.0)))
+
+        best = None
+        for w in self._candidates():
+            cap = max(1, w * lanes)
+            waves = -(-depth // cap)                    # ceil
+            occupancy = depth / (waves * cap)
+            time_s = waves * (per_inv + pool.dispatch_overhead_s)
+            # real invocations bill their (padding-inflated) lane-seconds;
+            # idle lanes in the final partial wave still hold worker slots
+            # for half a wave on average — the over-provisioning cost
+            idle_lanes = waves * cap - depth
+            gb_s = (depth * per_lane + idle_lanes * per_inv * 0.5) \
+                * pool.memory_mb / 1024.0
+            score = time_s + self.cost_weight * gb_s
+            cand = AutoscaleDecision(
+                n_workers=w, capacity=cap, queue_depth=depth,
+                est_waves=waves, est_occupancy=occupancy,
+                est_time_s=time_s, est_gb_s=gb_s,
+                padding_waste=padding_waste)
+            if best is None or score < best[0] - 1e-12 or \
+                    (abs(score - best[0]) <= 1e-12
+                     and w < best[1].n_workers):
+                best = (score, cand)
+        self.decisions.append(best[1])
+        return best[1]

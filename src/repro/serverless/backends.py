@@ -10,11 +10,16 @@ union of every pending request's tasks is bucketed by (learner family,
 padded N, padded P), stacked into ``(B, N_pad, P_pad)`` tensors with
 validity masks, and run by one jitted program per bucket (Pallas
 batched_gram / batched_predict on the hot linear path).  Each backend is
-a thin scheduler over those compiled buckets:
+a thin scheduler over those compiled buckets — and every backend is a
+**stream scheduler**: the unit of work is one ``step()`` over a live
+``DrainState`` whose request set can grow between steps (continuous
+admission from the session layer), with ``run_requests`` kept as the
+batch wrapper (admit everything, step until idle):
 
   WaveBackend     the serverless-analogue wave scheduler (paper §4):
                   capacity-limited waves, fault injection + retries,
-                  straggler speculation, elastic worker schedules, Lambda
+                  straggler speculation, elastic worker schedules or the
+                  occupancy autoscaler (serverless/autoscale.py), Lambda
                   billing.  Waves are SHARED across requests — a wave's
                   lanes map onto bucket slices, so one warm program
                   serves every task of a bucket regardless of which
@@ -26,18 +31,20 @@ a thin scheduler over those compiled buckets:
                   reference scheduler tests compare against.
 
 All backends emit the same ``RunReport``/``TaskLedger`` artifacts, so
-fault tolerance, billing, and resume behave identically at the API layer,
-and each holds a persistent spec-keyed ``ProgramCache`` so repeat traffic
-through a ``DMLSession`` never re-traces.
+fault tolerance, billing, and resume behave identically at the API layer;
+each holds a persistent spec-keyed ``ProgramCache`` so repeat traffic
+through a ``DMLSession`` never re-traces, and a device-resident
+``PagePool`` so steady-state serving re-transfers no feature pages.
 
 Determinism contract: every task draws its PRNG stream as
 fold_in(segment seed, flat task id) at *compile* time, so predictions are
-independent of backend, bucket composition, wave schedule, fault pattern,
-and shard count — bitwise, for every learner family including the
-key-consuming ones (mlp, kernel_ridge).
+independent of backend, bucket composition, wave schedule, admission
+order, fault pattern, and shard count — bitwise, for every learner family
+including the key-consuming ones (mlp, kernel_ridge).
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import (
@@ -48,11 +55,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serverless.autoscale import AutoscaleDecision, OccupancyAutoscaler
 from repro.serverless.cost import Bill, BillingRecord, speedup_of
 from repro.serverless.ledger import DONE, TaskLedger
 
 if TYPE_CHECKING:       # avoid the core <-> serverless import cycle
-    from repro.compile import CompileStats, ProgramCache
+    from repro.compile import (
+        CompileStats, MegabatchPlan, PagePool, PageStats, ProgramCache,
+    )
     from repro.core.crossfit import TaskGrid
 
 
@@ -99,8 +109,19 @@ class PoolConfig:
     dispatch_overhead_s: float = 0.005  # per-wave dispatch latency
     seed: int = 0
     checkpoint_path: Optional[str] = None
-    # elasticity: optional schedule of worker counts per wave (grow/shrink)
+    # elasticity: optional static schedule of worker counts per wave
+    # (grow/shrink); superseded by the occupancy autoscaler below
     worker_schedule: Optional[Sequence[int]] = None
+    # occupancy-driven autoscaling (serverless/autoscale.py): derive the
+    # per-wave worker count from queue depth / bucket occupancy / padding
+    # waste, priced through the Lambda cost model
+    autoscale: bool = False
+    min_workers: int = 1
+    max_workers: int = 64
+    autoscale_cost_weight: float = 1.0
+    # device-resident feature-page pool budget (compile/pages.py); 0 turns
+    # the pool off and falls back to host page stacking per launch
+    page_pool_bytes: int = 256 * 1024 * 1024
 
     def lanes_per_worker(self) -> int:
         """Worker 'memory' buys lane width (DESIGN.md §2 mapping)."""
@@ -163,6 +184,13 @@ class Segment:
         return ("opaque", id(self.learner_fn))
 
 
+def fingerprint_array(x) -> Tuple[str, Tuple[int, ...]]:
+    """Content identity of a feature matrix — the ``PagePool`` key, so two
+    requests over equal data share one device-resident page."""
+    arr = np.ascontiguousarray(np.asarray(x, np.float32))
+    return (hashlib.sha1(arr.tobytes()).hexdigest(), arr.shape)
+
+
 @dataclass
 class WorkRequest:
     """One estimation request, compiled to arrays + a durable ledger."""
@@ -176,13 +204,14 @@ class WorkRequest:
     report: RunReport
     tag: object = None                  # caller's request id
     fold_masks: Optional[np.ndarray] = None   # (M,K,N), set by the compiler
+    data_key: object = None             # content identity of x (page pool)
 
     @classmethod
     def create(cls, grid: TaskGrid, scaling: str, x, targets, train_w,
                segments: List[Segment],
                ledger: Optional[TaskLedger] = None,
                report: Optional[RunReport] = None,
-               tag: object = None) -> "WorkRequest":
+               tag: object = None, data_key: object = None) -> "WorkRequest":
         n_obs = int(np.asarray(targets).shape[-1])
         n_inv = grid.n_invocations(scaling)
         tpi = grid.tasks_per_invocation(scaling)
@@ -195,10 +224,12 @@ class WorkRequest:
                 f"{ledger.tasks_per_invocation}, {ledger.n_obs}) does not "
                 f"match grid/scaling/data ({n_inv}, {tpi}, {n_obs}) — was it "
                 "saved under a different plan?")
+        if data_key is None:
+            data_key = fingerprint_array(x)
         return cls(grid=grid, scaling=scaling, x=jnp.asarray(x),
                    targets=np.asarray(targets), train_w=np.asarray(train_w),
                    segments=segments, ledger=ledger,
-                   report=report or RunReport(), tag=tag)
+                   report=report or RunReport(), tag=tag, data_key=data_key)
 
     # ---- derived index maps (cached) ------------------------------------
     def _index_maps(self):
@@ -259,15 +290,30 @@ class WorkRequest:
 
 
 class ExecutionBackend(Protocol):
-    """Anything that can drain a batch of WorkRequests.
+    """Anything that can drain a stream of WorkRequests.
 
-    Contract: after ``run_requests`` returns, every request's ledger is
-    complete (or an exception was raised), its report reflects the work
-    performed in this call (appending to any prior state), and
-    ``req.gathered_preds()`` yields the (M, K, L, N) prediction tensor.
-    Pre-completed ledger rows (resume) must not be re-executed.
+    The streaming contract is three primitives: ``begin_drain()`` opens a
+    ``DrainState``; ``admit(state, req)`` lowers one request into the live
+    bucket plan (legal at any point, including mid-drain); ``step(state)``
+    performs one scheduling quantum — a wave (WaveBackend) or one bucket
+    slice (Inline/Sharded) — books ledgers/billing, and returns False once
+    nothing is pending.  ``run_requests`` is the batch wrapper: after it
+    returns, every request's ledger is complete (or an exception was
+    raised), its report reflects the work performed in this call
+    (appending to any prior state), and ``req.gathered_preds()`` yields
+    the (M, K, L, N) prediction tensor.  Pre-completed ledger rows
+    (resume) must not be re-executed.
     """
     name: str
+
+    def begin_drain(self) -> "DrainState":
+        ...
+
+    def admit(self, state: "DrainState", req: WorkRequest) -> int:
+        ...
+
+    def step(self, state: "DrainState") -> bool:
+        ...
 
     def run_requests(self, requests: Sequence[WorkRequest]) -> "BackendRunInfo":
         ...
@@ -281,6 +327,8 @@ class BackendRunInfo:
     wave_members: List[List[object]] = field(default_factory=list)
     buckets: int = 0                    # distinct megabatch buckets drained
     compile: Optional[CompileStats] = None   # backend's warm-cache stats
+    pages: Optional[PageStats] = None        # device page-pool accounting
+    autoscale: List[AutoscaleDecision] = field(default_factory=list)
 
     @property
     def shared_waves(self) -> int:
@@ -288,6 +336,28 @@ class BackendRunInfo:
         the multi-request session exists to create.  (Members lists are
         deduplicated at construction.)"""
         return sum(1 for m in self.wave_members if len(m) > 1)
+
+
+@dataclass
+class DrainState:
+    """Mutable state of one continuous drain.
+
+    Owns the incremental ``MegabatchPlan`` (its request list is the
+    admission order), one fault-injection Philox stream per admitted slot
+    (slot i reproduces the batch path's ``seed + i`` draw-for-draw), and
+    the cross-request ``BackendRunInfo``.  The session layer holds one of
+    these per live drain and interleaves ``admit`` with ``step``.
+    """
+    plan: "MegabatchPlan"
+    info: BackendRunInfo
+    rngs: List[np.random.Generator] = field(default_factory=list)
+    wave: int = 0
+    seen_buckets: set = field(default_factory=set)
+    finalized: set = field(default_factory=set)
+
+    @property
+    def requests(self) -> List[WorkRequest]:
+        return self.plan.requests
 
 
 # ---------------------------------------------------------------------------
@@ -302,51 +372,122 @@ def _fill_rows(req: WorkRequest, inv_ids: np.ndarray, wall: float,
             invocation=int(inv), duration_s=per, memory_mb=pool.memory_mb))
 
 
-def _drain_compiled(requests: Sequence[WorkRequest], cache: ProgramCache,
-                    pool: PoolConfig, info: BackendRunInfo, *,
-                    b_align: int = 1):
-    """Drain every pending invocation of every request through the
-    megabatch compiler: one program launch per bucket, all requests
-    fused.  Shared by the Inline and Sharded backends (they differ only
-    in the partitioner their ProgramCache wraps programs with)."""
-    comp = _compile()
-    plan = comp.plan_buckets(requests)
-    groups = plan.pending_by_bucket()
-    info.buckets = len(groups)
-    info.compile = cache.stats
-    t_all = time.perf_counter()
-    touched = set()
-    for bkey, entries in groups.items():
-        results, wall = comp.run_bucket(plan, cache, bkey, entries,
-                                        b_align=b_align)
-        info.waves += 1
+class _StreamBackend:
+    """Shared streaming machinery: drain-state lifecycle, admission,
+    completion finalization, checkpoints, and the batch wrapper."""
+
+    def begin_drain(self) -> DrainState:
+        info = BackendRunInfo(backend=self.name)
+        info.compile = self.compiler.stats
+        if self.pages is not None:
+            info.pages = self.pages.stats
+        return DrainState(plan=_compile().MegabatchPlan(), info=info)
+
+    def admit(self, state: DrainState, req: WorkRequest) -> int:
+        """Lower one request into the live plan; its fault stream is keyed
+        by admission slot, so the batch path reproduces the old
+        per-request ``seed + i`` streams draw-for-draw."""
+        ri = state.plan.admit(req)
+        state.rngs.append(np.random.Generator(
+            np.random.Philox(key=self.pool.seed + ri)))
+        self._finalize_request(state, ri)   # resumed-complete ledgers
+        return ri
+
+    def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
+        state = self.begin_drain()
+        for req in requests:
+            self.admit(state, req)
+        while self.step(state):
+            pass
+        self._finish(state)
+        return state.info
+
+    # ------------------------------------------------------------------
+    def _finish(self, state: DrainState):
+        for ri in range(len(state.requests)):
+            self._finalize_request(state, ri)
+
+    def _finalize_request(self, state: DrainState, ri: int):
+        """Close out one request's report the moment its ledger completes
+        (the early-result hook the session's event loop polls)."""
+        if ri in state.finalized:
+            return
+        req = state.requests[ri]
+        if not req.ledger.complete:
+            return
+        state.finalized.add(ri)
+        if self.pool.simulate:
+            req.report.fit_time_s = (req.report.response_time_s
+                                     + self.pool.dispatch_overhead_s)
+
+    def _checkpoint(self, state: DrainState):
+        if not self.pool.checkpoint_path:
+            return
+        for i, req in enumerate(state.requests):
+            path = self.pool.checkpoint_path if len(state.requests) == 1 \
+                else f"{self.pool.checkpoint_path}.r{i}"
+            req.ledger.save(path)
+
+    def _book_direct(self, state: DrainState, entries, results, wall: float):
+        """Record one bucket launch for the fault-free schedulers."""
         per_req: Dict[int, List[int]] = {}
         for ri, inv in entries:
             per_req.setdefault(ri, []).append(inv)
         for ri, invs in per_req.items():
-            req = requests[ri]
-            for inv in invs:
-                req.ledger.record_success(int(inv), results[(ri, inv)])
+            req = state.requests[ri]
+            req.ledger.record_successes(
+                invs, np.stack([results[(ri, inv)] for inv in invs]))
             _fill_rows(req, np.asarray(invs),
-                       wall * len(invs) / len(entries), pool)
+                       wall * len(invs) / len(entries), self.pool)
             req.report.waves += 1
             req.report.wave_sizes.append(len(invs))
-            touched.add(ri)
-    total = time.perf_counter() - t_all
-    for ri in touched:
-        requests[ri].report.fit_time_s += total
-        requests[ri].report.response_time_s += total
-        if pool.checkpoint_path:
-            # same layout as WaveBackend: per-request suffix when batched
-            path = pool.checkpoint_path if len(requests) == 1 \
-                else f"{pool.checkpoint_path}.r{ri}"
-            requests[ri].ledger.save(path)
+        return per_req
+
+
+class _BucketStreamBackend(_StreamBackend):
+    """Inline/Sharded stepping: one pending bucket slice per step."""
+
+    def _b_align(self) -> int:
+        return 1
+
+    def step(self, state: DrainState) -> bool:
+        groups = state.plan.pending_by_bucket()
+        if not groups:
+            return False
+        bkey, entries = next(iter(groups.items()))
+        running: Dict[int, List[int]] = {}
+        for ri, inv in entries:
+            running.setdefault(ri, []).append(inv)
+        for ri, invs in running.items():
+            state.requests[ri].ledger.mark_running(invs)
+        t0 = time.perf_counter()
+        results, wall = _compile().run_bucket(
+            state.plan, self.compiler, bkey, entries,
+            b_align=self._b_align(), pages=self.pages)
+        per_req = self._book_direct(state, entries, results, wall)
+        step_wall = time.perf_counter() - t0
+        state.seen_buckets.add(bkey)
+        state.info.buckets = len(state.seen_buckets)
+        state.info.waves += 1
+        members = []
+        for ri in per_req:
+            tag = state.requests[ri].tag
+            tag = ri if tag is None else tag
+            if tag not in members:
+                members.append(tag)
+        state.info.wave_members.append(members)
+        for ri in per_req:
+            state.requests[ri].report.fit_time_s += step_wall
+            state.requests[ri].report.response_time_s += step_wall
+            self._finalize_request(state, ri)
+        self._checkpoint(state)
+        return True
 
 
 # ---------------------------------------------------------------------------
 # InlineBackend — direct bucket drain, the reference scheduler
 # ---------------------------------------------------------------------------
-class InlineBackend:
+class InlineBackend(_BucketStreamBackend):
     """Every pending bucket in one direct program call.  No faults, no
     capacity limit: the oracle the other schedulers must agree with."""
     name = "inline"
@@ -354,21 +495,18 @@ class InlineBackend:
     def __init__(self, pool: Optional[PoolConfig] = None):
         self.pool = pool or PoolConfig()
         self.compiler = _compile().ProgramCache()
+        self.pages = _compile().PagePool(self.pool.page_pool_bytes) \
+            if self.pool.page_pool_bytes else None
 
     @property
     def _programs(self) -> Dict:
         return self.compiler._programs
 
-    def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
-        info = BackendRunInfo(backend=self.name)
-        _drain_compiled(requests, self.compiler, self.pool, info)
-        return info
-
 
 # ---------------------------------------------------------------------------
 # ShardedBackend — the bucket programs SPMD over a device mesh
 # ---------------------------------------------------------------------------
-class ShardedBackend:
+class ShardedBackend(_BucketStreamBackend):
     """The same megabatch programs with the task-batch axis shard_map'd
     over the mesh's "data" axis (pages replicated on every device;
     sharding/policy.py::megabatch_specs).  Reuses launch/mesh.py meshes;
@@ -379,6 +517,8 @@ class ShardedBackend:
         self.pool = pool or PoolConfig()
         self._mesh = mesh
         self._compiler: Optional[ProgramCache] = None
+        self.pages = _compile().PagePool(self.pool.page_pool_bytes) \
+            if self.pool.page_pool_bytes else None
 
     @property
     def mesh(self):
@@ -389,6 +529,9 @@ class ShardedBackend:
 
     def _n_shards(self) -> int:
         return int(self.mesh.shape["data"])
+
+    def _b_align(self) -> int:
+        return self._n_shards()
 
     @property
     def compiler(self) -> ProgramCache:
@@ -409,12 +552,6 @@ class ShardedBackend:
     def _programs(self) -> Dict:
         return self.compiler._programs
 
-    def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
-        info = BackendRunInfo(backend=self.name)
-        _drain_compiled(requests, self.compiler, self.pool, info,
-                        b_align=self._n_shards())
-        return info
-
 
 # ---------------------------------------------------------------------------
 # WaveBackend — the serverless-analogue scheduler, multi-request
@@ -427,22 +564,25 @@ class _Entry:
     speculative: bool = False
 
 
-class WaveBackend:
-    """The paper's wave scheduler (§4) generalized to many requests.
+class WaveBackend(_StreamBackend):
+    """The paper's wave scheduler (§4) generalized to a request stream.
 
-    One *invocation* = the paper's lambda call; each wave dispatches up to
-    ``n_workers * lanes_per_worker`` invocations drawn round-robin from
-    every request's pending set, so concurrent estimations share dispatch
-    cycles (fused waves).  A wave's lanes are then grouped by megabatch
-    bucket and executed as one compiled program launch per bucket — one
-    warm "worker program" serves every task of a bucket regardless of
-    which request it came from.  Per wave the scheduler:
+    One *invocation* = the paper's lambda call; each ``step`` dispatches
+    one wave of up to ``n_workers * lanes_per_worker`` invocations drawn
+    round-robin from every admitted request's pending set, so concurrent
+    estimations share dispatch cycles (fused waves).  A wave's lanes are
+    then grouped by megabatch bucket and executed as one compiled program
+    launch per bucket — one warm "worker program" serves every task of a
+    bucket regardless of which request it came from.  Per wave the
+    scheduler:
 
-      * injects faults (per-request Philox streams) and re-queues failures
+      * injects faults (per-slot Philox streams) and re-queues failures
         (Lambda retry, first-attempt only so retries converge),
       * duplicates straggler suspects when capacity is spare (speculative
         execution, first-result-wins),
-      * re-reads the worker count (elastic shrink/grow),
+      * re-sizes the pool — static ``worker_schedule`` if given, else the
+        occupancy autoscaler (queue depth x padding waste priced through
+        the Lambda cost model) when ``pool.autoscale`` is set,
       * checkpoints every participating ledger.
 
     Billing: measured (a request's share of its buckets' program wall
@@ -454,99 +594,114 @@ class WaveBackend:
     def __init__(self, pool: Optional[PoolConfig] = None):
         self.pool = pool or PoolConfig()
         self.compiler = _compile().ProgramCache()
+        self.pages = _compile().PagePool(self.pool.page_pool_bytes) \
+            if self.pool.page_pool_bytes else None
+        self.autoscaler = OccupancyAutoscaler(self.pool) \
+            if self.pool.autoscale else None
 
     @property
     def _programs(self) -> Dict:
         return self.compiler._programs
 
-    def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
+    # ------------------------------------------------------------------
+    def _wave_workers(self, state: DrainState,
+                      pendings: List[np.ndarray]) -> int:
         pool = self.pool
-        info = BackendRunInfo(backend=self.name)
-        plan = _compile().plan_buckets(requests)
-        info.compile = self.compiler.stats
-        # per-request fault streams: request 0 reproduces the single-request
-        # executor draw-for-draw
-        rngs = [np.random.Generator(np.random.Philox(key=pool.seed + i))
-                for i in range(len(requests))]
-        t_start = time.perf_counter()
-        wave = 0
-        seen_buckets = set()
-        while True:
-            pendings = [req.ledger.pending() for req in requests]
-            if all(len(p) == 0 for p in pendings):
+        if pool.worker_schedule is not None:           # legacy static ramp
+            return pool.worker_schedule[
+                min(state.wave, len(pool.worker_schedule) - 1)]
+        if self.autoscaler is not None:
+            depth = sum(len(p) for p in pendings)
+            tasks = sum(
+                len(p) * req.grid.tasks_per_invocation(req.scaling)
+                for p, req in zip(pendings, state.requests))
+            decision = self.autoscaler.decide(
+                depth,
+                tasks_per_invocation=max(1, tasks // max(depth, 1)),
+                padding_waste=self.compiler.stats.padding.waste_frac)
+            state.info.autoscale.append(decision)
+            return decision.n_workers
+        return pool.n_workers
+
+    def step(self, state: DrainState) -> bool:
+        """Dispatch and book one wave; False once nothing is pending."""
+        pool = self.pool
+        requests = state.requests
+        pendings = [req.ledger.pending() for req in requests]
+        if all(len(p) == 0 for p in pendings):
+            return False
+        t0 = time.perf_counter()
+        n_workers = self._wave_workers(state, pendings)
+        capacity = max(1, n_workers * pool.lanes_per_worker())
+
+        # ---- fill the wave: round-robin across requests -----------------
+        batch: List[_Entry] = []
+        cursors = [0] * len(requests)
+        while len(batch) < capacity:
+            progressed = False
+            for ri, p in enumerate(pendings):
+                if cursors[ri] < len(p) and len(batch) < capacity:
+                    batch.append(_Entry(ri, int(p[cursors[ri]])))
+                    cursors[ri] += 1
+                    progressed = True
+            if not progressed:
                 break
-            n_workers = pool.n_workers
-            if pool.worker_schedule is not None:
-                n_workers = pool.worker_schedule[
-                    min(wave, len(pool.worker_schedule) - 1)]
-            capacity = max(1, n_workers * pool.lanes_per_worker())
+        spare = capacity - len(batch)
+        dispatch = list(batch)
+        if spare > 0 and pool.straggler_rate > 0 and batch:
+            dispatch += [_Entry(e.req_idx, e.inv, True)
+                         for e in batch[:min(spare, len(batch))]]
 
-            # ---- fill the wave: round-robin across requests -------------
-            batch: List[_Entry] = []
-            cursors = [0] * len(requests)
-            while len(batch) < capacity:
-                progressed = False
-                for ri, p in enumerate(pendings):
-                    if cursors[ri] < len(p) and len(batch) < capacity:
-                        batch.append(_Entry(ri, int(p[cursors[ri]])))
-                        cursors[ri] += 1
-                        progressed = True
-                if not progressed:
-                    break
-            spare = capacity - len(batch)
-            dispatch = list(batch)
-            if spare > 0 and pool.straggler_rate > 0 and batch:
-                dispatch += [_Entry(e.req_idx, e.inv, True)
-                             for e in batch[:min(spare, len(batch))]]
-
-            # ---- execute: one compiled launch per bucket in the wave ----
-            members: List[object] = []
-            for e in dispatch:
-                tag = requests[e.req_idx].tag
-                tag = e.req_idx if tag is None else tag
-                if tag not in members:
-                    members.append(tag)
-            info.wave_members.append(members)
-            unique: Dict[Tuple[int, int], None] = {}
-            for e in dispatch:              # speculative lanes share results
-                unique.setdefault((e.req_idx, e.inv))
-            results: Dict[Tuple[int, int], np.ndarray] = {}
-            wall_of_req: Dict[int, float] = {}
-            for bkey, ents in plan.group_entries(list(unique)).items():
-                seen_buckets.add(bkey)
-                res, bwall = _compile().run_bucket(plan, self.compiler,
-                                                   bkey, ents)
-                results.update(res)
-                per = bwall / len(ents)
-                for ri, _ in ents:
-                    wall_of_req[ri] = wall_of_req.get(ri, 0.0) + per
-            for ri, req in enumerate(requests):
-                entries = [e for e in dispatch if e.req_idx == ri]
-                if not entries:
-                    continue
-                self._book_request_wave(req, ri, entries, results,
-                                        rngs[ri], pool,
-                                        wall_of_req.get(ri, 0.0))
-            wave += 1
-            info.buckets = len(seen_buckets)
-            info.waves = wave
-            if pool.checkpoint_path:
-                for i, req in enumerate(requests):
-                    path = pool.checkpoint_path if len(requests) == 1 \
-                        else f"{pool.checkpoint_path}.r{i}"
-                    req.ledger.save(path)
-
-        total_wall = time.perf_counter() - t_start
-        for req in requests:
+        # ---- execute: one compiled launch per bucket in the wave --------
+        members: List[object] = []
+        for e in dispatch:
+            tag = requests[e.req_idx].tag
+            tag = e.req_idx if tag is None else tag
+            if tag not in members:
+                members.append(tag)
+        state.info.wave_members.append(members)
+        unique: Dict[Tuple[int, int], None] = {}
+        for e in dispatch:                  # speculative lanes share results
+            unique.setdefault((e.req_idx, e.inv))
+        running: Dict[int, List[int]] = {}
+        for ri, inv in unique:
+            running.setdefault(ri, []).append(inv)
+        for ri, invs in running.items():
+            requests[ri].ledger.mark_running(invs)
+        results: Dict[Tuple[int, int], np.ndarray] = {}
+        wall_of_req: Dict[int, float] = {}
+        for bkey, ents in state.plan.group_entries(list(unique)).items():
+            state.seen_buckets.add(bkey)
+            res, bwall = _compile().run_bucket(state.plan, self.compiler,
+                                               bkey, ents, pages=self.pages)
+            results.update(res)
+            per = bwall / len(ents)
+            for ri, _ in ents:
+                wall_of_req[ri] = wall_of_req.get(ri, 0.0) + per
+        touched = []
+        for ri, req in enumerate(requests):
+            entries = [e for e in dispatch if e.req_idx == ri]
+            if not entries:
+                continue
+            self._book_request_wave(req, ri, entries, results,
+                                    state.rngs[ri], pool,
+                                    wall_of_req.get(ri, 0.0))
+            touched.append(ri)
+        state.wave += 1
+        state.info.buckets = len(state.seen_buckets)
+        state.info.waves = state.wave
+        step_wall = time.perf_counter() - t0
+        if self.autoscaler is not None and dispatch and not pool.simulate:
+            self.autoscaler.observe(step_wall / len(dispatch))
+        for ri in touched:
             if not pool.simulate:
-                # accumulate (like the other backends) so an abort-and-
-                # resume report covers every drain that fed its bill
-                req.report.response_time_s += total_wall
-                req.report.fit_time_s += total_wall
-            else:
-                req.report.fit_time_s = (req.report.response_time_s
-                                         + pool.dispatch_overhead_s)
-        return info
+                # a request pays wall time only for waves it rode in, so
+                # early-completing requests report early latencies
+                requests[ri].report.response_time_s += step_wall
+                requests[ri].report.fit_time_s += step_wall
+            self._finalize_request(state, ri)
+        self._checkpoint(state)
+        return True
 
     # ------------------------------------------------------------------
     def _book_request_wave(self, req: WorkRequest, ri: int,

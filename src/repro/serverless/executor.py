@@ -1,68 +1,35 @@
-"""Deprecated single-request executor facade.
+"""Removed single-request executor facade — pure re-exports remain.
 
-The wave scheduler now lives in ``repro.serverless.backends.WaveBackend``
-(together with the Sharded and Inline backends) and natively batches many
-requests into shared waves over the megabatch compiler.
-``ServerlessExecutor`` is kept as a thin adapter for the legacy call shape
+``ServerlessExecutor`` (the PR-0 raw-array front door) is gone: every
+front-end now goes through the one execution path — ``DMLPlan`` +
+``repro.core.session`` (``DMLSession`` / ``estimate``) over the streaming
+backends in ``repro.serverless.backends``.  Raw-array workloads with an
+opaque learner callable lower through
+``repro.core.session.compile_raw_request`` and any backend's
+``run_requests``; see README "Migration" for the call-shape mapping.
 
-    executor = ServerlessExecutor(learner_fn, grid, pool)
-    preds, ledger, report = executor.run(x, targets, train_w, key)
-
-Request assembly lives in ``core.session.compile_raw_request`` — the same
-single execution path every front-end uses; this module no longer builds
-``WorkRequest``s itself.  ``PoolConfig`` and ``RunReport`` are re-exported
-from backends for backward compatibility.
+This module is kept only so old ``from repro.serverless.executor import
+PoolConfig`` imports keep working (``DMLSession``/``estimate`` re-export
+lazily to avoid a core <-> serverless import cycle).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
-
-import numpy as np
-
-from repro.core.crossfit import TaskGrid
-from repro.serverless.backends import (        # noqa: F401  (re-exports)
+from repro.serverless.backends import (                    # noqa: F401
     PoolConfig, RunReport, Segment, WaveBackend, WorkRequest,
 )
-from repro.serverless.ledger import TaskLedger
+
+__all__ = ["DMLSession", "estimate", "PoolConfig", "RunReport", "Segment",
+           "WaveBackend", "WorkRequest"]
 
 
-class ServerlessExecutor:
-    """Runs one DML task grid through the wave scheduler.
-
-    learner_fn(x (N,P), y (T,N), w (T,N), key) -> (T,N) — the fused batch
-    fit; T is the number of *tasks* in the wave (invocations x K for
-    per-split scaling).
-    """
-
-    def __init__(self, learner_fn: Callable, grid: TaskGrid,
-                 pool: PoolConfig):
-        self.learner_fn = learner_fn
-        self.grid = grid
-        self.pool = pool
-
-    # -- legacy introspection helpers ---------------------------------------
-    def _invocation_tasks(self, inv: np.ndarray) -> np.ndarray:
-        """(B,) invocation ids -> (B, tpi) flat task ids (m*K+k)*L+l."""
-        return self.grid.invocation_task_ids(inv, self.pool.scaling)
-
-    @property
-    def tasks_per_invocation(self) -> int:
-        return self.grid.tasks_per_invocation(self.pool.scaling)
-
-    def lanes_per_worker(self) -> int:
-        return self.pool.lanes_per_worker()
-
-    # -- main entry ----------------------------------------------------------
-    def run(self, x, targets, train_w, key,
-            ledger: Optional[TaskLedger] = None,
-            report: Optional[RunReport] = None):
-        """x: (N,P); targets: (L,N); train_w: (M,K,L,N) training weights.
-
-        Returns (preds (M,K,L,N), ledger, report).
-        """
-        from repro.core.session import compile_raw_request
-        req = compile_raw_request(self.grid, self.pool.scaling, x, targets,
-                                  train_w, self.learner_fn, key,
-                                  ledger=ledger, report=report)
-        WaveBackend(self.pool).run_requests([req])
-        return req.gathered_preds(), req.ledger, req.report
+def __getattr__(name):
+    if name in ("DMLSession", "estimate"):
+        from repro.core import session
+        return getattr(session, name)
+    if name == "ServerlessExecutor":
+        raise AttributeError(
+            "ServerlessExecutor was removed; use repro.core.DMLSession / "
+            "estimate(plan, data), or compile_raw_request + "
+            "backend.run_requests for raw-array workloads (README "
+            "'Migration').")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -41,11 +41,25 @@ class TaskLedger:
 
     # ---- state transitions ----
     def pending(self) -> np.ndarray:
+        """Invocations still owed results (PENDING, FAILED-awaiting-retry,
+        or RUNNING rows orphaned by a crashed drain)."""
         return np.where(self.status != DONE)[0]
+
+    def mark_running(self, invs) -> None:
+        """Flag dispatched rows so a checkpoint taken mid-wave re-queues
+        exactly the in-flight work on restart (load() resets RUNNING)."""
+        invs = np.asarray(invs, np.int64)
+        self.status[invs[self.status[invs] != DONE]] = RUNNING
 
     def record_success(self, inv: int, preds: np.ndarray):
         self.preds[inv] = preds
         self.status[inv] = DONE
+
+    def record_successes(self, invs, preds_rows: np.ndarray):
+        """Batch form: one bucket launch landing many invocations."""
+        invs = np.asarray(invs, np.int64)
+        self.preds[invs] = preds_rows
+        self.status[invs] = DONE
 
     def record_failure(self, inv: int):
         self.status[inv] = FAILED
@@ -54,6 +68,10 @@ class TaskLedger:
     @property
     def complete(self) -> bool:
         return bool((self.status == DONE).all())
+
+    @property
+    def n_done(self) -> int:
+        return int((self.status == DONE).sum())
 
     # ---- durability ----
     def save(self, path: str):

@@ -48,18 +48,25 @@ VARIANTS: Dict[str, Variant] = {v.name: v for v in [
 ]}
 
 
-def megabatch_specs(batch_axis: str = "data"):
+def megabatch_specs(batch_axis: str = "data",
+                    pages_axis: Optional[str] = None):
     """PartitionSpecs for a megabatch bucket program (repro/compile).
 
     The program signature is (pages, data_idx, y, w, valid, key_data) ->
-    preds; pages (the per-request feature pages) are replicated so every
-    shard can gather any task's dataset, and every per-task tensor is
-    sharded along the task-batch axis — the compiler pads B to a multiple
-    of the shard count.
+    preds; every per-task tensor is sharded along the task-batch axis —
+    the compiler pads B to a multiple of the shard count.
+
+    ``pages_axis=None`` (the single-host default) replicates the
+    device-resident page stack so every shard can gather any task's
+    dataset.  Passing an axis name instead shards the page D axis — the
+    multi-host megabatch layout where each host pool holds only its
+    buckets' pages; callers must then also route each bucket's task
+    slices to the shard holding its pages (ROADMAP "multi-host
+    megabatch").
     """
     from jax.sharding import PartitionSpec as P
-    in_specs = (P(), P(batch_axis), P(batch_axis), P(batch_axis),
-                P(batch_axis), P(batch_axis))
+    in_specs = (P(pages_axis) if pages_axis else P(), P(batch_axis),
+                P(batch_axis), P(batch_axis), P(batch_axis), P(batch_axis))
     out_specs = P(batch_axis)
     return in_specs, out_specs
 

@@ -1,36 +1,39 @@
-"""Serverless executor: scaling equivalence, fault tolerance, elasticity,
-checkpoint/restart, straggler mitigation, billing."""
+"""Wave scheduler behaviors through the one execution path (DMLPlan +
+backends): scaling equivalence, elasticity, fault tolerance,
+checkpoint/restart, straggler mitigation, autoscaling, billing.
+
+(The deprecated ``ServerlessExecutor`` raw-array facade was removed; its
+behavior suite lives on here against ``compile_request`` + the streaming
+``WaveBackend``.)
+"""
 import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.crossfit import TaskGrid, draw_fold_masks
-from repro.learners import get_learner
-from repro.serverless import PoolConfig, ServerlessExecutor, TaskLedger
+from repro.core import DMLData, DMLPlan
+from repro.core.session import compile_request
+from repro.data import make_plr_data
+from repro.serverless import (
+    OccupancyAutoscaler, PoolConfig, TaskLedger, WaveBackend,
+)
 from repro.serverless.cost import speedup_of
 
-
-def _setup(m=4, k=3, l=2, n=120, p=5, seed=0):
-    rng = np.random.default_rng(seed)
-    x = rng.normal(size=(n, p)).astype(np.float32)
-    targets = rng.normal(size=(l, n)).astype(np.float32)
-    masks = draw_fold_masks(n, k, m, seed)
-    train_w = np.repeat((~masks).astype(np.float32)[:, :, None], l, axis=2)
-    grid = TaskGrid(m, k, l)
-    return x, targets, train_w, grid
+DATA = DMLData.from_dict(make_plr_data(n_obs=120, dim_x=5, theta=0.5, seed=0))
 
 
-LEARNER = get_learner("ridge", {"reg": 1.0})
+def _plan(**kw):
+    kw.setdefault("n_folds", 3)
+    kw.setdefault("n_rep", 4)
+    return DMLPlan.for_model("plr", learner="ridge",
+                             learner_params={"reg": 1.0}, seed=11, **kw)
 
 
-def _run(pool, ledger=None, seed=0):
-    x, targets, train_w, grid = _setup()
-    ex = ServerlessExecutor(LEARNER, grid, pool)
-    return ex.run(jnp.asarray(x), jnp.asarray(targets), train_w,
-                  jax.random.key(seed), ledger=ledger)
+def _run(pool, ledger=None, **plan_kw):
+    plan = _plan(scaling=pool.scaling, **plan_kw)
+    req = compile_request(plan, DATA, ledger=ledger)
+    WaveBackend(pool).run_requests([req])
+    return req.gathered_preds(), req.ledger, req.report
 
 
 def test_scaling_levels_identical_results():
@@ -38,15 +41,15 @@ def test_scaling_levels_identical_results():
     the paper's scaling knob is cost/latency only (§4.2)."""
     p1, _, _ = _run(PoolConfig(n_workers=2, scaling="n_rep"))
     p2, _, _ = _run(PoolConfig(n_workers=5, scaling="n_folds*n_rep"))
-    np.testing.assert_allclose(p1, p2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(p1, p2)      # fixed-block B: bitwise
 
 
 def test_worker_count_invariance():
-    """Elasticity: results are independent of the worker pool size."""
+    """Elasticity: results are bitwise independent of the pool size."""
     base, _, _ = _run(PoolConfig(n_workers=1, memory_mb=256))
     for w in (2, 7, 64):
-        p, _, rep = _run(PoolConfig(n_workers=w, memory_mb=256))
-        np.testing.assert_allclose(base, p, rtol=2e-4, atol=2e-4)
+        p, _, _ = _run(PoolConfig(n_workers=w, memory_mb=256))
+        np.testing.assert_array_equal(base, p)
 
 
 def test_fault_injection_and_retries_converge():
@@ -55,7 +58,7 @@ def test_fault_injection_and_retries_converge():
     clean, _, _ = _run(PoolConfig(n_workers=3))
     assert rep.failures > 0
     assert ledger.complete
-    np.testing.assert_allclose(preds, clean, rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(preds, clean)
 
 
 def test_retry_budget_exhaustion_raises():
@@ -72,46 +75,69 @@ def test_ledger_checkpoint_restart(tmp_path):
     restored = TaskLedger.load(path)
     assert restored.complete
     preds2, _, rep2 = _run(pool, ledger=restored)
-    np.testing.assert_allclose(preds, preds2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(preds, preds2)
     assert rep2.bill.n_invocations == 0          # no re-execution billed
 
 
-def test_ledger_partial_resume(tmp_path):
-    """Kill after the first wave; the restart must only run the remainder."""
-    x, targets, train_w, grid = _setup()
+def test_ledger_partial_resume():
+    """Kill after some invocations; the restart must only run the rest."""
     pool = PoolConfig(n_workers=1, memory_mb=256)
-    ex = ServerlessExecutor(LEARNER, grid, pool)
-    ledger = TaskLedger.create(grid.n_invocations(pool.scaling), x.shape[0],
-                               ex.tasks_per_invocation)
-    # simulate: first 3 invocations already done by a previous (crashed) run
-    full, _, _ = _run(pool)
-    done_by_crash = [0, 1, 2]
-    for inv in done_by_crash:
-        tasks = ex._invocation_tasks(np.array([inv]))[0]
-        m, rest = np.divmod(tasks, grid.n_folds * grid.n_nuisance)
-        pass
-    preds_full, led1, _ = ex.run(jnp.asarray(x), jnp.asarray(targets),
-                                 train_w, jax.random.key(0))
+    preds_full, led1, _ = _run(pool)
     # copy 3 done rows into a fresh ledger = crash-restored state
-    led2 = TaskLedger.create(grid.n_invocations(pool.scaling), x.shape[0],
-                             ex.tasks_per_invocation)
-    for inv in done_by_crash:
-        led2.record_success(inv, led1.preds[inv])
-    preds2, led2, rep2 = ex.run(jnp.asarray(x), jnp.asarray(targets),
-                                train_w, jax.random.key(0), ledger=led2)
-    np.testing.assert_allclose(preds_full, preds2, rtol=1e-6, atol=1e-6)
-    assert rep2.bill.n_invocations == led2.n_invocations - len(done_by_crash)
+    led2 = TaskLedger.create(led1.n_invocations, led1.n_obs,
+                             led1.tasks_per_invocation)
+    led2.record_successes([0, 1, 2], led1.preds[[0, 1, 2]])
+    preds2, led2, rep2 = _run(pool, ledger=led2)
+    np.testing.assert_array_equal(preds_full, preds2)
+    assert rep2.bill.n_invocations == led2.n_invocations - 3
 
 
 def test_elastic_worker_schedule():
-    """Workers leave and join between waves; run still completes."""
+    """The legacy static schedule is still honored: workers leave and join
+    between waves; the run completes bitwise-identically."""
     pool = PoolConfig(n_workers=4, memory_mb=256,
                       worker_schedule=[4, 1, 2, 8, 8, 8, 8, 8])
     preds, ledger, rep = _run(pool)
     assert ledger.complete
     assert rep.waves >= 2
     clean, _, _ = _run(PoolConfig(n_workers=4, memory_mb=256))
-    np.testing.assert_allclose(preds, clean, rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(preds, clean)
+
+
+def test_autoscaler_replaces_static_schedule():
+    """Occupancy autoscaling: the wave backend derives worker counts from
+    queue depth, records its decisions, and the estimate is untouched."""
+    pool = PoolConfig(n_workers=2, memory_mb=256, autoscale=True,
+                      min_workers=1, max_workers=16)
+    plan = _plan(n_rep=8)
+    req = compile_request(plan, DATA)
+    backend = WaveBackend(pool)
+    info = backend.run_requests([req])
+    assert req.ledger.complete
+    assert len(info.autoscale) == info.waves
+    d0 = info.autoscale[0]
+    assert d0.queue_depth == req.ledger.n_invocations
+    assert d0.n_workers * pool.lanes_per_worker() == d0.capacity
+    assert all(pool.min_workers <= d.n_workers <= pool.max_workers
+               for d in info.autoscale)
+    # bitwise invariance vs a static pool
+    clean, _, _ = _run(PoolConfig(n_workers=4, memory_mb=256), n_rep=8)
+    np.testing.assert_array_equal(req.gathered_preds(), clean)
+
+
+def test_autoscaler_scales_with_queue_depth():
+    """Deeper queues get at least as many workers; shallow queues are not
+    over-provisioned (cost-aware sizing)."""
+    pool = PoolConfig(n_workers=2, memory_mb=1024, autoscale=True,
+                      min_workers=1, max_workers=64)
+    scaler = OccupancyAutoscaler(pool)
+    shallow = scaler.decide(4)
+    deep = scaler.decide(400)
+    assert deep.n_workers >= shallow.n_workers
+    assert shallow.capacity <= 4 * pool.lanes_per_worker()
+    assert deep.est_waves < 400          # really parallelizes
+    # decisions are deterministic pure functions of the observed state
+    assert scaler.decide(400) == deep
 
 
 def test_straggler_speculation_billed():
@@ -139,5 +165,15 @@ def test_simulated_billing_tracks_memory():
         t[mem] = rep.response_time_s
         c[mem] = rep.bill.total_gb_s
     assert t[4096] < t[1024] < t[256]
-    for rec_mem, bill in c.items():
+    for mem, bill in c.items():
         assert bill > 0
+
+
+def test_removed_executor_import_raises():
+    import repro.serverless.executor as executor_mod
+    with pytest.raises(AttributeError, match="removed"):
+        executor_mod.ServerlessExecutor
+    # the compat re-exports still resolve
+    assert executor_mod.PoolConfig is PoolConfig
+    from repro.core import DMLSession
+    assert executor_mod.DMLSession is DMLSession
