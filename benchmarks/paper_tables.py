@@ -203,13 +203,55 @@ def megabatch_compile(n_requests: int = 32, n_rep: int = 2,
         "buckets": info.buckets,
         "shared_waves": info.shared_waves,
         "padding_waste_pct": 100.0 * stats.padding.waste_frac,
-        # B-axis waste before/after the wave-capacity-aligned fixed-block
-        # rule (before = what pow2 bucketing would have padded)
+        # per-axis breakdown: B lanes (canonical blocks vs the old pow2
+        # rule), N rows inside real lanes, P feature columns
         "padding_waste_b_pct": 100.0 * stats.padding.b_waste_frac,
         "padding_waste_b_pow2_pct": 100.0 * stats.padding.b_waste_frac_pow2,
+        "padding_waste_n_pct": 100.0 * stats.padding.n_waste_frac,
+        "padding_waste_p_pct": 100.0 * stats.padding.p_waste_frac,
         "compile_cache_hit_rate": stats.hit_rate,
         "programs_compiled": stats.misses,
     }
+
+
+SERVING_FAMILIES = [
+    ("ridge", {"reg": 1.0}),
+    ("ols", {}),
+    ("lasso", {"reg": 0.01}),
+    ("kernel_ridge", {"reg": 1.0, "n_landmarks": 32}),
+    ("mlp", {"hidden": (8,), "n_steps": 20}),
+]
+
+
+def _serving_cases(n_requests_per_family: int, n_rep: int, *,
+                   n_obs_stride: int = 11):
+    """The steady-serving request population the asyncdrain/topology
+    benches share: every learner family (+ IRM for logistic), one
+    (label, plan, data) triple per request.  Labels are unique per
+    request — the parity dict must never let a passing replica mask a
+    failing one.  Returns (cases, tasks per round)."""
+    from repro.core import DMLData, DMLPlan
+    from repro.data import make_irm_data, make_plr_data
+
+    cases = []
+    for i, (name, params) in enumerate(SERVING_FAMILIES):
+        for j in range(n_requests_per_family):
+            data = DMLData.from_dict(make_plr_data(
+                n_obs=100 + n_obs_stride * i + 7 * j, dim_x=6, theta=0.5,
+                seed=10 * i + j))
+            plan = DMLPlan.for_model(
+                "plr", learner=name, learner_params=params, n_folds=3,
+                n_rep=n_rep, seed=100 + 10 * i + j)
+            label = name if n_requests_per_family == 1 else f"{name}.{j}"
+            cases.append((label, plan, data))
+    cases.append(("irm_logistic",
+                  DMLPlan.for_model("irm", learner="ridge", n_folds=3,
+                                    n_rep=n_rep, seed=999),
+                  DMLData.from_dict(make_irm_data(n_obs=140, dim_x=5,
+                                                  theta=0.4, seed=99))))
+    n_tasks_round = sum(p.resampling.n_rep * p.resampling.n_folds
+                        * p.n_nuisance for _, p, _ in cases)
+    return cases, n_tasks_round
 
 
 def async_drain(n_requests_per_family: int = 1, n_rep: int = 2,
@@ -231,35 +273,11 @@ def async_drain(n_requests_per_family: int = 1, n_rep: int = 2,
     """
     import numpy as np
 
-    from repro.core import DMLData, DMLPlan, DMLSession
+    from repro.core import DMLSession
     from repro.core.session import compile_request
-    from repro.data import make_irm_data, make_plr_data
     from repro.serverless import InlineBackend, PoolConfig
 
-    families = [
-        ("ridge", {"reg": 1.0}),
-        ("ols", {}),
-        ("lasso", {"reg": 0.01}),
-        ("kernel_ridge", {"reg": 1.0, "n_landmarks": 32}),
-        ("mlp", {"hidden": (8,), "n_steps": 20}),
-    ]
-    cases = []
-    for i, (name, params) in enumerate(families):
-        for j in range(n_requests_per_family):
-            data = DMLData.from_dict(make_plr_data(
-                n_obs=100 + 11 * i + 7 * j, dim_x=6, theta=0.5,
-                seed=10 * i + j))
-            plan = DMLPlan.for_model(
-                "plr", learner=name, learner_params=params, n_folds=3,
-                n_rep=n_rep, seed=100 + 10 * i + j)
-            cases.append((f"{name}", plan, data))
-    cases.append(("irm_logistic",
-                  DMLPlan.for_model("irm", learner="ridge", n_folds=3,
-                                    n_rep=n_rep, seed=999),
-                  DMLData.from_dict(make_irm_data(n_obs=140, dim_x=5,
-                                                  theta=0.4, seed=99))))
-    n_tasks_round = sum(p.resampling.n_rep * p.resampling.n_folds
-                        * p.n_nuisance for _, p, _ in cases)
+    cases, n_tasks_round = _serving_cases(n_requests_per_family, n_rep)
 
     pool = PoolConfig(n_workers=8, memory_mb=1024, autoscale=True,
                       min_workers=1, max_workers=32)
@@ -305,10 +323,117 @@ def async_drain(n_requests_per_family: int = 1, n_rep: int = 2,
         "padding_waste_pct": 100.0 * padding.waste_frac,
         "padding_waste_b_pct": 100.0 * padding.b_waste_frac,
         "padding_waste_b_pow2_pct": 100.0 * padding.b_waste_frac_pow2,
+        "padding_waste_n_pct": 100.0 * padding.n_waste_frac,
+        "padding_waste_p_pct": 100.0 * padding.p_waste_frac,
         "autoscale_workers_min": min(d.n_workers for d in decisions)
                                  if decisions else None,
         "autoscale_workers_max": max(d.n_workers for d in decisions)
                                  if decisions else None,
+        "bitwise_parity": parity,
+        "bitwise_parity_all": all(parity.values()),
+    }
+
+
+def topology_drain(n_hosts: int = 2, n_requests_per_family: int = 1,
+                   n_rep: int = 2, rounds: int = 3) -> Dict:
+    """The topology backend on steady-state serving traffic: every
+    learner family over ``n_hosts`` simulated host meshes through ONE
+    warm session, re-estimated round after round (ISSUE 4 acceptance
+    bench -> BENCH_topology.json).
+
+    round 0 (warmup)  — cold placement seeds per-host page residency.
+    rounds 1..R       — steady state: placement must route every bucket
+                        back to its resident host (per-host hit rate
+                        >= 0.9, ZERO cross-host page transfers), while
+                        each mesh's autoscaler lane sizes its own waves
+                        with roofline-priced candidates.
+
+    Bitwise parity vs a single-host InlineBackend drain is checked per
+    learner family — placement/stealing must never move an estimate.
+    """
+    import numpy as np
+
+    from repro.core import DMLSession
+    from repro.core.session import compile_request
+    from repro.serverless import InlineBackend, PoolConfig
+
+    # wide N stride: requests land in distinct pow2 N-buckets so
+    # placement has several buckets to spread over the hosts
+    cases, n_tasks_round = _serving_cases(n_requests_per_family, n_rep,
+                                          n_obs_stride=110)
+
+    pool = PoolConfig(n_workers=8, memory_mb=1024, autoscale=True,
+                      min_workers=1, max_workers=8, n_hosts=n_hosts)
+    sess = DMLSession(backend="topology", pool=pool)
+
+    def one_round():
+        rids = [sess.submit(p, d) for _, p, d in cases]
+        sess.run()
+        return rids
+
+    one_round()                                     # warmup (cold)
+    first_decisions = list(sess.last_run_info.autoscale)
+    topo = sess.backend.topology
+    host_warm0 = [h.pool.stats.snapshot() for h in topo.hosts]
+    fetches0 = topo.directory.fetches
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        rids = one_round()
+    steady_s = time.perf_counter() - t0
+
+    host_stats = []
+    for h, warm0 in zip(topo.hosts, host_warm0):
+        d = h.pool.stats.delta(warm0)
+        host_stats.append({
+            "host_id": h.host_id,
+            "n_devices": h.n_devices,
+            "page_hit_rate": d.hit_rate,
+            "page_hits": d.hits, "page_misses": d.misses,
+            "bytes_h2d": d.bytes_h2d, "bytes_d2d": d.bytes_d2d,
+            "served_traffic": (d.hits + d.misses) > 0,
+        })
+    busy = [h for h in host_stats if h["served_traffic"]]
+
+    # bitwise parity vs the single-host synchronous inline path
+    parity = {}
+    for (label, plan, data), rid in zip(cases, rids):
+        ref = compile_request(plan, data)
+        InlineBackend().run_requests([ref])
+        parity[label] = bool(np.array_equal(
+            sess.request(rid).gathered_preds(), ref.gathered_preds()))
+
+    info = sess.last_run_info
+    decisions = info.autoscale
+    t = info.topology
+    return {
+        "n_hosts": n_hosts,
+        "n_requests": len(cases),
+        "rounds": rounds,
+        "n_tasks_per_round": n_tasks_round,
+        "steady_s": steady_s,
+        "steady_tasks_per_sec": n_tasks_round * rounds / steady_s,
+        "hosts": host_stats,
+        "min_busy_host_hit_rate": min(h["page_hit_rate"] for h in busy)
+                                  if busy else 0.0,
+        "cross_host_fetches_steady": topo.directory.fetches - fetches0,
+        "cross_host_fetches_total": topo.directory.fetches,
+        "cross_host_bytes_total": topo.directory.bytes_fetched,
+        "steals_last_drain": t.steals,
+        "steals_per_host": {h.host_id: h.steals for h in t.hosts},
+        "waves_per_host": {h.host_id: h.waves for h in t.hosts},
+        "placements_last_drain": len(t.placements),
+        "resident_placements_last_drain":
+            sum(1 for _, _, s in t.placements if s > 0),
+        "autoscale_decisions": len(decisions),
+        "autoscale_priced_by": sorted({d.priced_by for d in decisions}),
+        "autoscale_hosts": sorted({d.host for d in decisions}),
+        # the cold drain's first decision: roofline-priced candidates
+        # (n_workers, est_time_s, est_gb_s, score) before any EMA exists
+        "autoscale_first_drain_priced_by":
+            sorted({d.priced_by for d in first_decisions}),
+        "autoscale_roofline_candidates":
+            [list(c) for c in first_decisions[0].candidate_costs]
+            if first_decisions else [],
         "bitwise_parity": parity,
         "bitwise_parity_all": all(parity.values()),
     }

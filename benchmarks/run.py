@@ -11,13 +11,20 @@ derived (the paper-relevant figure for that table).
 
 The ``megabatch`` benchmark additionally writes machine-readable
 ``BENCH_megabatch.json`` (tasks/sec before/after the compiler, waves,
-padding waste %, compile-cache hit rate) and the ``asyncdrain`` benchmark
+padding waste %, compile-cache hit rate), the ``asyncdrain`` benchmark
 writes ``BENCH_asyncdrain.json`` (steady-state tasks/sec, page-pool hit
-rate, transfer bytes saved, padding waste, bitwise parity vs the inline
-path) so the perf trajectory is tracked across PRs; ``--smoke`` runs both
-at CI size and fails loudly if the compiler regresses below the
-per-segment path, the page pool stops serving steady traffic from device
-residency, or async results drift from the synchronous path.
+rate, transfer bytes saved, per-axis padding waste, bitwise parity vs the
+inline path), and the ``topology`` benchmark writes
+``BENCH_topology.json`` (per-host page hit rates, steal counts,
+cross-host transfer convergence, roofline-priced autoscale candidates)
+so the perf trajectory is tracked across PRs; ``--smoke`` runs
+megabatch + asyncdrain at CI size and fails loudly if the compiler
+regresses below the per-segment path, the page pool stops serving steady
+traffic from device residency, B-axis padding waste exceeds 25%, or
+async results drift from the synchronous path.  ``--topology-smoke``
+gates the multi-host acceptance criteria: bitwise parity on every
+family, zero steady-state cross-host page transfers, per-host hit rate
+>= 0.9, and roofline-priced first-wave autoscale decisions.
 """
 from __future__ import annotations
 
@@ -33,15 +40,24 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: megabatch + asyncdrain benchmarks only, "
                          "small sizes, exit nonzero on compiler/page-pool/"
-                         "parity regressions")
+                         "padding/parity regressions")
+    ap.add_argument("--topology-smoke", action="store_true",
+                    help="CI gate: topology benchmark only, exit nonzero "
+                         "on parity/locality/autoscaler regressions "
+                         "(multihost-smoke job)")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--megabatch-json", default="BENCH_megabatch.json")
     ap.add_argument("--asyncdrain-json", default="BENCH_asyncdrain.json")
+    ap.add_argument("--topology-json", default="BENCH_topology.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
-    if args.smoke:
-        only = {"megabatch", "asyncdrain"}
+    if args.smoke or args.topology_smoke:       # composable gate modes
+        only = set()
         args.fast = True
+        if args.smoke:
+            only |= {"megabatch", "asyncdrain"}
+        if args.topology_smoke:
+            only |= {"topology"}
 
     from benchmarks import paper_tables as T
 
@@ -118,9 +134,24 @@ def main() -> None:
                      f"page_hit_rate={ad['page_pool_hit_rate']:.2f}_"
                      f"h2d_bytes={ad['page_bytes_h2d_steady']}_"
                      f"saved_bytes={ad['transfer_bytes_saved']}_"
+                     f"b_waste={ad['padding_waste_b_pct']:.0f}%_"
                      f"parity={ad['bitwise_parity_all']}"))
         with open(args.asyncdrain_json, "w") as f:
             json.dump(ad, f, indent=1, default=float)
+
+    if want("topology"):
+        tp = T.topology_drain(n_hosts=2, n_requests_per_family=1, n_rep=2,
+                              rounds=3 if args.fast else 5)
+        results["topology"] = tp
+        rows.append(("topology_steady_round",
+                     tp["steady_s"] / tp["rounds"] * 1e6,
+                     f"tasks_per_sec={tp['steady_tasks_per_sec']:.0f}_"
+                     f"min_host_hit_rate={tp['min_busy_host_hit_rate']:.2f}_"
+                     f"xhost_steady={tp['cross_host_fetches_steady']}_"
+                     f"steals={tp['steals_last_drain']}_"
+                     f"parity={tp['bitwise_parity_all']}"))
+        with open(args.topology_json, "w") as f:
+            json.dump(tp, f, indent=1, default=float)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -143,6 +174,13 @@ def main() -> None:
         elif ad["page_bytes_h2d_steady"] != 0:
             fail = (f"steady-state drains re-transferred "
                     f"{ad['page_bytes_h2d_steady']} bytes host->device")
+        # 0.1pt tolerance: the serving mix lands on exactly 25.0 today
+        # (12-task tails pad to 16), and the gate exists to catch the
+        # pad-to-B_BLOCK regression (~65%), not sub-point drift
+        elif ad["padding_waste_b_pct"] > 25.0 + 0.1:
+            fail = (f"B-axis padding waste "
+                    f"{ad['padding_waste_b_pct']:.1f}% > 25% "
+                    "(canonical tail blocks regressed)")
         elif not ad["bitwise_parity_all"]:
             bad = [k for k, v in ad["bitwise_parity"].items() if not v]
             fail = f"async vs inline bitwise parity broken for {bad}"
@@ -153,7 +191,37 @@ def main() -> None:
               f"{mb['speedup_warm']:.1f}x warm vs per-segment baseline; "
               f"asyncdrain {ad['steady_tasks_per_sec']:.0f} tasks/s steady, "
               f"page hit rate {ad['page_pool_hit_rate']:.2f}, "
+              f"B waste {ad['padding_waste_b_pct']:.0f}%, "
               f"bitwise parity {ad['bitwise_parity_all']}")
+
+    if args.topology_smoke:
+        tp = results["topology"]
+        fail = None
+        if not tp["bitwise_parity_all"]:
+            bad = [k for k, v in tp["bitwise_parity"].items() if not v]
+            fail = f"topology vs inline bitwise parity broken for {bad}"
+        elif tp["cross_host_fetches_steady"] != 0:
+            fail = (f"{tp['cross_host_fetches_steady']} cross-host page "
+                    "transfers in steady state (placement did not "
+                    "converge on residency)")
+        elif tp["min_busy_host_hit_rate"] < 0.9:
+            fail = (f"per-host steady page hit rate "
+                    f"{tp['min_busy_host_hit_rate']:.2f} < 0.9")
+        elif "roofline" not in tp["autoscale_first_drain_priced_by"]:
+            fail = ("cold-drain autoscale decisions were not "
+                    f"roofline-priced: {tp['autoscale_first_drain_priced_by']}")
+        elif not tp["autoscale_roofline_candidates"]:
+            fail = "no per-candidate cost table logged"
+        if fail:
+            print(f"TOPOLOGY SMOKE FAIL: {fail}", file=sys.stderr)
+            sys.exit(1)
+        print(f"TOPOLOGY SMOKE OK: {tp['n_hosts']} hosts, "
+              f"{tp['steady_tasks_per_sec']:.0f} tasks/s steady, "
+              f"min host hit rate {tp['min_busy_host_hit_rate']:.2f}, "
+              f"steady cross-host transfers "
+              f"{tp['cross_host_fetches_steady']}, "
+              f"steals {tp['steals_last_drain']}, "
+              f"bitwise parity {tp['bitwise_parity_all']}")
 
 
 if __name__ == "__main__":

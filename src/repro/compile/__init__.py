@@ -15,13 +15,13 @@ Every execution backend is a thin scheduler over this layer.
 from repro.compile.buckets import (
     BucketKey, Entry, MegabatchPlan, plan_buckets,
 )
-from repro.compile.pages import PagePool, PageStats
+from repro.compile.pages import PageDirectory, PagePool, PageStats
 from repro.compile.program import (
     CompileStats, ProgramCache, run_bucket, segment_batched_fn,
 )
 
 __all__ = [
     "BucketKey", "Entry", "MegabatchPlan", "plan_buckets",
-    "PagePool", "PageStats",
+    "PageDirectory", "PagePool", "PageStats",
     "CompileStats", "ProgramCache", "run_bucket", "segment_batched_fn",
 ]

@@ -31,13 +31,25 @@ history — part of the bitwise schedule-invariance contract.
 
 ``PageStats`` feeds the session telemetry and BENCH_asyncdrain.json
 (hit rate, bytes transferred vs saved, evictions, stack reuse).
+
+Multi-host (ISSUE 4): one ``PagePool`` per host mesh, all sharing a
+``PageDirectory`` — the cluster-wide fingerprint map of which hosts hold
+which pages.  A host that misses locally but whose directory names a
+peer holder fetches the page device-to-device (cheaper than the host
+round-trip, and accounted separately as a *cross-host transfer*); the
+topology layer's placement policy exists to make those fetches converge
+to zero by routing each bucket to the host already holding its pages.
+``resident`` / ``stack_cached`` are the residency probes that policy
+scores hosts with.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,7 +64,14 @@ MAX_CACHED_STACKS = 128
 
 @dataclass
 class PageStats:
-    """Hit/miss/transfer accounting across drains."""
+    """Hit/miss/transfer accounting across drains.
+
+    A *cross-host fetch* is a local miss served device-to-device from a
+    peer pool instead of the host round-trip: it counts as a miss for
+    this pool's hit rate, its bytes land in ``bytes_d2d`` (never
+    ``bytes_h2d``), and steady-state topology traffic is gated on it
+    reaching zero.
+    """
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -60,6 +79,8 @@ class PageStats:
     stack_hits: int = 0
     bytes_h2d: int = 0                  # host->device page transfers
     bytes_saved: int = 0                # transfers avoided by residency
+    cross_host_fetches: int = 0         # misses served from a peer pool
+    bytes_d2d: int = 0                  # device->device cross-host bytes
 
     @property
     def hit_rate(self) -> float:
@@ -73,20 +94,72 @@ class PageStats:
                 "stack_builds": self.stack_builds,
                 "stack_hits": self.stack_hits,
                 "page_bytes_h2d": self.bytes_h2d,
-                "page_bytes_saved": self.bytes_saved}
+                "page_bytes_saved": self.bytes_saved,
+                "cross_host_fetches": self.cross_host_fetches,
+                "page_bytes_d2d": self.bytes_d2d}
 
+    # snapshot/delta/merge iterate the dataclass fields so a counter
+    # added above is automatically carried through all three
     def snapshot(self) -> "PageStats":
-        return PageStats(self.hits, self.misses, self.evictions,
-                         self.stack_builds, self.stack_hits,
-                         self.bytes_h2d, self.bytes_saved)
+        return dataclasses.replace(self)
 
     def delta(self, since: "PageStats") -> "PageStats":
-        return PageStats(self.hits - since.hits, self.misses - since.misses,
-                         self.evictions - since.evictions,
-                         self.stack_builds - since.stack_builds,
-                         self.stack_hits - since.stack_hits,
-                         self.bytes_h2d - since.bytes_h2d,
-                         self.bytes_saved - since.bytes_saved)
+        return PageStats(*(getattr(self, f.name) - getattr(since, f.name)
+                           for f in dataclasses.fields(self)))
+
+    def merge(self, other: "PageStats") -> "PageStats":
+        """Aggregate two pools' accounting (topology-wide telemetry)."""
+        return PageStats(*(getattr(self, f.name) + getattr(other, f.name)
+                           for f in dataclasses.fields(self)))
+
+
+class PageDirectory:
+    """Cluster-wide fingerprint directory over per-host ``PagePool``s.
+
+    Maps every page key to the set of hosts currently holding it, and
+    brokers device-to-device fetches between pools: a host that misses
+    locally asks the directory, which hands back a peer's resident array
+    (the caller places it on its own device).  Pure bookkeeping plus the
+    fetch counters the topology acceptance gates read — placement policy
+    is the caller's job (sharding/policy.py).
+    """
+
+    def __init__(self):
+        self._holders: Dict[PageKey, Set[int]] = {}
+        self._pools: Dict[int, "PagePool"] = {}
+        self.fetches = 0                # cross-host page fetches brokered
+        self.bytes_fetched = 0
+
+    def attach(self, pool: "PagePool") -> None:
+        self._pools[pool.host_id] = pool
+
+    def register(self, pkey: PageKey, host_id: int) -> None:
+        self._holders.setdefault(pkey, set()).add(host_id)
+
+    def unregister(self, pkey: PageKey, host_id: int) -> None:
+        holders = self._holders.get(pkey)
+        if holders is not None:
+            holders.discard(host_id)
+            if not holders:
+                del self._holders[pkey]
+
+    def holders(self, pkey: PageKey) -> frozenset:
+        return frozenset(self._holders.get(pkey, ()))
+
+    def fetch(self, pkey: PageKey, requester: int):
+        """A peer's resident page array, or None if no peer holds it.
+        Deterministic source choice (lowest holder id); does not touch
+        the source pool's LRU order."""
+        for hid in sorted(self._holders.get(pkey, ())):
+            if hid == requester:
+                continue
+            src = self._pools.get(hid)
+            page = src._pages.get(pkey) if src is not None else None
+            if page is not None:
+                self.fetches += 1
+                self.bytes_fetched += src._nbytes[pkey]
+                return page
+        return None
 
 
 class PagePool:
@@ -96,10 +169,22 @@ class PagePool:
     ``ProgramCache`` and persists across drains).  ``byte_budget`` counts
     the canonical page entries; assembled stacks are composition-keyed
     views capped at ``MAX_CACHED_STACKS`` entries.
+
+    Topology mode: one pool per host mesh, identified by ``host_id``,
+    pinned to that host's lead ``device``, and registered with the shared
+    ``PageDirectory`` — local misses then try a device-to-device fetch
+    from a peer holder before paying the host round-trip.
     """
 
-    def __init__(self, byte_budget: int = DEFAULT_BYTE_BUDGET):
+    def __init__(self, byte_budget: int = DEFAULT_BYTE_BUDGET, *,
+                 host_id: int = 0, directory: Optional[PageDirectory] = None,
+                 device=None):
         self.byte_budget = int(byte_budget)
+        self.host_id = host_id
+        self.directory = directory
+        self.device = device
+        if directory is not None:
+            directory.attach(self)
         self.stats = PageStats()
         self._pages: "OrderedDict[PageKey, object]" = OrderedDict()
         self._nbytes: Dict[PageKey, int] = {}
@@ -118,14 +203,39 @@ class PagePool:
     def n_pages(self) -> int:
         return len(self._pages)
 
+    # ---- residency probes (placement policy, sharding/policy.py) -----
+    def resident(self, pkey: PageKey) -> bool:
+        """Membership test without touching LRU order or stats."""
+        return pkey in self._pages
+
+    def stack_cached(self, pkeys: Sequence[PageKey]) -> bool:
+        """Whether the lane composition is launch-ready with zero
+        copies: a singleton composition's launch array IS its resident
+        page; multi-lane compositions need their assembled stack."""
+        pkeys = tuple(pkeys)
+        if len(pkeys) == 1:
+            return pkeys[0] in self._pages
+        return (pkeys, pow2_bucket(len(pkeys), 1)) in self._stacks
+
     @property
     def total_bytes(self) -> int:
         """Device bytes held: canonical pages + materialized stacks."""
         return self._page_bytes + self._stack_bytes
 
     # ------------------------------------------------------------------
+    def _put(self, arr):
+        """Place an array on this pool's host device (default placement
+        when the pool is not device-pinned)."""
+        if self.device is not None:
+            return jax.device_put(arr, self.device)
+        return jnp.asarray(arr)
+
     def _page(self, pkey: PageKey, req, n_pad: int, p_pad: int):
-        """The request's device-resident padded page; transfers on miss."""
+        """The request's device-resident padded page, shaped
+        ``(1, n_pad, p_pad)`` so a singleton launch can consume it
+        directly with zero copies; a local miss tries a device-to-device
+        fetch from a peer pool (directory) before paying the
+        host->device transfer."""
         page = self._pages.get(pkey)
         nbytes = n_pad * p_pad * 4
         if page is not None:
@@ -133,15 +243,24 @@ class PagePool:
             self.stats.hits += 1
             self.stats.bytes_saved += nbytes
             return page
-        x = np.asarray(req.x, np.float32)
-        host = np.zeros((n_pad, p_pad), np.float32)
-        host[:x.shape[0], :x.shape[1]] = x
-        page = jnp.asarray(host)                    # the one h2d copy
+        self.stats.misses += 1
+        peer = self.directory.fetch(pkey, self.host_id) \
+            if self.directory is not None else None
+        if peer is not None:
+            page = self._put(peer)                  # d2d cross-host copy
+            self.stats.cross_host_fetches += 1
+            self.stats.bytes_d2d += nbytes
+        else:
+            x = np.asarray(req.x, np.float32)
+            host = np.zeros((1, n_pad, p_pad), np.float32)
+            host[0, :x.shape[0], :x.shape[1]] = x
+            page = self._put(host)                  # the one h2d copy
+            self.stats.bytes_h2d += nbytes
         self._pages[pkey] = page
         self._nbytes[pkey] = nbytes
         self._page_bytes += nbytes
-        self.stats.misses += 1
-        self.stats.bytes_h2d += nbytes
+        if self.directory is not None:
+            self.directory.register(pkey, self.host_id)
         return page
 
     def _drop_stack(self, skey: Tuple):
@@ -169,6 +288,8 @@ class PagePool:
             self._pages.pop(pkey)
             self._page_bytes -= self._nbytes.pop(pkey)
             self.stats.evictions += 1
+            if self.directory is not None:
+                self.directory.unregister(pkey, self.host_id)
             for skey in list(self._stacks_of.pop(pkey, ())):
                 self._drop_stack(skey)
 
@@ -178,10 +299,27 @@ class PagePool:
         """Assemble the (D, N_pad, P_pad) stack for one launch.
 
         ``needs`` is ``[(page_key, request), ...]`` in lane order (lane i
-        = needs[i]); D is pow2 of the lane count.  The assembled stack is
-        cached by composition, so steady traffic reuses the identical
-        array object and pays neither transfer nor copy.
+        = needs[i]); D is pow2 of the lane count.
+
+        Singleton launches (the canonical-block rule: ``run_bucket``
+        passes exactly one need per launch) consume the resident
+        ``(1, N_pad, P_pad)`` page **directly** — no copy, no second
+        device allocation, no cache entry beyond the page itself; a
+        repeat composition is booked as a stack hit because the launch
+        array was served with zero copies.  The multi-lane path below is
+        kept for the ROADMAP "same-shape block fusion" item, which would
+        hand multi-request compositions straight back to it.
         """
+        if len(needs) == 1:
+            pk, req = needs[0]
+            was_resident = pk in self._pages
+            page = self._page(pk, req, n_pad, p_pad)
+            if was_resident:
+                self.stats.stack_hits += 1
+            else:
+                self.stats.stack_builds += 1
+                self._evict_lru(keep={pk})
+            return page
         pkeys = tuple(pk for pk, _ in needs)
         d_pad = pow2_bucket(max(len(pkeys), 1), 1)
         skey = (pkeys, d_pad)
@@ -195,8 +333,10 @@ class PagePool:
                 self.stats.bytes_saved += n_pad * p_pad * 4
             return cached
         lanes = [self._page(pk, req, n_pad, p_pad) for pk, req in needs]
-        zero = jnp.zeros((n_pad, p_pad), np.float32)
-        stack = jnp.stack(lanes + [zero] * (d_pad - len(lanes)))
+        if d_pad > len(lanes):
+            zero = self._put(jnp.zeros((1, n_pad, p_pad), np.float32))
+            lanes = lanes + [zero] * (d_pad - len(lanes))
+        stack = jnp.concatenate(lanes)
         self.stats.stack_builds += 1
         self._stacks[skey] = stack
         self._stack_bytes += d_pad * n_pad * p_pad * 4

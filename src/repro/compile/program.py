@@ -57,6 +57,9 @@ class CompileStats:
                 "cache_hit_rate": self.hit_rate,
                 "launches": self.launches,
                 "padding_waste_frac": self.padding.waste_frac,
+                "padding_waste_b_frac": self.padding.b_waste_frac,
+                "padding_waste_n_frac": self.padding.n_waste_frac,
+                "padding_waste_p_frac": self.padding.p_waste_frac,
                 "tasks": self.padding.tasks,
                 "padded_tasks": self.padding.padded_tasks}
 
@@ -104,50 +107,48 @@ class ProgramCache:
         return prog
 
 
-# One launch carries exactly B_BLOCK task lanes (invocations are atomic
-# within a launch; only a single invocation wider than the block raises
-# the launch's B, to aligned_bucket(tpi)).  A *constant* launch shape is
-# the bitwise schedule-invariance contract: per-lane results depend on
-# the compiled B (XLA reduction tiling) but not on lane position or other
-# lanes' contents, so fixing B makes every scheduler — inline whole-bucket
-# drains, capacity-limited waves, out-of-order async slices — produce
-# identical floats.  It also collapses the B axis onto one compiled
-# program per bucket and caps B padding at the final partial block
-# (vs pow2's up-to-2x on every drain).  16 would cut single-request
-# B waste further but doubles launch count and halves steady throughput
-# on the session benches — 32 is the measured sweet spot.
+# A launch carries at most B_BLOCK task lanes.  The compiled B is part
+# of the determinism contract: per-lane floats are independent of lane
+# position and of the *other lanes' contents* (verified per family by
+# tests/test_compile.py::test_tail_launch_b_invariance), but they DO
+# depend on the compiled B itself (XLA reduction tiling — B=8 and B=16
+# programs differ by ~1e-6).  So a task's launch B must be a pure
+# function of its own request, never of what a scheduler happened to
+# hand over in one call: within each (request, segment), the segment's
+# flat tasks in ascending order split into **canonical blocks** of
+# B_BLOCK tasks, and a block always compiles at its canonical aligned
+# size — full blocks at B_BLOCK, the tail at its sublane-aligned count —
+# even when a capacity-limited wave executes only part of it (the
+# missing lanes ride as padding; lane-content independence makes the
+# result identical to the full-block launch).  Flat task ids are
+# scaling-level-invariant, so per-split and per-fold scaling also
+# compile identical launch shapes.
 #
-# Caveat: ShardedBackend aligns B up to its shard count, so bitwise
-# parity with the other schedulers holds when the shard count divides
-# B_BLOCK (1/2/4/8/16/32-way meshes; a 3-way mesh compiles B=33 and
-# agrees only to float tolerance).
+# This replaces the PR-3 rule that padded *every* launch up to B_BLOCK:
+# constant-shape was sufficient for bitwise invariance but blew B-axis
+# waste to ~65% on small-bucket traffic (BENCH_asyncdrain.json) — a
+# 12-task bucket burned 20 padding lanes per launch.  Canonical tails
+# launch at aligned size instead (12 tasks -> B=16), capping a bucket's
+# B waste at the tail block's alignment.  16 for B_BLOCK would cut
+# single-request waste further but doubles launch count and halves
+# steady throughput on the session benches — 32 is the measured sweet
+# spot.
+#
+# Caveat: ShardedBackend aligns B up to its shard count and shard_map
+# retiles the per-lane reductions, so the sharded scheduler agrees with
+# the unsharded ones to float tolerance (~1e-6) on multi-device meshes,
+# bitwise only on a 1-device mesh.
 B_BLOCK = 32
-
-
-def _chunk_rows(rows, b_block: int):
-    """Split (ri, inv, tasks) rows into launches of <= b_block tasks,
-    keeping invocations atomic."""
-    chunks: List[List] = []
-    cur, cur_tasks = [], 0
-    for row in rows:
-        k = len(row[2])
-        if cur and cur_tasks + k > b_block:
-            chunks.append(cur)
-            cur, cur_tasks = [], 0
-        cur.append(row)
-        cur_tasks += k
-    if cur:
-        chunks.append(cur)
-    return chunks
 
 
 def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
                entries: Sequence[Entry], *, b_align: int = 1,
                pages: Optional[PagePool] = None, b_block: int = B_BLOCK,
                ) -> Tuple[Dict[Entry, np.ndarray], float]:
-    """Execute one bucket slice: stack the entries' tasks into padded
-    megabatch tensors, launch the (cached) fixed-shape program once per
-    ``B_BLOCK`` chunk, and scatter the predictions back per invocation.
+    """Execute one bucket slice: group the entries' tasks by their
+    canonical launch block, stack each block's tasks into padded
+    megabatch tensors, launch the (cached) canonical-shape program per
+    block, and scatter the predictions back per invocation.
 
     When a ``PagePool`` is passed, feature pages come from the
     device-resident pool (zero host->device transfer on warm pages, and
@@ -159,70 +160,76 @@ def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
     requests = plan.requests
     n_pad, p_pad = key.n_pad, key.p_pad
 
-    rows: List[Tuple[int, int, np.ndarray]] = []
+    # exact segment per invocation, one vectorized lookup per request
+    # (robust to two segments of a request collapsing onto one bucket
+    # after param resolution)
+    by_req: Dict[int, List[int]] = {}
+    for ri, inv in entries:
+        by_req.setdefault(ri, []).append(inv)
+    seg_of: Dict[Entry, int] = {}
+    for ri, invs in by_req.items():
+        sis = requests[ri].segment_of_inv(np.asarray(invs, np.int64))
+        for inv, si in zip(invs, sis):
+            seg_of[(ri, int(inv))] = int(si)
+
+    # ---- canonical block assignment (order = first appearance) ----------
+    # group key (ri, si, block) -> [(flat task, inv, row-in-invocation)]
+    groups: Dict[Tuple[int, int, int], List[Tuple[int, int, int]]] = {}
+    seg_meta: Dict[Tuple[int, int], Tuple[int, Dict[int, int]]] = {}
+    total_tasks = 0
     for ri, inv in entries:
         req = requests[ri]
-        rows.append((ri, inv, req.invocation_tasks(inv)))
-
-    def seg_of_entry(ri, inv):
-        """Exact segment of one invocation (robust to two segments of a
-        request collapsing onto one bucket after param resolution)."""
-        return int(requests[ri].segment_of_inv(
-            np.asarray([inv], np.int64))[0])
+        tasks = req.invocation_tasks(inv)
+        total_tasks += len(tasks)
+        si = seg_of[(ri, inv)]
+        meta = seg_meta.get((ri, si))
+        if meta is None:
+            l_ids = sorted(req.segments[si].l_ids)
+            meta = seg_meta[(ri, si)] = \
+                (len(l_ids), {l: i for i, l in enumerate(l_ids)})
+        n_l, pos = meta
+        L = req.grid.n_nuisance
+        for row, t in enumerate(tasks):
+            rank = (int(t) // L) * n_l + pos[int(t) % L]
+            groups.setdefault((ri, si, rank // b_block), []).append(
+                (int(t), int(inv), row))
 
     results: Dict[Entry, np.ndarray] = {}
     wall = 0.0
-    for chunk in _chunk_rows(rows, b_block):
-        n_tasks = sum(len(t) for _, _, t in chunk)
-        b_pad = aligned_bucket(max(n_tasks, b_block), 8, b_align)
+    for (ri, si, block), members in groups.items():
+        req = requests[ri]
+        n = int(req.ledger.n_obs)
+        p = int(req.x.shape[1])
+        n_l = len(req.segments[si].l_ids)
+        seg_total = req.grid.n_rep * req.grid.n_folds * n_l
+        canon = min(b_block, seg_total - block * b_block)
+        b_pad = aligned_bucket(canon, 8, b_align)
+        tasks = np.array([t for t, _, _ in members], np.int64)
+        k = len(tasks)
 
-        # ---- data pages (lane order = first appearance in the chunk) ----
-        page_idx: Dict[int, int] = {}
-        chunk_pages: List = []
-        for ri, _, _ in chunk:
-            if ri not in page_idx:
-                page_idx[ri] = len(chunk_pages)
-                chunk_pages.append(ri)
+        # ---- data page (one request per canonical block) ----------------
         if pages is not None:
             pages_arr = pages.stack(
-                [(pages.page_key(requests[ri], n_pad, p_pad), requests[ri])
-                 for ri in chunk_pages], n_pad, p_pad)
+                [(pages.page_key(req, n_pad, p_pad), req)], n_pad, p_pad)
         else:
-            host_pages = [plan.page(ri, key) for ri in chunk_pages]
-            d_pad = pow2_bucket(len(host_pages), 1)
-            while len(host_pages) < d_pad:
-                host_pages.append(np.zeros((n_pad, p_pad), np.float32))
-            pages_arr = np.stack(host_pages)
+            pages_arr = plan.page(ri, key)[None]
 
         # ---- stack task tensors -----------------------------------------
-        first = requests[chunk[0][0]]
-        kd_probe = first.task_key_data(
-            seg_of_entry(chunk[0][0], chunk[0][1]), chunk[0][2][:1])
+        ye, we = req.wave_arrays(tasks)
+        kde = req.task_key_data(si, tasks)
         y = np.zeros((b_pad, n_pad), np.float32)
         w = np.zeros((b_pad, n_pad), np.float32)
         valid = np.zeros((b_pad, n_pad), np.float32)
-        kd = np.zeros((b_pad,) + kd_probe.shape[1:], kd_probe.dtype)
+        kd = np.zeros((b_pad,) + kde.shape[1:], kde.dtype)
         didx = np.zeros((b_pad,), np.int32)
-        slices: List[Tuple[int, int, int, int, int]] = []
-        r0 = 0
-        true_cells = 0
-        for ri, inv, tasks in chunk:
-            req = requests[ri]
-            n = int(req.ledger.n_obs)
-            ye, we = req.wave_arrays(tasks)
-            k = len(tasks)
-            y[r0:r0 + k, :n] = ye
-            w[r0:r0 + k, :n] = we
-            valid[r0:r0 + k, :n] = 1.0
-            kd[r0:r0 + k] = req.task_key_data(seg_of_entry(ri, inv), tasks)
-            didx[r0:r0 + k] = page_idx[ri]
-            slices.append((ri, inv, r0, k, n))
-            true_cells += k * n
-            r0 += k
+        y[:k, :n] = ye
+        w[:k, :n] = we
+        valid[:k, :n] = 1.0
+        kd[:k] = kde
 
         # ---- launch -----------------------------------------------------
         d_pad = int(pages_arr.shape[0])
-        seg = requests[chunk[0][0]].segments[plan.seg_of[(chunk[0][0], key)]]
+        seg = req.segments[si]
         prog = cache.program(key, b_pad, d_pad,
                              lambda: segment_batched_fn(seg))
         t0 = time.perf_counter()
@@ -232,12 +239,17 @@ def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
 
         cache.stats.launches += 1
         cache.stats.padding = cache.stats.padding.merge(PaddingStats(
-            true_cells=true_cells, padded_cells=b_pad * n_pad,
-            tasks=n_tasks, padded_tasks=b_pad))
-        for ri, inv, a, k, n in slices:
-            results[(ri, inv)] = out[a:a + k, :n]
+            true_cells=k * n, padded_cells=b_pad * n_pad,
+            tasks=k, padded_tasks=b_pad,
+            lane_cells=k * n_pad, true_feats=k * p,
+            padded_feats=k * p_pad))
+        tpi = req.grid.tasks_per_invocation(req.scaling)
+        for lane, (_, inv, row) in enumerate(members):
+            buf = results.get((ri, inv))
+            if buf is None:
+                buf = results[(ri, inv)] = np.empty((tpi, n), np.float32)
+            buf[row] = out[lane, :n]
     # what the old rule (one pow2 launch per bucket slice) would have cost
-    total_tasks = sum(len(t) for _, _, t in rows)
     cache.stats.padding = cache.stats.padding.merge(PaddingStats(
         padded_tasks_pow2=pow2_bucket(total_tasks, 8)))
     return results, wall

@@ -154,19 +154,31 @@ def aligned_bucket(n: int, quantum: int = 8, align: int = 1) -> int:
 
 @dataclass(frozen=True)
 class PaddingStats:
-    """Padding accounting for one set of bucketed program launches."""
+    """Padding accounting for one set of bucketed program launches.
+
+    Waste decomposes per axis: B (padded lanes), N (padded rows inside
+    real lanes), and P (padded feature columns inside real lanes) — so a
+    regression on one axis is visible instead of hiding in the blended
+    cell fraction.
+    """
     true_cells: int = 0                 # sum over tasks of their true N
     padded_cells: int = 0               # sum over launches of B_pad * N_pad
     tasks: int = 0
     padded_tasks: int = 0
     padded_tasks_pow2: int = 0          # what pow2 B-bucketing would have cost
+    lane_cells: int = 0                 # sum over launches of tasks * N_pad
+    true_feats: int = 0                 # sum over tasks of their true P
+    padded_feats: int = 0               # sum over tasks of P_pad
 
     def merge(self, other: "PaddingStats") -> "PaddingStats":
         return PaddingStats(self.true_cells + other.true_cells,
                             self.padded_cells + other.padded_cells,
                             self.tasks + other.tasks,
                             self.padded_tasks + other.padded_tasks,
-                            self.padded_tasks_pow2 + other.padded_tasks_pow2)
+                            self.padded_tasks_pow2 + other.padded_tasks_pow2,
+                            self.lane_cells + other.lane_cells,
+                            self.true_feats + other.true_feats,
+                            self.padded_feats + other.padded_feats)
 
     @property
     def waste_frac(self) -> float:
@@ -189,6 +201,21 @@ class PaddingStats:
         if not self.padded_tasks_pow2:
             return 0.0
         return 1.0 - self.tasks / self.padded_tasks_pow2
+
+    @property
+    def n_waste_frac(self) -> float:
+        """Fraction of rows inside *real* lanes that are N padding."""
+        if not self.lane_cells:
+            return 0.0
+        return 1.0 - self.true_cells / self.lane_cells
+
+    @property
+    def p_waste_frac(self) -> float:
+        """Fraction of feature columns inside real lanes that are P
+        padding."""
+        if not self.padded_feats:
+            return 0.0
+        return 1.0 - self.true_feats / self.padded_feats
 
 
 def stitch_predictions(fold_masks: np.ndarray, fold_preds: np.ndarray):

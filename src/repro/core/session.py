@@ -18,6 +18,15 @@ they reuse the same warm compiled programs.  The backend's device-resident
 page pool persists across drains, so steady-state serving re-transfers no
 feature pages.
 
+On the topology backend (``backend="topology"``) the same event loop
+drives many *host-mesh streams*: each ``step()`` advances one host's
+wave round-robin, buckets are placed on the host whose page pool already
+holds their data, and ledgers complete out of order across hosts exactly
+as they do across waves within one — the session code is unchanged
+because multi-host is just more streams behind the same three backend
+primitives.  Per-host accounting surfaces as
+``last_run_info.topology``.
+
 ``estimate(plan, data)`` is the one-shot convenience for a single request.
 
 Determinism: a request's result depends only on its own (plan, data) —
@@ -215,7 +224,9 @@ class DMLSession:
     programs, device-resident feature pages).  ``last_run_info`` exposes
     cross-request wave accounting — ``last_run_info.shared_waves > 0`` is
     the fusion at work; ``.pages`` is the page-pool telemetry;
-    ``.autoscale`` the autoscaler's decisions.
+    ``.autoscale`` the autoscaler's decisions; ``.topology`` the
+    per-host stream accounting when the backend is a topology (also
+    reachable as ``session.topology_info``).
 
     If the backend aborts mid-drain (e.g. retry budget exhausted), the
     incomplete requests stay queued with their partially-completed
@@ -357,6 +368,13 @@ class DMLSession:
         return [self._results[rid] for rid in targets]
 
     # ---- results ------------------------------------------------------
+    @property
+    def topology_info(self):
+        """Per-host stream accounting of the last drain (placements,
+        steals, per-host waves) — None on single-stream backends."""
+        info = self.last_run_info
+        return None if info is None else info.topology
+
     def result(self, request_id: int) -> DMLResult:
         return self._results[request_id]
 

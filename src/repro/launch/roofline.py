@@ -180,6 +180,64 @@ def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
     return 2.0 * n_active * shape.global_batch    # one token per sequence
 
 
+# ---------------------------------------------------------------------------
+# Megabatch bucket pricing (ISSUE 4: roofline-priced autoscaling)
+# ---------------------------------------------------------------------------
+def megabatch_task_flops(learner: str, n: int, p: int,
+                         params: Dict = None) -> float:
+    """Analytic FLOPs of ONE task lane of a megabatch bucket launch at
+    the bucket's padded (n, p) — the same counting convention as
+    ``model_flops`` (multiply-add = 2 FLOPs), per learner family.
+
+    Padded rows/columns do real arithmetic (that is the padding-waste
+    signal's whole point), so the estimate is taken at the *padded*
+    shape.  These feed the occupancy autoscaler's candidate pricing
+    before any duration has been observed — the "first-wave decision
+    cost-accurate too" ROADMAP item — so fidelity to ~2x is plenty;
+    ranking candidates only needs relative scale.
+    """
+    params = dict(params or ())
+    gram = 2.0 * n * p * p               # X^T W X
+    solve = (2.0 / 3.0) * p ** 3         # cholesky-ish SPD solve
+    predict = 2.0 * n * p
+    if learner in ("ridge", "ols"):
+        return gram + solve + predict
+    if learner == "lasso":               # FISTA: one gram, iterated grads
+        n_iter = int(params.get("n_iter", 200))
+        return gram + n_iter * (4.0 * p * p + 8.0 * p) + predict
+    if learner == "logistic":            # IRLS: gram + solve per newton step
+        n_iter = int(params.get("n_iter", 32))
+        return n_iter * (gram + solve + 4.0 * n * p) + predict
+    if learner == "kernel_ridge":        # m landmarks: K_nm, K_mm, solve
+        m = int(params.get("n_landmarks", 128))
+        return (2.0 * n * m * p + 2.0 * m * m * p
+                + (2.0 / 3.0) * m ** 3 + 2.0 * n * m)
+    if learner == "mlp":                 # fwd+bwd per step over the widths
+        hidden = tuple(params.get("hidden", (64, 64)))
+        n_steps = int(params.get("n_steps", 300))
+        dims = (p,) + hidden + (1,)
+        per_row = sum(2.0 * a * b for a, b in zip(dims, dims[1:]))
+        return n_steps * 6.0 * n * per_row + 2.0 * n * per_row
+    return gram + solve + predict        # unknown family: linear-ish guess
+
+
+def megabatch_task_bytes(n: int, p: int) -> float:
+    """HBM bytes one task lane moves per launch: its feature page plus
+    the y/w/valid rows in, the prediction row out (f32)."""
+    return 4.0 * (n * p + 4.0 * n)
+
+
+def invocation_roofline_s(learner: str, params, tasks_per_invocation: int,
+                          n_pad: int, p_pad: int) -> float:
+    """Roofline lower bound on one invocation's duration: max of the
+    compute and memory terms over its task lanes, on the same hardware
+    model as the rest of this module."""
+    t = max(int(tasks_per_invocation), 1)
+    flops = t * megabatch_task_flops(learner, n_pad, p_pad, params)
+    byts = t * megabatch_task_bytes(n_pad, p_pad)
+    return max(flops / PEAK_FLOPS, byts / HBM_BW)
+
+
 @dataclass
 class RooflineTerms:
     flops_per_dev: float

@@ -1,4 +1,6 @@
-from repro.serverless.autoscale import AutoscaleDecision, OccupancyAutoscaler
+from repro.serverless.autoscale import (
+    AutoscaleDecision, OccupancyAutoscaler, TopologyAutoscaler,
+)
 from repro.serverless.backends import (
     BACKEND_NAMES, BACKENDS, BackendRunInfo, DrainState, ExecutionBackend,
     InlineBackend, PoolConfig, RunReport, Segment, ShardedBackend,
@@ -6,12 +8,16 @@ from repro.serverless.backends import (
 )
 from repro.serverless.cost import Bill, BillingRecord, speedup_of, USD_PER_GB_S
 from repro.serverless.ledger import TaskLedger
+from repro.serverless.topology import (
+    HostMesh, Topology, TopologyBackend, TopologyInfo,
+)
 
 __all__ = [
-    "AutoscaleDecision", "OccupancyAutoscaler",
+    "AutoscaleDecision", "OccupancyAutoscaler", "TopologyAutoscaler",
     "Bill", "BillingRecord", "speedup_of", "USD_PER_GB_S", "PoolConfig",
     "RunReport", "TaskLedger", "ExecutionBackend",
     "BackendRunInfo", "DrainState", "InlineBackend", "WaveBackend",
     "ShardedBackend", "WorkRequest", "Segment", "BACKENDS", "BACKEND_NAMES",
     "make_backend",
+    "HostMesh", "Topology", "TopologyBackend", "TopologyInfo",
 ]

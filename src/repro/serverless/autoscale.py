@@ -1,4 +1,5 @@
-"""Occupancy-driven, cost-aware worker autoscaling (ISSUE 3, backend layer).
+"""Occupancy-driven, cost-aware worker autoscaling (ISSUE 3 backend
+layer; topology-aware + roofline-priced since ISSUE 4).
 
 Replaces the static ``PoolConfig.worker_schedule`` with a policy that
 sizes each wave from live signals the compiler already reports:
@@ -17,11 +18,23 @@ frontier as the paper's Figure 3 memory study, applied to pool width.
 The decision is a pure function of the observed state, so a drain's
 schedule is reproducible; and because per-task PRNG is fixed at compile
 time, no schedule the autoscaler picks can move an estimate.
+
+Candidate pricing resolves in order of signal quality: the simulate-mode
+work model, then the EMA of *measured* invocation durations, then — new
+in ISSUE 4 — the compiler's **roofline estimate** for the pending
+buckets (``launch/roofline.py::invocation_roofline_s``, derived from
+each bucket's per-task FLOP count), and only then the unit-work
+fallback.  Every decision records which source priced it and the full
+per-candidate cost table, so the first wave of a cold drain is already
+cost-reasoned instead of unit-guessed (ROADMAP "autoscaler signals").
+
+``TopologyAutoscaler`` sizes each host mesh's wave independently — one
+``OccupancyAutoscaler`` per host stream, each fed only its host's queue.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, List
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 from repro.serverless.cost import speedup_of
 
@@ -40,6 +53,11 @@ class AutoscaleDecision:
     est_time_s: float                   # modeled drain latency
     est_gb_s: float                     # modeled billed GB-seconds
     padding_waste: float                # compiler signal used for pricing
+    priced_by: str = "unit"             # simulate | ema | roofline | unit
+    host: int = -1                      # host stream (-1: single-stream)
+    # the full candidate table this decision was picked from:
+    # (n_workers, est_time_s, est_gb_s, score) per candidate
+    candidate_costs: Tuple[Tuple[int, float, float, float], ...] = ()
 
 
 class OccupancyAutoscaler:
@@ -50,8 +68,9 @@ class OccupancyAutoscaler:
     """
 
     def __init__(self, pool: "PoolConfig", *, cost_weight: float = None,
-                 candidates: List[int] = None):
+                 candidates: List[int] = None, host: int = -1):
         self.pool = pool
+        self.host = host
         self.cost_weight = (pool.autoscale_cost_weight
                             if cost_weight is None else cost_weight)
         self._cands = candidates
@@ -68,16 +87,26 @@ class OccupancyAutoscaler:
         else:
             self._ema_inv_s = 0.7 * self._ema_inv_s + 0.3 * duration_s
 
-    def _per_invocation_s(self, tasks_per_invocation: int) -> float:
-        """Modeled duration of one invocation at the pool's memory."""
+    def _per_invocation_s(self, tasks_per_invocation: int,
+                          roofline_inv_s) -> Tuple[float, str]:
+        """Modeled duration of one invocation and the signal that priced
+        it: simulate-mode work model > measured EMA > roofline > unit.
+        ``roofline_inv_s`` may be a float or a zero-argument thunk — the
+        thunk is only invoked when the higher-priority signals are
+        absent, so callers can pass it unconditionally and the pricing
+        priority lives in exactly one place."""
         pool = self.pool
         if pool.simulate and pool.base_work_s > 0:
-            return pool.base_work_s * tasks_per_invocation \
-                / speedup_of(pool.memory_mb)
+            return (pool.base_work_s * tasks_per_invocation
+                    / speedup_of(pool.memory_mb), "simulate")
         if self._ema_inv_s is not None:
-            return self._ema_inv_s
-        # no signal yet: a unit work model still ranks candidates correctly
-        return 1.0 / speedup_of(pool.memory_mb)
+            return self._ema_inv_s, "ema"
+        if callable(roofline_inv_s):
+            roofline_inv_s = roofline_inv_s()
+        if roofline_inv_s is not None and roofline_inv_s > 0:
+            return roofline_inv_s, "roofline"
+        # no signal at all: a unit work model still ranks candidates
+        return 1.0 / speedup_of(pool.memory_mb), "unit"
 
     def _candidates(self) -> List[int]:
         if self._cands is not None:
@@ -92,16 +121,20 @@ class OccupancyAutoscaler:
 
     # ------------------------------------------------------------------
     def decide(self, queue_depth: int, *, tasks_per_invocation: int = 1,
-               padding_waste: float = 0.0) -> AutoscaleDecision:
-        """Pick the worker count for the next wave given the live queue."""
+               padding_waste: float = 0.0,
+               roofline_inv_s=None) -> AutoscaleDecision:
+        """Pick the worker count for the next wave given the live queue.
+        ``roofline_inv_s``: float or lazy thunk (see _per_invocation_s)."""
         pool = self.pool
         lanes = pool.lanes_per_worker()
         depth = max(int(queue_depth), 1)
-        per_inv = self._per_invocation_s(tasks_per_invocation)
+        per_inv, priced_by = self._per_invocation_s(tasks_per_invocation,
+                                                    roofline_inv_s)
         # padded lanes do real work under wave-capacity-aligned B buckets
         per_lane = per_inv * (1.0 + max(0.0, min(padding_waste, 1.0)))
 
         best = None
+        table: List[Tuple[int, float, float, float]] = []
         for w in self._candidates():
             cap = max(1, w * lanes)
             waves = -(-depth // cap)                    # ceil
@@ -114,14 +147,46 @@ class OccupancyAutoscaler:
             gb_s = (depth * per_lane + idle_lanes * per_inv * 0.5) \
                 * pool.memory_mb / 1024.0
             score = time_s + self.cost_weight * gb_s
-            cand = AutoscaleDecision(
-                n_workers=w, capacity=cap, queue_depth=depth,
-                est_waves=waves, est_occupancy=occupancy,
-                est_time_s=time_s, est_gb_s=gb_s,
-                padding_waste=padding_waste)
+            table.append((w, time_s, gb_s, score))
+            cand = (w, cap, waves, occupancy, time_s, gb_s)
             if best is None or score < best[0] - 1e-12 or \
-                    (abs(score - best[0]) <= 1e-12
-                     and w < best[1].n_workers):
+                    (abs(score - best[0]) <= 1e-12 and w < best[1][0]):
                 best = (score, cand)
-        self.decisions.append(best[1])
-        return best[1]
+        w, cap, waves, occupancy, time_s, gb_s = best[1]
+        decision = AutoscaleDecision(
+            n_workers=w, capacity=cap, queue_depth=depth,
+            est_waves=waves, est_occupancy=occupancy,
+            est_time_s=time_s, est_gb_s=gb_s,
+            padding_waste=padding_waste, priced_by=priced_by,
+            host=self.host, candidate_costs=tuple(table))
+        self.decisions.append(decision)
+        return decision
+
+
+class TopologyAutoscaler:
+    """Per-mesh wave sizing: one ``OccupancyAutoscaler`` per host stream,
+    each deciding from its own queue depth and feeding its own measured
+    EMA — host meshes scale independently (a hot host widens its waves
+    while an idle one stays narrow), exactly the elasticity-per-worker
+    lever the paper's serverless pool has per lambda."""
+
+    def __init__(self, pool: "PoolConfig", n_hosts: int):
+        self.scalers: Dict[int, OccupancyAutoscaler] = {
+            h: OccupancyAutoscaler(pool, host=h) for h in range(n_hosts)}
+
+    def decide(self, host: int, queue_depth: int, *,
+               tasks_per_invocation: int = 1, padding_waste: float = 0.0,
+               roofline_inv_s=None) -> AutoscaleDecision:
+        return self.scalers[host].decide(
+            queue_depth, tasks_per_invocation=tasks_per_invocation,
+            padding_waste=padding_waste, roofline_inv_s=roofline_inv_s)
+
+    def observe(self, host: int, duration_s: float):
+        self.scalers[host].observe(duration_s)
+
+    @property
+    def decisions(self) -> List[AutoscaleDecision]:
+        out: List[AutoscaleDecision] = []
+        for h in sorted(self.scalers):
+            out.extend(self.scalers[h].decisions)
+        return out

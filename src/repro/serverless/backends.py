@@ -29,6 +29,10 @@ batch wrapper (admit everything, step until idle):
                   pages replicated, the task-batch axis sharded.
   InlineBackend   each bucket drained in one direct program call — the
                   reference scheduler tests compare against.
+  TopologyBackend (serverless/topology.py) per-host-mesh drain streams:
+                  buckets routed to the host whose PagePool already
+                  holds their pages, idle hosts steal, each mesh's wave
+                  sized by its own roofline-priced autoscaler lane.
 
 All backends emit the same ``RunReport``/``TaskLedger`` artifacts, so
 fault tolerance, billing, and resume behave identically at the API layer;
@@ -122,6 +126,11 @@ class PoolConfig:
     # device-resident feature-page pool budget (compile/pages.py); 0 turns
     # the pool off and falls back to host page stacking per launch
     page_pool_bytes: int = 256 * 1024 * 1024
+    # topology backend (serverless/topology.py): number of simulated host
+    # meshes when none is passed explicitly, and whether an idle host may
+    # steal queued buckets from a loaded one
+    n_hosts: int = 2
+    steal: bool = True
 
     def lanes_per_worker(self) -> int:
         """Worker 'memory' buys lane width (DESIGN.md §2 mapping)."""
@@ -329,6 +338,7 @@ class BackendRunInfo:
     compile: Optional[CompileStats] = None   # backend's warm-cache stats
     pages: Optional[PageStats] = None        # device page-pool accounting
     autoscale: List[AutoscaleDecision] = field(default_factory=list)
+    topology: Optional[object] = None   # per-host streams (TopologyInfo)
 
     @property
     def shared_waves(self) -> int:
@@ -363,6 +373,30 @@ class DrainState:
 # ---------------------------------------------------------------------------
 # helpers shared by backends
 # ---------------------------------------------------------------------------
+def roofline_pending_inv_s(requests, groups) -> Optional[float]:
+    """Mean roofline-modeled invocation duration over bucketed pending
+    entries (launch/roofline.py) — the autoscaler's cold-start pricing
+    signal, replacing the unit-work model before any duration has been
+    observed.  Opaque-callable buckets carry no analytic model and are
+    skipped; returns None when nothing could be priced."""
+    from repro.launch.roofline import invocation_roofline_s
+    total, n = 0.0, 0
+    for key, entries in groups.items():
+        ident = key.learner
+        if not (isinstance(ident, tuple) and len(ident) == 2
+                and isinstance(ident[0], str)) or ident[0] == "opaque":
+            continue
+        learner, ptuple = ident
+        for ri, _ in entries:
+            req = requests[ri]
+            total += invocation_roofline_s(
+                learner, dict(ptuple),
+                req.grid.tasks_per_invocation(req.scaling),
+                key.n_pad, key.p_pad)
+            n += 1
+    return total / n if n else None
+
+
 def _fill_rows(req: WorkRequest, inv_ids: np.ndarray, wall: float,
                pool: PoolConfig):
     """Record successful rows with measured billing (non-wave backends)."""
@@ -443,6 +477,23 @@ class _StreamBackend:
             req.report.wave_sizes.append(len(invs))
         return per_req
 
+    def _note_wave(self, state: DrainState, ris, step_wall: float):
+        """Close out one direct-scheduler wave: the tag-deduped member
+        list, per-request wall-time accounting, and early finalization
+        (shared by the bucket-stream and topology schedulers; the wave
+        backend has its own fault-aware variant)."""
+        members = []
+        for ri in ris:
+            tag = state.requests[ri].tag
+            tag = ri if tag is None else tag
+            if tag not in members:
+                members.append(tag)
+        state.info.wave_members.append(members)
+        for ri in ris:
+            state.requests[ri].report.fit_time_s += step_wall
+            state.requests[ri].report.response_time_s += step_wall
+            self._finalize_request(state, ri)
+
 
 class _BucketStreamBackend(_StreamBackend):
     """Inline/Sharded stepping: one pending bucket slice per step."""
@@ -469,17 +520,7 @@ class _BucketStreamBackend(_StreamBackend):
         state.seen_buckets.add(bkey)
         state.info.buckets = len(state.seen_buckets)
         state.info.waves += 1
-        members = []
-        for ri in per_req:
-            tag = state.requests[ri].tag
-            tag = ri if tag is None else tag
-            if tag not in members:
-                members.append(tag)
-        state.info.wave_members.append(members)
-        for ri in per_req:
-            state.requests[ri].report.fit_time_s += step_wall
-            state.requests[ri].report.response_time_s += step_wall
-            self._finalize_request(state, ri)
+        self._note_wave(state, list(per_req), step_wall)
         self._checkpoint(state)
         return True
 
@@ -615,10 +656,14 @@ class WaveBackend(_StreamBackend):
             tasks = sum(
                 len(p) * req.grid.tasks_per_invocation(req.scaling)
                 for p, req in zip(pendings, state.requests))
+            # lazy thunk: the autoscaler invokes it only when no
+            # higher-priority pricing signal (simulate model, EMA) exists
             decision = self.autoscaler.decide(
                 depth,
                 tasks_per_invocation=max(1, tasks // max(depth, 1)),
-                padding_waste=self.compiler.stats.padding.waste_frac)
+                padding_waste=self.compiler.stats.padding.waste_frac,
+                roofline_inv_s=lambda: roofline_pending_inv_s(
+                    state.requests, state.plan.pending_by_bucket()))
             state.info.autoscale.append(decision)
             return decision.n_workers
         return pool.n_workers
@@ -764,12 +809,17 @@ class WaveBackend(_StreamBackend):
 # ---------------------------------------------------------------------------
 BACKENDS = {"wave": WaveBackend, "inline": InlineBackend,
             "sharded": ShardedBackend}
-BACKEND_NAMES = tuple(BACKENDS)
+# "topology" resolves lazily in make_backend: serverless/topology.py
+# imports this module, so eager registration would be a cycle
+BACKEND_NAMES = tuple(BACKENDS) + ("topology",)
 
 
 def make_backend(backend, pool: Optional[PoolConfig] = None):
     """Resolve a backend name (or pass through an instance)."""
     if isinstance(backend, str):
+        if backend == "topology":
+            from repro.serverless.topology import TopologyBackend
+            return TopologyBackend(pool)
         if backend not in BACKENDS:
             raise KeyError(f"unknown backend {backend!r}; known: "
                            f"{BACKEND_NAMES}")

@@ -1,4 +1,4 @@
-"""Removed single-request executor facade — pure re-exports remain.
+"""DEPRECATED compat shim — pure re-exports, removed next release.
 
 ``ServerlessExecutor`` (the PR-0 raw-array front door) is gone: every
 front-end now goes through the one execution path — ``DMLPlan`` +
@@ -10,13 +10,26 @@ opaque learner callable lower through
 
 This module is kept only so old ``from repro.serverless.executor import
 PoolConfig`` imports keep working (``DMLSession``/``estimate`` re-export
-lazily to avoid a core <-> serverless import cycle).
+lazily to avoid a core <-> serverless import cycle).  Importing it now
+emits a ``DeprecationWarning`` — this is the one release of notice
+before the module is deleted; import from ``repro.serverless`` /
+``repro.core`` instead.
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.serverless.backends import (                    # noqa: F401
     PoolConfig, RunReport, Segment, WaveBackend, WorkRequest,
 )
+
+_DEPRECATION_MSG = (
+    "repro.serverless.executor is deprecated and will be removed in the "
+    "next release: import PoolConfig/RunReport/Segment/WaveBackend/"
+    "WorkRequest from repro.serverless, and DMLSession/estimate from "
+    "repro.core, instead.")
+
+warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=2)
 
 __all__ = ["DMLSession", "estimate", "PoolConfig", "RunReport", "Segment",
            "WaveBackend", "WorkRequest"]
@@ -24,6 +37,7 @@ __all__ = ["DMLSession", "estimate", "PoolConfig", "RunReport", "Segment",
 
 def __getattr__(name):
     if name in ("DMLSession", "estimate"):
+        warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=2)
         from repro.core import session
         return getattr(session, name)
     if name == "ServerlessExecutor":

@@ -1,0 +1,353 @@
+"""The topology layer (ISSUE 4 tentpole): per-mesh drain streams with
+locality-aware bucket placement.
+
+The drain engine so far ran one stream over one host mesh.  This module
+models the *cluster*: a ``Topology`` of host meshes — real pods split out
+of ``launch/mesh.py::make_production_mesh`` ("pod", "data", "model"), or
+N simulated hosts over this process's devices — each owning a per-host
+device-resident ``PagePool`` (all pools sharing one ``PageDirectory``)
+and one drain stream.  ``TopologyBackend`` is the scheduler over them:
+
+  * **placement** — every megabatch bucket is routed to a host by
+    ``sharding/policy.py::place_bucket``, scored against each host's
+    page residency (stack-cached > pages-resident > cold, ties to the
+    least-loaded host).  Steady-state traffic therefore re-lands on the
+    host already holding its pages: zero transfers of any kind.
+  * **per-mesh streams** — one ``step()`` advances ONE host's stream by
+    one wave (round-robin cursor), so the session's event loop
+    interleaves all hosts exactly as it interleaves waves today;
+    ledgers complete out of order across hosts as they do within one.
+  * **work-stealing** — a host whose queue drained steals the
+    least-local bucket from the most-loaded host
+    (``policy.steal_choice``); the stolen bucket's pages arrive
+    device-to-device from the holder (a *cross-host transfer*, counted
+    by the directory) and stay resident, so a re-stolen bucket is free.
+  * **autoscaling** — a ``TopologyAutoscaler`` sizes each host's wave
+    independently, pricing cold candidates with the compiler's
+    per-bucket roofline FLOP estimates
+    (``launch/roofline.py::invocation_roofline_s``) until measured
+    durations take over.
+
+Determinism: placement and stealing only decide *where* a bucket's
+fixed-shape program runs; per-task PRNG streams are fixed at compile
+time, so the topology drain is bitwise-identical to the single-host
+inline path for every learner family (tests/test_topology.py, gated in
+CI by BENCH_topology.json).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.compile.pages import PageDirectory, PagePool, PageStats
+from repro.serverless.autoscale import TopologyAutoscaler
+from repro.serverless.backends import (
+    BackendRunInfo, DrainState, PoolConfig, _compile, _StreamBackend,
+    roofline_pending_inv_s,
+)
+from repro.sharding.policy import place_bucket, steal_choice
+
+
+# ---------------------------------------------------------------------------
+# the cluster model
+# ---------------------------------------------------------------------------
+@dataclass
+class HostMesh:
+    """One host: its device mesh, the lead device its page pool pins
+    pages to, and the pool itself (directory-shared)."""
+    host_id: int
+    mesh: object                        # jax.sharding.Mesh of this host
+    device: object                      # lead device (page residency)
+    pool: PagePool
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.asarray(self.mesh.devices).size)
+
+
+class Topology:
+    """The set of host meshes one ``TopologyBackend`` schedules over.
+
+    Pools (and therefore page residency) persist across drains — the
+    topology is the warm state; drains come and go.
+    """
+
+    def __init__(self, hosts: List[HostMesh], directory: PageDirectory):
+        self.hosts = hosts
+        self.directory = directory
+
+    def __len__(self) -> int:
+        return len(self.hosts)
+
+    @classmethod
+    def _from_meshes(cls, meshes, page_pool_bytes: int) -> "Topology":
+        directory = PageDirectory()
+        hosts = []
+        for i, mesh in enumerate(meshes):
+            dev = np.asarray(mesh.devices).flat[0]
+            hosts.append(HostMesh(
+                host_id=i, mesh=mesh, device=dev,
+                pool=PagePool(page_pool_bytes, host_id=i,
+                              directory=directory, device=dev)))
+        return cls(hosts, directory)
+
+    @classmethod
+    def simulated(cls, n_hosts: int,
+                  page_pool_bytes: int = 256 * 1024 * 1024) -> "Topology":
+        """N simulated hosts over this process's devices (the forced
+        host-platform CI path)."""
+        from repro.launch.mesh import make_sim_host_meshes
+        return cls._from_meshes(make_sim_host_meshes(n_hosts),
+                                page_pool_bytes)
+
+    @classmethod
+    def from_mesh(cls, mesh,
+                  page_pool_bytes: int = 256 * 1024 * 1024) -> "Topology":
+        """One host per index of the mesh's leading "pod" axis (the
+        production ("pod", "data", "model") meshes); a pod-less mesh
+        becomes a single-host topology."""
+        from repro.launch.mesh import split_pod_meshes
+        return cls._from_meshes(split_pod_meshes(mesh), page_pool_bytes)
+
+    def page_stats(self) -> PageStats:
+        """Cluster-wide page accounting (sum of the per-host pools)."""
+        out = PageStats()
+        for h in self.hosts:
+            out = out.merge(h.pool.stats)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+@dataclass
+class HostLaneInfo:
+    """Per-host-stream accounting for one drain."""
+    host_id: int
+    n_devices: int
+    waves: int = 0
+    invocations: int = 0
+    buckets_placed: int = 0             # routed here at admission
+    steals: int = 0                     # buckets this host stole
+
+
+@dataclass
+class TopologyInfo:
+    """Cross-host accounting for one topology drain (session telemetry:
+    ``last_run_info.topology``)."""
+    n_hosts: int
+    hosts: List[HostLaneInfo]
+    steals: int = 0
+    placements: List[Tuple[object, int, float]] = field(
+        default_factory=list)           # (bucket key, host, score)
+
+
+@dataclass
+class TopologyDrainState(DrainState):
+    """One continuous drain over all host streams: the shared bucket
+    plan plus the live bucket→host assignment and the round-robin
+    cursor the event loop steps with."""
+    assignment: Dict[object, int] = field(default_factory=dict)
+    cursor: int = 0
+
+
+# ---------------------------------------------------------------------------
+# the backend
+# ---------------------------------------------------------------------------
+class TopologyBackend(_StreamBackend):
+    """Per-mesh drain streams with page-locality routing.
+
+    One ``step(state)`` advances one host stream by one wave: the
+    session's event loop therefore steps all streams round-robin, and a
+    host's wave is sized by its own autoscaler lane.  Direct scheduler
+    (no fault injection — the wave backend models that); the reference
+    for its results is the single-host inline path, bitwise.
+    """
+    name = "topology"
+
+    def __init__(self, pool: Optional[PoolConfig] = None,
+                 topology: Optional[Topology] = None,
+                 n_hosts: Optional[int] = None):
+        self.pool = pool or PoolConfig()
+        if topology is None:
+            topology = Topology.simulated(
+                n_hosts if n_hosts is not None else self.pool.n_hosts,
+                self.pool.page_pool_bytes or 0)
+        self.topology = topology
+        self.compiler = _compile().ProgramCache()
+        self.autoscaler = TopologyAutoscaler(self.pool, len(topology)) \
+            if self.pool.autoscale else None
+        self.pages = None               # per-host pools live on the topology
+
+    @property
+    def _programs(self) -> Dict:
+        return self.compiler._programs
+
+    # ---- drain lifecycle ---------------------------------------------
+    def begin_drain(self) -> TopologyDrainState:
+        info = BackendRunInfo(backend=self.name)
+        info.compile = self.compiler.stats
+        info.pages = self.topology.page_stats()
+        info.topology = TopologyInfo(
+            n_hosts=len(self.topology),
+            hosts=[HostLaneInfo(h.host_id, h.n_devices)
+                   for h in self.topology.hosts])
+        return TopologyDrainState(plan=_compile().MegabatchPlan(), info=info)
+
+    # admit() is inherited: routing happens lazily in step() (one pass
+    # over all unassigned buckets), so batch admission stays linear
+
+    # ---- placement ----------------------------------------------------
+    def _bucket_pkeys(self, state, key, entries) -> Tuple:
+        """The bucket's page keys, one per request with pending entries
+        (canonical blocks launch one request per program, so each page's
+        singleton stack is the unit the policy probes)."""
+        order: Dict[int, None] = {}
+        for ri, _ in entries:
+            order.setdefault(ri)
+        return tuple(
+            PagePool.page_key(state.requests[ri], key.n_pad, key.p_pad)
+            for ri in order)
+
+    def _loads(self, state, groups) -> List[int]:
+        """Pending invocations currently assigned to each host."""
+        loads = [0] * len(self.topology)
+        for key, entries in groups.items():
+            h = state.assignment.get(key)
+            if h is not None:
+                loads[h] += len(entries)
+        return loads
+
+    def _route(self, state: TopologyDrainState, groups) -> None:
+        """Assign every not-yet-routed bucket to its best host (loads
+        maintained incrementally across the pass)."""
+        pools = [h.pool for h in self.topology.hosts]
+        loads = self._loads(state, groups)
+        for key, entries in groups.items():
+            if key in state.assignment:
+                continue
+            placed = place_bucket(self._bucket_pkeys(state, key, entries),
+                                  pools, loads)
+            state.assignment[key] = placed.host
+            loads[placed.host] += len(entries)
+            info = state.info.topology
+            info.hosts[placed.host].buckets_placed += 1
+            info.placements.append((key, placed.host, placed.score))
+
+    def _try_steal(self, state: TopologyDrainState, groups,
+                   thief: int) -> List:
+        """An idle host takes the least-local bucket from the most
+        loaded host; the migration is recorded and the assignment
+        flipped so the thief finishes the bucket."""
+        queues: Dict[int, List] = {}
+        for key in groups:
+            h = state.assignment[key]
+            if h != thief:
+                queues.setdefault(h, []).append(key)
+        pools = [h.pool for h in self.topology.hosts]
+        pick = steal_choice(
+            queues, pools,
+            lambda k: self._bucket_pkeys(state, k, groups[k]))
+        if pick is None:
+            return []
+        _, key = pick
+        state.assignment[key] = thief
+        info = state.info.topology
+        info.steals += 1
+        info.hosts[thief].steals += 1
+        return [key]
+
+    # ---- the per-host wave --------------------------------------------
+    def _wave_capacity(self, state, host_id: int, mine, groups) -> int:
+        pool = self.pool
+        if pool.worker_schedule is not None:   # legacy static ramp, per
+            sched = pool.worker_schedule       # host stream (wave parity)
+            waves_done = state.info.topology.hosts[host_id].waves
+            w = sched[min(waves_done, len(sched) - 1)]
+            return max(1, w * pool.lanes_per_worker())
+        if self.autoscaler is None:
+            return max(1, pool.n_workers * pool.lanes_per_worker())
+        depth = sum(len(groups[k]) for k in mine)
+        tasks = sum(
+            state.requests[ri].grid.tasks_per_invocation(
+                state.requests[ri].scaling)
+            for k in mine for ri, _ in groups[k])
+        decision = self.autoscaler.decide(
+            host_id, depth,
+            tasks_per_invocation=max(1, tasks // max(depth, 1)),
+            padding_waste=self.compiler.stats.padding.waste_frac,
+            roofline_inv_s=lambda: roofline_pending_inv_s(
+                state.requests, {k: groups[k] for k in mine}))
+        state.info.autoscale.append(decision)
+        return max(1, decision.n_workers * pool.lanes_per_worker())
+
+    def _host_wave(self, state: TopologyDrainState, host_id: int,
+                   mine: List, groups) -> None:
+        host = self.topology.hosts[host_id]
+        # a zero byte budget means "pool off" (PoolConfig contract):
+        # fall back to host page stacking instead of churning an
+        # always-evicting device pool
+        host_pages = host.pool if host.pool.byte_budget > 0 else None
+        lane = state.info.topology.hosts[host_id]
+        capacity = self._wave_capacity(state, host_id, mine, groups)
+        t0 = time.perf_counter()
+        # fill the wave bucket-by-bucket, truncating the last bucket to
+        # the remaining capacity; each selection takes at least one
+        # invocation, so a wave always makes progress
+        selected: List[Tuple[object, List]] = []
+        taken = 0
+        for key in mine:
+            if taken >= capacity and selected:
+                break
+            ents = groups[key][:max(capacity - taken, 1)]
+            selected.append((key, ents))
+            taken += len(ents)
+        wall = 0.0
+        per_req_all: Dict[int, None] = {}
+        for key, ents in selected:
+            running: Dict[int, List[int]] = {}
+            for ri, inv in ents:
+                running.setdefault(ri, []).append(inv)
+            for ri, invs in running.items():
+                state.requests[ri].ledger.mark_running(invs)
+            results, bwall = _compile().run_bucket(
+                state.plan, self.compiler, key, ents, pages=host_pages)
+            wall += bwall
+            self._book_direct(state, ents, results, bwall)
+            state.seen_buckets.add(key)
+            for ri in running:
+                per_req_all.setdefault(ri)
+        step_wall = time.perf_counter() - t0
+        lane.waves += 1
+        lane.invocations += taken
+        state.info.waves += 1
+        state.info.buckets = len(state.seen_buckets)
+        if self.autoscaler is not None and taken:
+            self.autoscaler.observe(host_id, wall / taken)
+        self._note_wave(state, list(per_req_all), step_wall)
+        state.info.pages = self.topology.page_stats()
+        self._checkpoint(state)
+
+    # ---- the stream scheduler -----------------------------------------
+    def step(self, state: TopologyDrainState) -> bool:
+        """Advance ONE host stream by one wave (round-robin); False once
+        no host has pending work."""
+        groups = state.plan.pending_by_bucket()
+        if not groups:
+            return False
+        self._route(state, groups)      # retries may resurface buckets
+        n = len(self.topology)
+        for off in range(n):
+            h = (state.cursor + off) % n
+            mine = [k for k in groups if state.assignment[k] == h]
+            if not mine and self.pool.steal:
+                mine = self._try_steal(state, groups, h)
+            if not mine:
+                continue
+            self._host_wave(state, h, mine, groups)
+            state.cursor = (h + 1) % n
+            return True
+        return False

@@ -53,7 +53,10 @@ def test_backend_parity(case, scaling, request):
     np.testing.assert_allclose(p_wave, p_inline, rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(p_shard, p_inline, rtol=1e-6, atol=1e-6)
     assert r_wave.theta == pytest.approx(r_inline.theta, abs=1e-7)
-    assert r_shard.theta == pytest.approx(r_inline.theta, abs=1e-7)
+    # shard_map can retile the per-lane reductions, so the sharded
+    # backend agrees to float tolerance, not bitwise (it is exact on a
+    # 1-device mesh; the multihost-smoke job runs this 8-way)
+    assert r_shard.theta == pytest.approx(r_inline.theta, abs=1e-6)
 
 
 def test_wave_parity_under_faults_and_stragglers(plr_case):
@@ -73,7 +76,10 @@ def test_backend_selected_via_plan(plr_case):
     plan, data = plr_case
     thetas = {name: estimate(plan.replace(backend=name), data).theta
               for name in BACKEND_NAMES}
-    assert len(set(thetas.values())) == 1
+    # the unsharded schedulers are bitwise-identical; sharded agrees to
+    # float tolerance on multi-device meshes (exact on 1 device)
+    assert thetas["wave"] == thetas["inline"] == thetas["topology"]
+    assert thetas["sharded"] == pytest.approx(thetas["inline"], abs=1e-6)
 
 
 def test_sharded_backend_stays_warm(plr_case):
@@ -152,7 +158,7 @@ def test_bucketed_multi_request_parity_all_backends():
     for a, b in zip(p_sh, p_in):
         np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
     assert t_wv == pytest.approx(t_in, abs=1e-7)
-    assert t_sh == pytest.approx(t_in, abs=1e-7)
+    assert t_sh == pytest.approx(t_in, abs=1e-6)   # shard retiling noise
 
 
 def test_key_consuming_learners_identical_across_backends():
@@ -169,8 +175,9 @@ def test_key_consuming_learners_identical_across_backends():
         WaveBackend(PoolConfig(n_workers=1, memory_mb=256)), plan, data)
     p_sh, r_sh = _run_backend(ShardedBackend(POOL), plan, data)
     np.testing.assert_array_equal(p_wv, p_in)
-    np.testing.assert_array_equal(p_sh, p_in)
-    assert r_wv.theta == r_in.theta == r_sh.theta
+    np.testing.assert_allclose(p_sh, p_in, rtol=1e-6, atol=1e-6)
+    assert r_wv.theta == r_in.theta
+    assert r_sh.theta == pytest.approx(r_in.theta, abs=1e-6)
 
 
 def test_make_backend_registry():

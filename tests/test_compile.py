@@ -202,6 +202,84 @@ def test_padding_stats_accounting():
     assert PaddingStats().waste_frac == 0.0
 
 
+def test_padding_stats_per_axis_breakdown():
+    """B/N/P waste decompose independently: padded lanes, padded rows
+    inside real lanes, padded feature columns inside real lanes."""
+    s = PaddingStats(true_cells=600, padded_cells=2048, tasks=8,
+                     padded_tasks=16, lane_cells=8 * 128,
+                     true_feats=8 * 5, padded_feats=8 * 8)
+    assert s.b_waste_frac == pytest.approx(0.5)
+    assert s.n_waste_frac == pytest.approx(1 - 600 / 1024)
+    assert s.p_waste_frac == pytest.approx(1 - 5 / 8)
+    assert PaddingStats().n_waste_frac == 0.0
+    assert PaddingStats().p_waste_frac == 0.0
+
+
+def test_small_bucket_launches_at_aligned_tail_size():
+    """The ISSUE 4 padding fix: a bucket with fewer tasks than B_BLOCK
+    launches at its sublane-aligned size instead of padding to the full
+    block (the regression that put asyncdrain B-waste at ~65%)."""
+    from repro.compile import ProgramCache
+    plan, data = _plr(100, seed=6)                 # 4 inv x 3 tasks = 12
+    req = compile_request(plan, data)
+    bplan = plan_buckets([req])
+    (bkey,) = bplan.buckets
+    cache = ProgramCache()
+    entries = [(0, int(i)) for i in req.ledger.pending()]
+    run_bucket(bplan, cache, bkey, entries)
+    pad = cache.stats.padding
+    assert pad.tasks == 12
+    assert pad.padded_tasks == 16                  # aligned, not 32
+    assert pad.b_waste_frac <= 0.25
+
+
+@pytest.mark.parametrize("name,params", [
+    ("ridge", {"reg": 1.0}),
+    ("kernel_ridge", {"reg": 1.0, "n_landmarks": 16}),
+    ("mlp", {"hidden": (8,), "n_steps": 10}),
+])
+def test_tail_launch_b_invariance(name, params):
+    """Canonical launch blocks make chunking invisible: executing a
+    bucket whole, one invocation at a time, or in ragged slices yields
+    bitwise-identical predictions, because every task always launches
+    at its canonical block's compiled B (missing lanes ride as padding
+    and lane contents don't couple)."""
+    from repro.compile import ProgramCache
+    plan, data = _plr(100, seed=7, learner=name, learner_params=params,
+                      n_rep=4)                     # 8 inv x 3 = 24 tasks
+    req = compile_request(plan, data)
+    bplan = plan_buckets([req])
+    (bkey,) = bplan.buckets
+    entries = [(0, int(i)) for i in req.ledger.pending()]
+
+    whole, _ = run_bucket(bplan, ProgramCache(), bkey, entries)
+    one_at_a_time = {}
+    for e in entries:                   # out-of-order, one invocation each
+        res, _ = run_bucket(bplan, ProgramCache(), bkey, [e])
+        one_at_a_time.update(res)
+    ragged = {}
+    for sl in (entries[:3], entries[3:4], entries[4:]):
+        res, _ = run_bucket(bplan, ProgramCache(), bkey, sl)
+        ragged.update(res)
+    for e in entries:
+        np.testing.assert_array_equal(whole[e], one_at_a_time[e])
+        np.testing.assert_array_equal(whole[e], ragged[e])
+
+
+def test_scaling_levels_share_launch_shapes():
+    """Canonical blocks are built over flat task ids, which both scaling
+    levels share — so per-split and per-fold runs compile the same B and
+    agree bitwise even when the segment spans multiple blocks."""
+    from repro.core import estimate
+    plan_a, data = _plr(90, seed=11, n_rep=6)      # 36 tasks: 32 + tail 4
+    plan_b = DMLPlan.for_model("plr", learner="ridge",
+                               learner_params={"reg": 1.0}, n_folds=3,
+                               n_rep=6, seed=111, scaling="n_folds*n_rep")
+    ra = estimate(plan_a, data, backend="inline")
+    rb = estimate(plan_b, data, backend="inline")
+    np.testing.assert_array_equal(ra.thetas, rb.thetas)
+
+
 def test_multi_request_checkpoints_do_not_clobber(tmp_path):
     """Batched inline/sharded drains write one checkpoint per request
     (same .r{i} layout as the wave backend), never one shared file."""

@@ -170,10 +170,32 @@ def test_simulated_billing_tracks_memory():
 
 
 def test_removed_executor_import_raises():
-    import repro.serverless.executor as executor_mod
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        import repro.serverless.executor as executor_mod
     with pytest.raises(AttributeError, match="removed"):
         executor_mod.ServerlessExecutor
     # the compat re-exports still resolve
     assert executor_mod.PoolConfig is PoolConfig
-    from repro.core import DMLSession
-    assert executor_mod.DMLSession is DMLSession
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        from repro.core import DMLSession
+        assert executor_mod.DMLSession is DMLSession
+
+
+def test_executor_compat_module_warns_deprecation():
+    """The import-compat shim gives one release of notice before
+    removal: importing the module (or touching its lazy re-exports)
+    emits a DeprecationWarning pointing at the new import paths."""
+    import importlib
+    import sys
+
+    import repro.serverless.executor as executor_mod
+    with pytest.warns(DeprecationWarning,
+                      match="repro.serverless.executor is deprecated"):
+        importlib.reload(executor_mod)
+    sys.modules.pop("repro.serverless.executor", None)
+    with pytest.warns(DeprecationWarning, match="will be removed"):
+        from repro.serverless.executor import PoolConfig as compat_pool
+    assert compat_pool is PoolConfig
