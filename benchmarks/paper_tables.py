@@ -179,12 +179,18 @@ def megabatch_compile(n_requests: int = 32, n_rep: int = 2,
 
     # cold: fresh jit caches for both paths (first pass in this process),
     # then warm repeats — burst traffic sees cold, steady serving warm.
+    # Both paths take min() over the SAME sample count (>= 6: a warm
+    # drain is single-digit ms and the baseline ~100 ms, so the extra
+    # samples are cheap) — equal counts keep the speedup_warm CI gate
+    # stable against scheduler noise without biasing either side.
+    warm_samples = max(repeats, 6)
     before_cold = run_before()
-    before_warm = min(run_before() for _ in range(repeats))
+    before_warm = min(run_before() for _ in range(warm_samples))
     backend = WaveBackend(pool)
     after_cold, info = run_after(backend)
     after_warm, _ = min(
-        (run_after(backend) for _ in range(repeats)), key=lambda t: t[0])
+        (run_after(backend) for _ in range(warm_samples)),
+        key=lambda t: t[0])
     stats = backend.compiler.stats
     return {
         "n_requests": n_requests,
@@ -204,14 +210,87 @@ def megabatch_compile(n_requests: int = 32, n_rep: int = 2,
         "shared_waves": info.shared_waves,
         "padding_waste_pct": 100.0 * stats.padding.waste_frac,
         # per-axis breakdown: B lanes (canonical blocks vs the old pow2
-        # rule), N rows inside real lanes, P feature columns
+        # rule), N rows inside real lanes (sublane-aligned vs pow2), P
+        # feature columns
         "padding_waste_b_pct": 100.0 * stats.padding.b_waste_frac,
         "padding_waste_b_pow2_pct": 100.0 * stats.padding.b_waste_frac_pow2,
         "padding_waste_n_pct": 100.0 * stats.padding.n_waste_frac,
+        "padding_waste_n_pow2_pct": 100.0 * stats.padding.n_waste_frac_pow2,
         "padding_waste_p_pct": 100.0 * stats.padding.p_waste_frac,
         "compile_cache_hit_rate": stats.hit_rate,
         "programs_compiled": stats.misses,
+        "launches": stats.launches,
+        "blocks": stats.blocks,
+        "fused_launches": stats.fused_launches,
     }
+
+
+def fusion_block_launch(n_requests: int = 12, n_rep: int = 2,
+                        warm_rounds: int = 5) -> Dict:
+    """Same-shape block fusion + non-blocking dispatch (ISSUE 5 ->
+    BENCH_fusion.json): the megabatch serving workload drained warm with
+    fusion ON vs OFF on two identically-configured wave pools.
+
+    Reports launches-per-drain before/after (fused must be strictly
+    lower — the tentpole's whole point), warm/cold tasks/sec both ways,
+    and the measured **overlap ratio** of the fused path's dispatch
+    queue: host seconds spent booking/stacking while launches were in
+    flight vs host seconds blocked waiting on the device (> 0 means the
+    non-blocking dispatch really overlaps host booking with device
+    execution).
+    """
+    import dataclasses
+    import time as _time
+
+    from repro.core import DMLData, DMLPlan
+    from repro.core.session import compile_request
+    from repro.data import make_plr_data
+    from repro.serverless import PoolConfig, WaveBackend
+
+    pool = PoolConfig(n_workers=16, memory_mb=1024)
+    cases = [(DMLPlan.for_model("plr", n_folds=3, n_rep=n_rep,
+                                learner="ridge", learner_params={"reg": 1.0},
+                                seed=100 + i, pool=pool),
+              DMLData.from_dict(make_plr_data(n_obs=100 + i, dim_x=8,
+                                              theta=0.5, seed=i)))
+             for i in range(n_requests)]
+    n_tasks = sum(p.resampling.n_rep * p.resampling.n_folds * p.n_nuisance
+                  for p, _ in cases)
+
+    def drain(backend):
+        reqs = [compile_request(p, d) for p, d in cases]
+        t0 = _time.perf_counter()
+        info = backend.run_requests(reqs)
+        return _time.perf_counter() - t0, info
+
+    out = {"n_requests": n_requests, "n_tasks": n_tasks,
+           "warm_rounds": warm_rounds}
+    for label, fuse in (("fused", True), ("unfused", False)):
+        backend = WaveBackend(dataclasses.replace(pool, fuse=fuse))
+        cold_s, _ = drain(backend)
+        launches0 = backend.compiler.stats.launches
+        warm_s, last_info = 1e9, None
+        for _ in range(warm_rounds):
+            s, info = drain(backend)
+            if s < warm_s:
+                warm_s, last_info = s, info
+        stats = backend.compiler.stats
+        out[f"cold_s_{label}"] = cold_s
+        out[f"warm_s_{label}"] = warm_s
+        out[f"tasks_per_sec_cold_{label}"] = n_tasks / cold_s
+        out[f"tasks_per_sec_warm_{label}"] = n_tasks / warm_s
+        out[f"launches_per_drain_{label}"] = \
+            (stats.launches - launches0) / warm_rounds
+        out[f"blocks_per_drain_{label}"] = stats.blocks / (warm_rounds + 1)
+        if label == "fused":
+            out["fused_launches_total"] = stats.fused_launches
+            d = last_info.dispatch
+            out["overlap_ratio_warm"] = d.overlap_ratio
+            out["host_overlap_s_warm"] = d.host_overlap_s
+            out["harvest_wait_s_warm"] = d.wait_s
+    out["warm_speedup_fused_vs_unfused"] = \
+        out["warm_s_unfused"] / out["warm_s_fused"]
+    return out
 
 
 SERVING_FAMILIES = [
@@ -324,6 +403,7 @@ def async_drain(n_requests_per_family: int = 1, n_rep: int = 2,
         "padding_waste_b_pct": 100.0 * padding.b_waste_frac,
         "padding_waste_b_pow2_pct": 100.0 * padding.b_waste_frac_pow2,
         "padding_waste_n_pct": 100.0 * padding.n_waste_frac,
+        "padding_waste_n_pow2_pct": 100.0 * padding.n_waste_frac_pow2,
         "padding_waste_p_pct": 100.0 * padding.p_waste_frac,
         "autoscale_workers_min": min(d.n_workers for d in decisions)
                                  if decisions else None,

@@ -14,14 +14,19 @@ The ``megabatch`` benchmark additionally writes machine-readable
 padding waste %, compile-cache hit rate), the ``asyncdrain`` benchmark
 writes ``BENCH_asyncdrain.json`` (steady-state tasks/sec, page-pool hit
 rate, transfer bytes saved, per-axis padding waste, bitwise parity vs the
-inline path), and the ``topology`` benchmark writes
-``BENCH_topology.json`` (per-host page hit rates, steal counts,
-cross-host transfer convergence, roofline-priced autoscale candidates)
-so the perf trajectory is tracked across PRs; ``--smoke`` runs
-megabatch + asyncdrain at CI size and fails loudly if the compiler
-regresses below the per-segment path, the page pool stops serving steady
-traffic from device residency, B-axis padding waste exceeds 25%, or
-async results drift from the synchronous path.  ``--topology-smoke``
+inline path), the ``blockfusion`` benchmark writes ``BENCH_fusion.json``
+(warm/cold tasks/sec fused vs unfused, launches-per-drain before/after,
+measured host/device overlap ratio of the non-blocking dispatch queue),
+and the ``topology`` benchmark writes ``BENCH_topology.json`` (per-host
+page hit rates, steal counts, cross-host transfer convergence,
+roofline-priced autoscale candidates) so the perf trajectory is tracked
+across PRs; ``--smoke`` runs megabatch + asyncdrain + blockfusion at CI
+size and fails loudly if the compiler regresses below the per-segment
+path (cold >= 1x, warm >= 15x), the page pool stops serving steady
+traffic from device residency, B-axis padding waste exceeds 25%, N-axis
+waste exceeds 30%, fused drains stop launching strictly fewer programs
+than unfused ones, the dispatch queue measures zero host/device overlap,
+or async results drift from the synchronous path.  ``--topology-smoke``
 gates the multi-host acceptance criteria: bitwise parity on every
 family, zero steady-state cross-host page transfers, per-host hit rate
 >= 0.9, and roofline-priced first-wave autoscale decisions.
@@ -48,6 +53,7 @@ def main() -> None:
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--megabatch-json", default="BENCH_megabatch.json")
     ap.add_argument("--asyncdrain-json", default="BENCH_asyncdrain.json")
+    ap.add_argument("--fusion-json", default="BENCH_fusion.json")
     ap.add_argument("--topology-json", default="BENCH_topology.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -55,7 +61,7 @@ def main() -> None:
         only = set()
         args.fast = True
         if args.smoke:
-            only |= {"megabatch", "asyncdrain"}
+            only |= {"megabatch", "asyncdrain", "blockfusion"}
         if args.topology_smoke:
             only |= {"topology"}
 
@@ -124,6 +130,21 @@ def main() -> None:
         with open(args.megabatch_json, "w") as f:
             json.dump(mb, f, indent=1, default=float)
 
+    if want("blockfusion"):
+        fu = T.fusion_block_launch(n_requests=12 if args.fast else 32,
+                                   warm_rounds=5)
+        results["blockfusion"] = fu
+        rows.append(("blockfusion_warm_drain",
+                     fu["warm_s_fused"] * 1e6,
+                     f"tasks_per_sec={fu['tasks_per_sec_warm_fused']:.0f}_"
+                     f"launches={fu['launches_per_drain_fused']:.0f}"
+                     f"(unfused_{fu['launches_per_drain_unfused']:.0f})_"
+                     f"overlap={fu['overlap_ratio_warm']:.2f}_"
+                     f"fused_speedup="
+                     f"{fu['warm_speedup_fused_vs_unfused']:.1f}x"))
+        with open(args.fusion_json, "w") as f:
+            json.dump(fu, f, indent=1, default=float)
+
     if want("asyncdrain"):
         ad = T.async_drain(n_requests_per_family=1, n_rep=2,
                            rounds=3 if args.fast else 5)
@@ -164,10 +185,24 @@ def main() -> None:
     if args.smoke:
         mb = results["megabatch"]
         ad = results["asyncdrain"]
+        fu = results["blockfusion"]
         fail = None
         if mb["speedup_cold"] < 1.0:
             fail = (f"megabatch cold speedup {mb['speedup_cold']:.2f}x < 1x "
                     "vs per-segment baseline")
+        elif mb["speedup_warm"] < 15.0:
+            fail = (f"megabatch warm speedup {mb['speedup_warm']:.1f}x "
+                    "< 15x vs per-segment baseline (same-shape block "
+                    "fusion / dispatch hot path regressed)")
+        elif fu["launches_per_drain_fused"] >= \
+                fu["launches_per_drain_unfused"]:
+            fail = (f"fused drains launch "
+                    f"{fu['launches_per_drain_fused']:.0f} programs, not "
+                    f"strictly fewer than unfused "
+                    f"{fu['launches_per_drain_unfused']:.0f}")
+        elif fu["overlap_ratio_warm"] <= 0.0:
+            fail = ("dispatch queue measured zero host/device overlap "
+                    "(non-blocking dispatch regressed to synchronous)")
         elif ad["page_pool_hit_rate"] < 0.9:
             fail = (f"page-pool steady hit rate "
                     f"{ad['page_pool_hit_rate']:.2f} < 0.9")
@@ -181,6 +216,10 @@ def main() -> None:
             fail = (f"B-axis padding waste "
                     f"{ad['padding_waste_b_pct']:.1f}% > 25% "
                     "(canonical tail blocks regressed)")
+        elif ad["padding_waste_n_pct"] > 30.0:
+            fail = (f"N-axis padding waste "
+                    f"{ad['padding_waste_n_pct']:.1f}% > 30% "
+                    "(sublane-aligned N buckets regressed)")
         elif not ad["bitwise_parity_all"]:
             bad = [k for k, v in ad["bitwise_parity"].items() if not v]
             fail = f"async vs inline bitwise parity broken for {bad}"
@@ -189,9 +228,14 @@ def main() -> None:
             sys.exit(1)
         print(f"SMOKE OK: megabatch {mb['speedup_cold']:.1f}x cold / "
               f"{mb['speedup_warm']:.1f}x warm vs per-segment baseline; "
+              f"fusion {fu['launches_per_drain_fused']:.0f} launches/drain "
+              f"(unfused {fu['launches_per_drain_unfused']:.0f}), "
+              f"overlap {fu['overlap_ratio_warm']:.2f}; "
               f"asyncdrain {ad['steady_tasks_per_sec']:.0f} tasks/s steady, "
               f"page hit rate {ad['page_pool_hit_rate']:.2f}, "
               f"B waste {ad['padding_waste_b_pct']:.0f}%, "
+              f"N waste {ad['padding_waste_n_pct']:.0f}% "
+              f"(pow2 was {ad['padding_waste_n_pow2_pct']:.0f}%), "
               f"bitwise parity {ad['bitwise_parity_all']}")
 
     if args.topology_smoke:

@@ -17,11 +17,13 @@ from repro.compile.buckets import (
 )
 from repro.compile.pages import PageDirectory, PagePool, PageStats
 from repro.compile.program import (
-    CompileStats, ProgramCache, run_bucket, segment_batched_fn,
+    BucketDispatch, CompileStats, ProgramCache, dispatch_bucket,
+    run_bucket, segment_batched_fn,
 )
 
 __all__ = [
     "BucketKey", "Entry", "MegabatchPlan", "plan_buckets",
     "PageDirectory", "PagePool", "PageStats",
-    "CompileStats", "ProgramCache", "run_bucket", "segment_batched_fn",
+    "BucketDispatch", "CompileStats", "ProgramCache", "dispatch_bucket",
+    "run_bucket", "segment_batched_fn",
 ]

@@ -14,12 +14,19 @@ M x K x L task grid.
 
 Padding rules per learner family:
 
-  * registry learners that are feature-pad safe: N and P rounded up to
-    the next power of two (``pow2_bucket``) — <2x waste, and the long
-    tail of request shapes collapses onto a handful of programs;
-  * mlp (init scale depends on the true P): N padded, P exact;
-  * opaque callables (legacy ``ServerlessExecutor`` path): exact shapes —
-    we cannot prove padding is inert for arbitrary user code.
+  * registry learners: N rounded up to the sublane quantum
+    (``aligned_bucket``, multiples of 8 — mirroring the B tail rule),
+    so N-axis waste is bounded at < 8 rows per lane instead of pow2's
+    <2x; P stays pow2-bucketed for the feature-pad-safe families (the
+    long tail of widths collapses onto a handful of programs);
+  * mlp (init scale depends on the true P): N aligned, P exact;
+  * opaque callables (the legacy raw-array path): exact shapes — we
+    cannot prove padding is inert for arbitrary user code.
+
+The aligned N rule trades program variety for waste: distinct N values
+8 apart no longer share a program, but steady serving re-presents the
+same N values and the N-axis was the dominant waste term once B was
+fixed (35.9% on BENCH_asyncdrain vs 25% B; now gated <= 30% in CI).
 
 The planner is pure bookkeeping (numpy only); execution and the warm
 program cache live in program.py.
@@ -31,7 +38,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.crossfit import pow2_bucket
+from repro.core.crossfit import aligned_bucket, pow2_bucket
 from repro.learners import FEATURE_PAD_SAFE
 
 Entry = Tuple[int, int]                 # (request index, invocation id)
@@ -69,15 +76,15 @@ class MegabatchPlan:
         ri = len(self.requests)
         self.requests.append(req)
         n = int(req.ledger.n_obs)
-        p = int(np.asarray(req.x).shape[1])
+        p = int(req.x.shape[1])
         for si, seg in enumerate(req.segments):
             if seg.learner is None:            # opaque callable: exact shapes
                 n_pad, p_pad = n, p
             elif seg.learner in FEATURE_PAD_SAFE:
-                n_pad = pow2_bucket(n, self.min_n)
+                n_pad = aligned_bucket(n, self.min_n)
                 p_pad = pow2_bucket(p, self.min_p)
             else:                              # e.g. mlp: P must stay exact
-                n_pad, p_pad = pow2_bucket(n, self.min_n), p
+                n_pad, p_pad = aligned_bucket(n, self.min_n), p
             key = BucketKey(seg.bucket_id, n_pad, p_pad)
             self.bucket_of[(ri, si)] = key
             # first-wins: if two segments of one request collapse onto one
@@ -124,11 +131,16 @@ class MegabatchPlan:
                 groups.setdefault(key, []).append((ri, int(inv)))
         return groups
 
-    def pending_by_bucket(self) -> Dict[BucketKey, List[Entry]]:
-        """Every not-yet-DONE invocation of every request, bucketed."""
+    def pending_by_bucket(self, exclude=None) -> Dict[BucketKey, List[Entry]]:
+        """Every not-yet-DONE invocation of every request, bucketed.
+
+        ``exclude`` is the dispatched-but-unharvested entry set of the
+        caller's in-flight queue: those invocations are on device already
+        and must not be re-dispatched while their launch is pending."""
         entries: List[Entry] = []
         for ri, req in enumerate(self.requests):
-            entries.extend((ri, int(inv)) for inv in req.ledger.pending())
+            entries.extend(e for inv in req.ledger.pending()
+                           if (e := (ri, int(inv))) not in (exclude or ()))
         return self.group_entries(entries)
 
 def plan_buckets(requests: Sequence, *, min_n: int = 8,

@@ -301,14 +301,16 @@ class PagePool:
         ``needs`` is ``[(page_key, request), ...]`` in lane order (lane i
         = needs[i]); D is pow2 of the lane count.
 
-        Singleton launches (the canonical-block rule: ``run_bucket``
-        passes exactly one need per launch) consume the resident
-        ``(1, N_pad, P_pad)`` page **directly** — no copy, no second
-        device allocation, no cache entry beyond the page itself; a
-        repeat composition is booked as a stack hit because the launch
-        array was served with zero copies.  The multi-lane path below is
-        kept for the ROADMAP "same-shape block fusion" item, which would
-        hand multi-request compositions straight back to it.
+        Singleton launches (per-block dispatch: one need per launch)
+        consume the resident ``(1, N_pad, P_pad)`` page **directly** —
+        no copy, no second device allocation, no cache entry beyond the
+        page itself; a repeat composition is booked as a stack hit
+        because the launch array was served with zero copies.  The
+        multi-lane path below serves **fused launches** (ISSUE 5): a
+        multi-request same-shape group hands its union composition here,
+        pays one concatenation cold, and every warm repeat of the same
+        composition gets the identical materialized stack back — the
+        fused hot path is zero-copy exactly like the singleton one.
         """
         if len(needs) == 1:
             pk, req = needs[0]

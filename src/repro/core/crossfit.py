@@ -167,6 +167,7 @@ class PaddingStats:
     padded_tasks: int = 0
     padded_tasks_pow2: int = 0          # what pow2 B-bucketing would have cost
     lane_cells: int = 0                 # sum over launches of tasks * N_pad
+    lane_cells_pow2: int = 0            # what pow2 N-bucketing would have cost
     true_feats: int = 0                 # sum over tasks of their true P
     padded_feats: int = 0               # sum over tasks of P_pad
 
@@ -177,6 +178,7 @@ class PaddingStats:
                             self.padded_tasks + other.padded_tasks,
                             self.padded_tasks_pow2 + other.padded_tasks_pow2,
                             self.lane_cells + other.lane_cells,
+                            self.lane_cells_pow2 + other.lane_cells_pow2,
                             self.true_feats + other.true_feats,
                             self.padded_feats + other.padded_feats)
 
@@ -208,6 +210,14 @@ class PaddingStats:
         if not self.lane_cells:
             return 0.0
         return 1.0 - self.true_cells / self.lane_cells
+
+    @property
+    def n_waste_frac_pow2(self) -> float:
+        """The N-axis waste the old pow2 rule would have produced on the
+        same launches — kept so benchmarks report before/after."""
+        if not self.lane_cells_pow2:
+            return 0.0
+        return 1.0 - self.true_cells / self.lane_cells_pow2
 
     @property
     def p_waste_frac(self) -> float:

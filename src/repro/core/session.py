@@ -11,6 +11,14 @@ still executing.  ``poll()`` advances the engine by one wave; ``run()``
 and ``estimate()`` are blocking wrappers over the same event loop, so the
 batch-synchronous public API is unchanged.
 
+Dispatch is **non-blocking** (ISSUE 5): a ``step()`` launches its
+buckets and returns with the results still in flight on device; the
+ledgers are booked by a later step's *harvest-on-poll* (each step first
+books any landed buckets, blocking only when nothing is left to
+dispatch).  Every host-side phase of the loop — admission, placement,
+autoscaling, result assembly, callbacks — therefore overlaps device
+execution; ``last_run_info.dispatch`` reports the measured overlap.
+
 On the wave backend the requests' task grids fuse into shared dispatch
 waves — many concurrent estimations amortize the same capacity cycles
 (the batch-processing throughput lever); on the sharded/inline backends
@@ -130,12 +138,25 @@ def compile_request(plan: DMLPlan, data: DMLData,
         ptuple = tuple(sorted((k, _hashable(v)) for k, v in params.items()))
         segments.append(Segment(l_ids=tuple(g),
                                 key=jax.random.key(rs.seed + g[0]),
+                                key_ref=("seed", rs.seed + g[0]),
                                 cache_key=(ns.learner, ptuple),
                                 learner=ns.learner, params=ptuple))
 
+    # content identity of the request's task tensors: fold masks derive
+    # from (seed, K, M), targets/train_w from (data CONTENT — all role
+    # arrays, not just X — plus roles and subsets), per-task keys from
+    # the segment seeds — so this tuple pins every stacked block tensor,
+    # letting the compiler reuse them across drains (steady serving
+    # re-lowers identical requests every round).  ``content_key`` (not
+    # ``fingerprint``) is load-bearing: two datasets sharing one X but
+    # different y/d/z must not share cached targets/weights.
+    work_key = ("plan-v1", data.content_key(), rs.seed, rs.n_folds,
+                rs.n_rep, plan.scaling,
+                tuple((ns.target, ns.subset, ns.learner_key)
+                      for ns in plan.nuisances))
     req = WorkRequest.create(grid, plan.scaling, data.x, targets, train_w,
                              segments, ledger=ledger, tag=tag,
-                             data_key=data.fingerprint())
+                             data_key=data.fingerprint(), work_key=work_key)
     req.fold_masks = masks                      # needed for stitching
     return req
 
@@ -317,8 +338,10 @@ class DMLSession:
             self._state_backend = None
 
     def poll(self) -> List[int]:
-        """Admit anything queued, advance the drain by one wave, and
-        return the ids of requests that completed in that wave."""
+        """Admit anything queued, advance the drain by one step (book
+        any landed in-flight buckets, then dispatch the next wave
+        without blocking), and return the ids of requests that completed
+        in that step."""
         if not self._queue and self._state is None:
             return []
         self._admit_queued()

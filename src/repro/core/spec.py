@@ -90,6 +90,20 @@ class DMLData:
             object.__setattr__(self, "_fingerprint", fp)
         return fp
 
+    def content_key(self) -> Tuple:
+        """Content identity of EVERY role array (cached).  This — not
+        ``fingerprint``, which keys only the feature page — is the
+        provenance key for caching tensors derived from the outcome/
+        treatment columns (e.g. the compiler's stacked block tensors):
+        two datasets sharing one X but different y/d/z must never
+        collide."""
+        ck = getattr(self, "_content_key", None)
+        if ck is None:
+            ck = tuple((r, fingerprint_array(getattr(self, r)))
+                       for r in _ROLES if getattr(self, r) is not None)
+            object.__setattr__(self, "_content_key", ck)
+        return ck
+
     # ---- access ----------------------------------------------------------
     @property
     def n_obs(self) -> int:

@@ -227,15 +227,31 @@ def megabatch_task_bytes(n: int, p: int) -> float:
     return 4.0 * (n * p + 4.0 * n)
 
 
+# Host-side cost of dispatching ONE compiled program (jit call + runtime
+# enqueue), measured ~0.3 ms on the serving hosts.  It dwarfs the
+# compute/memory terms for small buckets — which is exactly why the
+# dispatcher packs same-shape blocks into one fused launch: the overhead
+# is paid once per launch, not once per block.
+LAUNCH_OVERHEAD_S = 3e-4
+
+
 def invocation_roofline_s(learner: str, params, tasks_per_invocation: int,
-                          n_pad: int, p_pad: int) -> float:
+                          n_pad: int, p_pad: int, *,
+                          amortized_launches: float = 0.0) -> float:
     """Roofline lower bound on one invocation's duration: max of the
     compute and memory terms over its task lanes, on the same hardware
-    model as the rest of this module."""
+    model as the rest of this module.
+
+    ``amortized_launches`` is this invocation's share of its bucket's
+    fused program launches (e.g. 1/len(bucket) when the whole bucket
+    rides one fused launch): the autoscaler passes it so cold pricing
+    reflects the dispatch overhead the fused hot path actually pays.
+    The default 0 keeps the pure compute/memory bound."""
     t = max(int(tasks_per_invocation), 1)
     flops = t * megabatch_task_flops(learner, n_pad, p_pad, params)
     byts = t * megabatch_task_bytes(n_pad, p_pad)
-    return max(flops / PEAK_FLOPS, byts / HBM_BW)
+    return max(flops / PEAK_FLOPS, byts / HBM_BW) \
+        + amortized_launches * LAUNCH_OVERHEAD_S
 
 
 @dataclass

@@ -40,3 +40,13 @@ def maybe_scan(body, init, xs, length=None):
         n = jax.tree.leaves(xs)[0].shape[0]
     return jax.lax.scan(body, init, xs, length=n,
                         unroll=n if unroll_inner else 1)
+
+
+def bounded_put(cache: dict, key, value, max_entries: int) -> None:
+    """Shared bounded-FIFO insert for the warm-path caches (key tables,
+    index maps, block layouts): evict oldest entries past the cap.
+    Lives here because the compile and serverless layers both use it and
+    this module has no repro-internal imports (no cycle risk)."""
+    while len(cache) >= max_entries:
+        cache.pop(next(iter(cache)))
+    cache[key] = value

@@ -7,6 +7,9 @@ from repro.serverless.backends import (
     WaveBackend, WorkRequest, make_backend,
 )
 from repro.serverless.cost import Bill, BillingRecord, speedup_of, USD_PER_GB_S
+from repro.serverless.dispatch import (
+    DispatchQueue, DispatchStats, PendingBucket,
+)
 from repro.serverless.ledger import TaskLedger
 from repro.serverless.topology import (
     HostMesh, Topology, TopologyBackend, TopologyInfo,
@@ -19,5 +22,6 @@ __all__ = [
     "BackendRunInfo", "DrainState", "InlineBackend", "WaveBackend",
     "ShardedBackend", "WorkRequest", "Segment", "BACKENDS", "BACKEND_NAMES",
     "make_backend",
+    "DispatchQueue", "DispatchStats", "PendingBucket",
     "HostMesh", "Topology", "TopologyBackend", "TopologyInfo",
 ]

@@ -49,7 +49,7 @@ class AutoscaleDecision:
     capacity: int                       # n_workers * lanes_per_worker
     queue_depth: int                    # pending invocations observed
     est_waves: int
-    est_occupancy: float                # depth / (waves * capacity)
+    est_occupancy: float                # (depth + in_flight)/(waves * cap)
     est_time_s: float                   # modeled drain latency
     est_gb_s: float                     # modeled billed GB-seconds
     padding_waste: float                # compiler signal used for pricing
@@ -58,6 +58,10 @@ class AutoscaleDecision:
     # the full candidate table this decision was picked from:
     # (n_workers, est_time_s, est_gb_s, score) per candidate
     candidate_costs: Tuple[Tuple[int, float, float, float], ...] = ()
+    # dispatched-but-unharvested invocations at decision time: occupancy,
+    # NOT queue depth — in-flight work is already placed on a device, so
+    # sizing for it again would double-provision the pool
+    in_flight: int = 0
 
 
 class OccupancyAutoscaler:
@@ -121,13 +125,21 @@ class OccupancyAutoscaler:
 
     # ------------------------------------------------------------------
     def decide(self, queue_depth: int, *, tasks_per_invocation: int = 1,
-               padding_waste: float = 0.0,
+               padding_waste: float = 0.0, in_flight: int = 0,
                roofline_inv_s=None) -> AutoscaleDecision:
         """Pick the worker count for the next wave given the live queue.
-        ``roofline_inv_s``: float or lazy thunk (see _per_invocation_s)."""
+
+        ``queue_depth`` must count only dispatchable work; ``in_flight``
+        is the dispatched-but-unharvested invocation count of the
+        caller's queue (non-blocking dispatch).  In-flight work raises
+        the recorded occupancy but never the worker count — it already
+        holds device capacity, and sizing for it again would
+        double-provision the pool.  ``roofline_inv_s``: float or lazy
+        thunk (see _per_invocation_s)."""
         pool = self.pool
         lanes = pool.lanes_per_worker()
         depth = max(int(queue_depth), 1)
+        in_flight = max(int(in_flight), 0)
         per_inv, priced_by = self._per_invocation_s(tasks_per_invocation,
                                                     roofline_inv_s)
         # padded lanes do real work under wave-capacity-aligned B buckets
@@ -138,7 +150,7 @@ class OccupancyAutoscaler:
         for w in self._candidates():
             cap = max(1, w * lanes)
             waves = -(-depth // cap)                    # ceil
-            occupancy = depth / (waves * cap)
+            occupancy = (depth + in_flight) / (waves * cap)
             time_s = waves * (per_inv + pool.dispatch_overhead_s)
             # real invocations bill their (padding-inflated) lane-seconds;
             # idle lanes in the final partial wave still hold worker slots
@@ -158,7 +170,8 @@ class OccupancyAutoscaler:
             est_waves=waves, est_occupancy=occupancy,
             est_time_s=time_s, est_gb_s=gb_s,
             padding_waste=padding_waste, priced_by=priced_by,
-            host=self.host, candidate_costs=tuple(table))
+            host=self.host, candidate_costs=tuple(table),
+            in_flight=in_flight)
         self.decisions.append(decision)
         return decision
 
@@ -176,10 +189,11 @@ class TopologyAutoscaler:
 
     def decide(self, host: int, queue_depth: int, *,
                tasks_per_invocation: int = 1, padding_waste: float = 0.0,
-               roofline_inv_s=None) -> AutoscaleDecision:
+               in_flight: int = 0, roofline_inv_s=None) -> AutoscaleDecision:
         return self.scalers[host].decide(
             queue_depth, tasks_per_invocation=tasks_per_invocation,
-            padding_waste=padding_waste, roofline_inv_s=roofline_inv_s)
+            padding_waste=padding_waste, in_flight=in_flight,
+            roofline_inv_s=roofline_inv_s)
 
     def observe(self, host: int, duration_s: float):
         self.scalers[host].observe(duration_s)

@@ -1,0 +1,211 @@
+"""Non-blocking dispatch queues (ISSUE 5 tentpole, serverless layer).
+
+``compile/program.py::dispatch_bucket`` launches a bucket slice and
+returns in-flight ``jax.Array`` handles instead of blocking per block.
+This module is the layer the backends manage those handles with: one
+``DispatchQueue`` per drain stream — per *host mesh* on the topology
+backend, matching PR 4's per-host streams as the dispatch unit — holding
+``PendingBucket``s until their ledgers must complete.
+
+The queue is what turns the drain engine's event loop into real
+host/device overlap: ``step()`` dispatches work and returns without
+waiting, so placement, stealing, admission, autoscaling, and result
+assembly all run while the device executes.  Booking happens at
+*harvest*: non-blocking for buckets whose launches report ready
+(``harvest_ready``), blocking only when a drain has nothing left to
+dispatch (``harvest_next``).
+
+Accounting (``DispatchStats``) feeds BENCH_fusion.json: ``wait_s`` is
+host time spent blocked on the device, ``host_overlap_s`` is host work
+performed while launches were in flight — their ratio is the measured
+overlap of host booking with device execution.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+# (request index, invocation id) — compile/buckets.py::Entry, redeclared
+# here because repro.compile must load lazily (core <-> serverless cycle)
+Entry = Tuple[int, int]
+
+
+@dataclass
+class DispatchStats:
+    """In-flight accounting for one drain's dispatch queues."""
+    dispatched: int = 0                 # buckets pushed
+    harvested: int = 0                  # buckets booked
+    ready_harvests: int = 0             # booked without blocking
+    wait_s: float = 0.0                 # host blocked on the device
+    host_overlap_s: float = 0.0         # host work while work in flight
+    in_flight_peak: int = 0             # max concurrent pending buckets
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of device execution hidden behind host booking:
+        overlapped host seconds vs total (overlapped + blocked) seconds
+        spanning the in-flight windows."""
+        total = self.host_overlap_s + self.wait_s
+        return self.host_overlap_s / total if total > 0 else 0.0
+
+    def merge(self, other: "DispatchStats") -> "DispatchStats":
+        return DispatchStats(
+            self.dispatched + other.dispatched,
+            self.harvested + other.harvested,
+            self.ready_harvests + other.ready_harvests,
+            self.wait_s + other.wait_s,
+            self.host_overlap_s + other.host_overlap_s,
+            max(self.in_flight_peak, other.in_flight_peak))
+
+    def summary(self) -> Dict:
+        return {"buckets_dispatched": self.dispatched,
+                "buckets_harvested": self.harvested,
+                "ready_harvests": self.ready_harvests,
+                "harvest_wait_s": self.wait_s,
+                "host_overlap_s": self.host_overlap_s,
+                "overlap_ratio": self.overlap_ratio,
+                "in_flight_peak": self.in_flight_peak}
+
+
+@dataclass(eq=False)
+class PendingBucket:
+    """One dispatched bucket slice awaiting harvest.
+
+    Identity equality (``eq=False``) is load-bearing: the queue removes
+    pending buckets with ``list.remove``, and a generated ``__eq__``
+    would compare the wrapped in-flight ``jax.Array`` handles
+    elementwise — raising whenever two in-flight buckets share a key.
+
+    Wraps the compiler's ``BucketDispatch`` with the scheduling context
+    the booking callback needs (which host stream launched it, when).
+    An invocation's rows can straddle launches, so the *bucket* is the
+    booking unit — ``ready()`` only when every launch has landed.
+    """
+    dispatch: object                    # compile/program.py::BucketDispatch
+    host: int = -1                      # host stream (-1: single-stream)
+    t_dispatch: float = field(default_factory=time.perf_counter)
+
+    @property
+    def key(self):
+        return self.dispatch.key
+
+    @property
+    def entries(self) -> List[Entry]:
+        return self.dispatch.entries
+
+    def ready(self) -> bool:
+        return self.dispatch.ready()
+
+
+# booking callback: (pending_bucket, results, elapsed_s_since_dispatch)
+BookFn = Callable[[PendingBucket, Dict[Entry, object], float], None]
+
+
+class DispatchQueue:
+    """FIFO of in-flight buckets for one drain stream.
+
+    ``push`` marks the start of an in-flight window; host work done
+    between a push and the next harvest is credited to
+    ``host_overlap_s`` (the device was executing meanwhile), while time
+    spent inside a blocking ``harvest`` is ``wait_s``.  ``max_inflight``
+    bounds device-side liveness: a push beyond it first force-harvests
+    the oldest bucket.
+    """
+
+    def __init__(self, max_inflight: int = 8,
+                 stats: Optional[DispatchStats] = None):
+        self.max_inflight = max(1, int(max_inflight))
+        self.stats = stats if stats is not None else DispatchStats()
+        self._pending: List[PendingBucket] = []
+        self._mark: Optional[float] = None   # start of host-overlap window
+        self._t_attr = 0.0                   # duration-attribution frontier
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def empty(self) -> bool:
+        return not self._pending
+
+    def in_flight_entries(self) -> Set[Entry]:
+        """Dispatched-but-unharvested (request, invocation) pairs — the
+        set schedulers must exclude from their pending view, and the
+        autoscalers must count as occupancy rather than queue depth."""
+        out: Set[Entry] = set()
+        for pb in self._pending:
+            out.update(pb.entries)
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        """Dispatched-but-unharvested invocation count."""
+        return sum(len(pb.entries) for pb in self._pending)
+
+    # ------------------------------------------------------------------
+    def _note_overlap(self):
+        """Credit host time since the last dispatch/harvest event as
+        overlapped work (only meaningful while something is in flight)."""
+        now = time.perf_counter()
+        if self._mark is not None and self._pending:
+            self.stats.host_overlap_s += now - self._mark
+        self._mark = now
+
+    def push(self, pb: PendingBucket, book: BookFn) -> None:
+        """Enqueue one dispatched bucket; force-harvests the oldest
+        first when the in-flight bound is reached."""
+        self._note_overlap()
+        while len(self._pending) >= self.max_inflight:
+            self.harvest_next(book)
+        self._pending.append(pb)
+        self.stats.dispatched += 1
+        self.stats.in_flight_peak = max(self.stats.in_flight_peak,
+                                        len(self._pending))
+        self._mark = time.perf_counter()
+
+    def _harvest(self, pb: PendingBucket, book: BookFn, blocked: bool):
+        t0 = time.perf_counter()
+        results = pb.dispatch.harvest()
+        t1 = time.perf_counter()
+        if blocked:
+            self.stats.wait_s += t1 - t0
+        self.stats.harvested += 1
+        self._mark = t1
+        # NON-OVERLAPPING duration attribution: concurrent in-flight
+        # buckets share one wall-clock span, so billing each of them
+        # (dispatch -> harvest) would charge the span k times over —
+        # inflating GB-seconds, the autoscaler EMA, and the timeout
+        # check.  Each bucket is billed only the span beyond the
+        # frontier already attributed to earlier harvests; summed
+        # durations then equal the true elapsed wall, matching the old
+        # synchronous per-bucket accounting.
+        elapsed = t1 - max(pb.t_dispatch, self._t_attr)
+        self._t_attr = t1
+        book(pb, results, max(elapsed, 0.0))
+
+    def harvest_ready(self, book: BookFn) -> int:
+        """Book every bucket whose launches all report ready — the
+        non-blocking poll the event loop runs each step.  Harvests in
+        FIFO order but stops at the first not-ready bucket only for
+        ordering of *blocking* waits; ready buckets behind a slow one
+        are still booked (out-of-order harvest)."""
+        self._note_overlap()
+        done = [pb for pb in self._pending if pb.ready()]
+        for pb in done:
+            self._pending.remove(pb)
+            self._harvest(pb, book, blocked=False)
+            self.stats.ready_harvests += 1
+        return len(done)
+
+    def harvest_next(self, book: BookFn) -> bool:
+        """Block for the oldest in-flight bucket (the drain has nothing
+        left to dispatch); False if the queue is empty."""
+        if not self._pending:
+            return False
+        self._note_overlap()
+        self._harvest(self._pending.pop(0), book, blocked=True)
+        return True
+
+    def harvest_all(self, book: BookFn) -> None:
+        while self.harvest_next(book):
+            pass

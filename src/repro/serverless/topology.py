@@ -17,6 +17,11 @@ and one drain stream.  ``TopologyBackend`` is the scheduler over them:
     one wave (round-robin cursor), so the session's event loop
     interleaves all hosts exactly as it interleaves waves today;
     ledgers complete out of order across hosts as they do within one.
+    Since ISSUE 5 each host stream owns an in-flight **dispatch queue**
+    (serverless/dispatch.py): a wave launches its buckets without
+    blocking, and results are booked by later steps' non-blocking
+    harvest — so one mesh's device execution overlaps every other
+    host's placement, stealing, and booking.
   * **work-stealing** — a host whose queue drained steals the
     least-local bucket from the most-loaded host
     (``policy.steal_choice``); the stolen bucket's pages arrive
@@ -36,7 +41,6 @@ CI by BENCH_topology.json).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -47,6 +51,9 @@ from repro.serverless.autoscale import TopologyAutoscaler
 from repro.serverless.backends import (
     BackendRunInfo, DrainState, PoolConfig, _compile, _StreamBackend,
     roofline_pending_inv_s,
+)
+from repro.serverless.dispatch import (
+    DispatchQueue, DispatchStats, PendingBucket,
 )
 from repro.sharding.policy import place_bucket, steal_choice
 
@@ -148,10 +155,18 @@ class TopologyInfo:
 @dataclass
 class TopologyDrainState(DrainState):
     """One continuous drain over all host streams: the shared bucket
-    plan plus the live bucket→host assignment and the round-robin
-    cursor the event loop steps with."""
+    plan plus the live bucket→host assignment, the round-robin cursor
+    the event loop steps with, and one in-flight dispatch queue per
+    host mesh (the per-host streams are the dispatch unit)."""
     assignment: Dict[object, int] = field(default_factory=dict)
     cursor: int = 0
+    queues: Dict[int, DispatchQueue] = field(default_factory=dict)
+
+    def in_flight_entries(self) -> set:
+        out = set()
+        for q in self.queues.values():
+            out |= q.in_flight_entries()
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -195,7 +210,15 @@ class TopologyBackend(_StreamBackend):
             n_hosts=len(self.topology),
             hosts=[HostLaneInfo(h.host_id, h.n_devices)
                    for h in self.topology.hosts])
-        return TopologyDrainState(plan=_compile().MegabatchPlan(), info=info)
+        state = TopologyDrainState(plan=_compile().MegabatchPlan(),
+                                   info=info)
+        # one in-flight queue per host mesh, all feeding one stats block
+        info.dispatch = DispatchStats()
+        state.queues = {
+            h.host_id: DispatchQueue(self.pool.max_inflight,
+                                     stats=info.dispatch)
+            for h in self.topology.hosts}
+        return state
 
     # admit() is inherited: routing happens lazily in step() (one pass
     # over all unassigned buckets), so batch admission stays linear
@@ -279,21 +302,40 @@ class TopologyBackend(_StreamBackend):
             host_id, depth,
             tasks_per_invocation=max(1, tasks // max(depth, 1)),
             padding_waste=self.compiler.stats.padding.waste_frac,
+            # dispatched-but-unharvested work on this host's stream is
+            # occupancy, not queue depth — never provisioned for twice
+            in_flight=state.queues[host_id].in_flight,
             roofline_inv_s=lambda: roofline_pending_inv_s(
                 state.requests, {k: groups[k] for k in mine}))
         state.info.autoscale.append(decision)
         return max(1, decision.n_workers * pool.lanes_per_worker())
 
+    def _book_harvest(self, state: TopologyDrainState, pb: PendingBucket,
+                      results: Dict, elapsed: float):
+        """Booking callback fired at harvest: ledgers, bills, autoscaler
+        EMA for the launching host, wave close-out, checkpoint."""
+        per_req = self._book_direct(state, pb.entries, results, elapsed)
+        if self.autoscaler is not None and pb.entries:
+            self.autoscaler.observe(pb.host, elapsed / len(pb.entries))
+        self._note_wave(state, list(per_req), elapsed)
+        state.info.pages = self.topology.page_stats()
+        self._checkpoint(state)
+
     def _host_wave(self, state: TopologyDrainState, host_id: int,
                    mine: List, groups) -> None:
+        """Dispatch one wave of this host's buckets WITHOUT waiting —
+        the launches land in the host's in-flight queue and are booked
+        by a later step's harvest, so every other host's placement,
+        stealing, and booking overlaps this mesh's execution."""
         host = self.topology.hosts[host_id]
         # a zero byte budget means "pool off" (PoolConfig contract):
         # fall back to host page stacking instead of churning an
         # always-evicting device pool
         host_pages = host.pool if host.pool.byte_budget > 0 else None
         lane = state.info.topology.hosts[host_id]
+        q = state.queues[host_id]
+        book = lambda pb, res, el: self._book_harvest(state, pb, res, el)
         capacity = self._wave_capacity(state, host_id, mine, groups)
-        t0 = time.perf_counter()
         # fill the wave bucket-by-bucket, truncating the last bucket to
         # the remaining capacity; each selection takes at least one
         # invocation, so a wave always makes progress
@@ -305,41 +347,45 @@ class TopologyBackend(_StreamBackend):
             ents = groups[key][:max(capacity - taken, 1)]
             selected.append((key, ents))
             taken += len(ents)
-        wall = 0.0
-        per_req_all: Dict[int, None] = {}
         for key, ents in selected:
             running: Dict[int, List[int]] = {}
             for ri, inv in ents:
                 running.setdefault(ri, []).append(inv)
             for ri, invs in running.items():
                 state.requests[ri].ledger.mark_running(invs)
-            results, bwall = _compile().run_bucket(
-                state.plan, self.compiler, key, ents, pages=host_pages)
-            wall += bwall
-            self._book_direct(state, ents, results, bwall)
+            bd = _compile().dispatch_bucket(
+                state.plan, self.compiler, key, ents, pages=host_pages,
+                fuse=self._fuse())
+            q.push(PendingBucket(dispatch=bd, host=host_id), book)
             state.seen_buckets.add(key)
-            for ri in running:
-                per_req_all.setdefault(ri)
-        step_wall = time.perf_counter() - t0
         lane.waves += 1
         lane.invocations += taken
         state.info.waves += 1
         state.info.buckets = len(state.seen_buckets)
-        if self.autoscaler is not None and taken:
-            self.autoscaler.observe(host_id, wall / taken)
-        self._note_wave(state, list(per_req_all), step_wall)
         state.info.pages = self.topology.page_stats()
-        self._checkpoint(state)
 
     # ---- the stream scheduler -----------------------------------------
     def step(self, state: TopologyDrainState) -> bool:
         """Advance ONE host stream by one wave (round-robin); False once
-        no host has pending work."""
-        groups = state.plan.pending_by_bucket()
+        no host has pending or in-flight work.  Every step first books
+        any landed buckets on any host (non-blocking), so harvest is
+        interleaved with — and overlapped by — dispatch on other hosts."""
+        book = lambda pb, res, el: self._book_harvest(state, pb, res, el)
+        for q in state.queues.values():
+            q.harvest_ready(book)
+        groups = state.plan.pending_by_bucket(
+            exclude=state.in_flight_entries())
+        n = len(self.topology)
         if not groups:
+            # nothing dispatchable: block for the oldest in-flight
+            # bucket, round-robin from the cursor
+            for off in range(n):
+                h = (state.cursor + off) % n
+                if state.queues[h].harvest_next(book):
+                    state.cursor = (h + 1) % n
+                    return True
             return False
         self._route(state, groups)      # retries may resurface buckets
-        n = len(self.topology)
         for off in range(n):
             h = (state.cursor + off) % n
             mine = [k for k in groups if state.assignment[k] == h]

@@ -192,7 +192,7 @@ def test_page_pool_eviction_accounting():
     """A byte budget below the traffic's dataset set forces LRU evictions
     and re-transfers, all visible in the stats (pages needed by the
     in-flight launch are never evicted)."""
-    page_bytes = 128 * 8 * 4                       # N_pad=128, P_pad=8
+    page_bytes = 104 * 8 * 4                       # N_pad=104, P_pad=8
     pool = PagePool(byte_budget=page_bytes)        # fits exactly one page
     backend = make_backend("inline")
     backend.pages = pool
@@ -226,6 +226,77 @@ def test_page_pool_disabled_by_budget_zero():
     res = sess.estimate(plan, data)
     assert sess.backend.pages is None
     assert np.isfinite(res.theta)
+
+
+# ---------------------------------------------------------------------------
+# non-blocking dispatch (ISSUE 5)
+# ---------------------------------------------------------------------------
+def test_inflight_entries_excluded_from_pending_and_harvested_later():
+    """A dispatched bucket's invocations leave the scheduler's pending
+    view immediately (no double dispatch) but only reach the ledger at
+    harvest — a later step books them while new work dispatches."""
+    backend = make_backend("inline")
+    state = backend.begin_drain()
+    for n, seed in ((100, 30), (300, 31)):        # two distinct buckets
+        backend.admit(state, compile_request(*_plr(n, seed=seed)))
+
+    assert backend.step(state)                    # dispatch bucket 1
+    inflight = state.queue.in_flight_entries()
+    assert inflight                               # really in flight
+    done_before = sum(r.ledger.n_done for r in state.requests)
+    groups = state.plan.pending_by_bucket(exclude=inflight)
+    for entries in groups.values():               # no re-dispatch overlap
+        assert not (set(entries) & inflight)
+
+    while backend.step(state):                    # dispatch 2, harvest both
+        pass
+    assert state.queue.empty
+    assert all(r.ledger.complete for r in state.requests)
+    assert sum(r.ledger.n_done for r in state.requests) > done_before
+    d = state.info.dispatch
+    assert d.dispatched == d.harvested == 2
+    assert d.host_overlap_s > 0.0                 # booking overlapped
+
+
+def test_dispatch_queue_same_key_inflight_buckets():
+    """Two in-flight buckets sharing one BucketKey (truncated topology
+    waves / mid-drain admission produce these) must harvest cleanly out
+    of order — regression test for the generated-dataclass __eq__ crash
+    (list.remove comparing in-flight jax arrays elementwise)."""
+    import jax
+    from repro.compile import ProgramCache, dispatch_bucket, plan_buckets
+    from repro.serverless import DispatchQueue, PendingBucket
+
+    req = compile_request(*_plr(100, seed=50))
+    bplan = plan_buckets([req])
+    (bkey,) = bplan.buckets
+    cache = ProgramCache()
+    ents = [(0, int(i)) for i in req.ledger.pending()]
+    bd1 = dispatch_bucket(bplan, cache, bkey, ents[:2])
+    bd2 = dispatch_bucket(bplan, cache, bkey, ents[2:])
+    q = DispatchQueue(8)
+    booked = []
+    book = lambda pb, res, el: booked.append(sorted(res))
+    q.push(PendingBucket(dispatch=bd1), book)
+    q.push(PendingBucket(dispatch=bd2), book)
+    jax.block_until_ready([l.out for l in bd2.launches])
+    q.harvest_ready(book)               # may book bd2 before bd1
+    q.harvest_all(book)
+    assert q.empty
+    assert sorted(e for b in booked for e in b) == sorted(ents)
+
+
+def test_dispatch_queue_inflight_cap_forces_harvest():
+    """max_inflight bounds device-side liveness: pushing beyond the cap
+    force-harvests the oldest bucket instead of growing the queue."""
+    from repro.serverless import PoolConfig as PC
+    backend = make_backend("inline", PC(max_inflight=1))
+    state = backend.begin_drain()
+    for i, n in enumerate((100, 300, 600)):       # three buckets
+        backend.admit(state, compile_request(*_plr(n, seed=40 + i)))
+    while backend.step(state):
+        assert len(state.queue) <= 1
+    assert all(r.ledger.complete for r in state.requests)
 
 
 # ---------------------------------------------------------------------------

@@ -145,10 +145,11 @@ def test_bucketed_multi_request_parity_all_backends():
         return preds, thetas, info
 
     p_in, t_in, info_in = drain(InlineBackend(POOL))
-    # both plr requests (N=140/200 -> 256) fuse into one ridge bucket;
-    # irm contributes its own ridge + logistic buckets at N=128: 3 buckets
-    # for 4 segments — cross-request fusion through the compiler
-    assert info_in.buckets == 3
+    # sublane-aligned N buckets: the plr requests (N=140 -> 144, 200 ->
+    # 200) and irm (ridge + logistic at N=120) give 4 buckets for 4
+    # segments; cross-request sharing now happens at the fused-launch
+    # level (equal-shape blocks), not by collapsing N onto pow2
+    assert info_in.buckets == 4
     chaotic = PoolConfig(n_workers=2, memory_mb=512, failure_rate=0.3,
                          straggler_rate=0.2, max_retries=10, seed=5)
     p_wv, t_wv, info_wv = drain(WaveBackend(chaotic))

@@ -37,15 +37,17 @@ def test_pow2_bucket_rule():
 
 
 def test_mixed_n_requests_share_one_bucket():
-    """Requests with different N in the same pow2 bucket share a program;
-    mixed learner families (IRM ridge + logistic) split buckets."""
+    """Requests with different N in the same sublane-aligned bucket share
+    a program; mixed learner families (IRM ridge + logistic) split
+    buckets.  (N buckets are aligned to the 8-row sublane quantum since
+    ISSUE 5 — the pow2 rule left N as the dominant waste axis.)"""
     reqs = [compile_request(*_plr(n, seed=i))
-            for i, n in enumerate((90, 100, 120))]
+            for i, n in enumerate((97, 100, 104))]
     plan = plan_buckets(reqs)
-    assert len(plan.buckets) == 1                      # all pad to N=128
+    assert len(plan.buckets) == 1                      # all align to N=104
     key = plan.buckets[0]
-    assert key.n_pad == 128 and key.p_pad == 8
-    assert plan.page(0, key).shape == (128, 8)
+    assert key.n_pad == 104 and key.p_pad == 8
+    assert plan.page(0, key).shape == (104, 8)
 
     irm_data = DMLData.from_dict(make_irm_data(n_obs=100, dim_x=4, theta=0.4,
                                                seed=5))
@@ -53,7 +55,7 @@ def test_mixed_n_requests_share_one_bucket():
                                  learner_params={"reg": 1.0}, n_folds=3,
                                  n_rep=2, seed=9)
     plan2 = plan_buckets(reqs + [compile_request(irm_plan, irm_data)])
-    # ridge buckets fuse across PLR+IRM; logistic propensity is its own
+    # ridge buckets fuse across PLR+IRM (both N=104); logistic is its own
     assert len(plan2.buckets) == 2
 
 
@@ -178,15 +180,15 @@ def test_program_cache_hits_on_repeat_traffic():
     """Repeat traffic through a session re-uses compiled programs: the
     second run() of same-bucket requests traces nothing new."""
     sess = DMLSession(backend="wave", pool=PoolConfig(n_workers=8))
-    sess.submit(*_plr(90, seed=1))
+    sess.submit(*_plr(98, seed=1))
     sess.submit(*_plr(100, seed=2))
     sess.run()
     stats = sess.backend.compiler.stats
     misses_first = stats.misses
     assert misses_first >= 1
-    assert sess.last_run_info.buckets == 1           # N=90/100 fused
-    sess.submit(*_plr(95, seed=3))                   # new N, same bucket
-    sess.submit(*_plr(121, seed=4))                  # pads to 128 too
+    assert sess.last_run_info.buckets == 1           # N=98/100 align to 104
+    sess.submit(*_plr(99, seed=3))                   # new N, same bucket
+    sess.submit(*_plr(104, seed=4))                  # aligns to 104 too
     sess.run()
     assert stats.misses == misses_first              # zero new traces
     assert stats.hits > 0
@@ -264,6 +266,139 @@ def test_tail_launch_b_invariance(name, params):
     for e in entries:
         np.testing.assert_array_equal(whole[e], one_at_a_time[e])
         np.testing.assert_array_equal(whole[e], ragged[e])
+
+
+# ---------------------------------------------------------------------------
+# same-shape block fusion (ISSUE 5): bitwise parity, every learner family
+# ---------------------------------------------------------------------------
+FUSION_FAMILIES = [
+    ("ridge", {"reg": 1.0}),
+    ("ols", {}),
+    ("lasso", {"reg": 0.01}),
+    ("logistic", {"reg": 1.0}),
+    ("kernel_ridge", {"reg": 1.0, "n_landmarks": 16}),
+    ("mlp", {"hidden": (8,), "n_steps": 10}),
+]
+
+
+@pytest.mark.parametrize("name,params", FUSION_FAMILIES)
+def test_fused_multi_request_launch_bitwise_parity(name, params):
+    """The fusion invariance contract: packing equal-canonical-B blocks
+    of DIFFERENT requests into one launch (leading block axis, shared
+    union page stack) yields bitwise the predictions each request gets
+    from its own single-block launch — for every learner family."""
+    from repro.compile import ProgramCache
+    cases = [_plr(97 + i, seed=10 + i, learner=name, learner_params=params)
+             for i in range(3)]                    # all align to N=104
+    reqs = [compile_request(p, d) for p, d in cases]
+
+    # solo single-block launches, one fresh cache per request
+    solo = {}
+    for ri, req in enumerate(reqs):
+        bplan = plan_buckets([req])
+        (bkey,) = bplan.buckets
+        res, _ = run_bucket(bplan, ProgramCache(), bkey,
+                            [(0, int(i)) for i in req.ledger.pending()],
+                            fuse=False)
+        solo[ri] = res
+
+    # one fused multi-request drain
+    reqs2 = [compile_request(p, d) for p, d in cases]
+    bplan = plan_buckets(reqs2)
+    (bkey,) = bplan.buckets                        # one shared bucket
+    cache = ProgramCache()
+    entries = [(ri, int(i)) for ri, req in enumerate(reqs2)
+               for i in req.ledger.pending()]
+    fused, _ = run_bucket(bplan, cache, bkey, entries, fuse=True)
+    assert cache.stats.fused_launches >= 1
+    assert cache.stats.launches < cache.stats.blocks   # really packed
+    for ri in range(len(reqs2)):
+        for inv in solo[ri]:
+            np.testing.assert_array_equal(fused[(ri, inv[1])],
+                                          solo[ri][inv])
+
+
+def test_fusion_off_matches_fused_and_launch_counts():
+    """fuse=False falls back to one launch per canonical block with
+    identical results; fusion strictly reduces the launch count."""
+    from repro.compile import ProgramCache
+    reqs = [compile_request(*_plr(100 + i, seed=i)) for i in range(3)]
+    bplan = plan_buckets(reqs)
+    (bkey,) = bplan.buckets
+    entries = [(ri, int(i)) for ri, req in enumerate(reqs)
+               for i in req.ledger.pending()]
+    cache_f, cache_u = ProgramCache(), ProgramCache()
+    res_f, _ = run_bucket(bplan, cache_f, bkey, entries, fuse=True)
+    res_u, _ = run_bucket(bplan, cache_u, bkey, entries, fuse=False)
+    assert cache_u.stats.launches == cache_u.stats.blocks
+    assert cache_f.stats.launches < cache_u.stats.launches
+    for e in entries:
+        np.testing.assert_array_equal(res_f[e], res_u[e])
+
+
+def test_out_of_order_harvest_parity():
+    """Non-blocking dispatch: buckets harvested in reverse dispatch
+    order return exactly what the synchronous path returns."""
+    from repro.compile import ProgramCache, dispatch_bucket
+    reqs = [compile_request(*_plr(100, seed=0)),
+            compile_request(*_plr(300, seed=1))]   # two distinct buckets
+    bplan = plan_buckets(reqs)
+    groups = bplan.pending_by_bucket()
+    assert len(groups) == 2
+    cache = ProgramCache()
+    dispatched = [dispatch_bucket(bplan, cache, key, ents)
+                  for key, ents in groups.items()]
+    harvested = {}
+    for bd in reversed(dispatched):                # out-of-order harvest
+        harvested.update(bd.harvest())
+    cache2 = ProgramCache()
+    expected = {}
+    for key, ents in groups.items():
+        res, _ = run_bucket(bplan, cache2, key, ents)
+        expected.update(res)
+    assert set(harvested) == set(expected)
+    for e, v in expected.items():
+        np.testing.assert_array_equal(harvested[e], v)
+
+
+def test_block_tensor_cache_keys_on_full_data_content():
+    """Two datasets sharing one X but different y must never share
+    cached block tensors (work_key is the FULL content identity, not
+    just the feature-page fingerprint) — regression test for the
+    stale-prediction bug a fingerprint-only key produces."""
+    plan, data1 = _plr(100, seed=21)
+    data2 = DMLData(x=np.array(data1.x), y=np.array(data1.y) + 1.0,
+                    d=np.array(data1.d))
+    assert data1.fingerprint() == data2.fingerprint()     # same X page
+    assert data1.content_key() != data2.content_key()     # different y
+    backend = InlineBackend()
+    r1 = compile_request(plan, data1)
+    backend.run_requests([r1])
+    r2 = compile_request(plan, data2)
+    backend.run_requests([r2])
+    assert not np.array_equal(r1.gathered_preds(), r2.gathered_preds())
+    # and a solo fresh-backend run of data2 agrees bitwise
+    ref = compile_request(plan, data2)
+    InlineBackend().run_requests([ref])
+    np.testing.assert_array_equal(r2.gathered_preds(),
+                                  ref.gathered_preds())
+
+
+def test_n_buckets_sublane_aligned():
+    """The ISSUE 5 N rule: buckets align N to the 8-row sublane quantum
+    (mirroring the B tail rule) instead of pow2 — 100 pads to 104, not
+    128 — and the pow2 comparator is tracked in the padding stats."""
+    from repro.compile import ProgramCache
+    req = compile_request(*_plr(100, seed=3))
+    bplan = plan_buckets([req])
+    (bkey,) = bplan.buckets
+    assert bkey.n_pad == 104
+    cache = ProgramCache()
+    run_bucket(bplan, cache, bkey,
+               [(0, int(i)) for i in req.ledger.pending()])
+    pad = cache.stats.padding
+    assert pad.n_waste_frac < pad.n_waste_frac_pow2
+    assert pad.lane_cells_pow2 == pad.tasks * 128
 
 
 def test_scaling_levels_share_launch_shapes():

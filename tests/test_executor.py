@@ -2,8 +2,10 @@
 backends): scaling equivalence, elasticity, fault tolerance,
 checkpoint/restart, straggler mitigation, autoscaling, billing.
 
-(The deprecated ``ServerlessExecutor`` raw-array facade was removed; its
-behavior suite lives on here against ``compile_request`` + the streaming
+(The deprecated ``ServerlessExecutor`` raw-array facade was removed in
+PR 3 and its import-compat module ``repro.serverless.executor`` — after
+one release of DeprecationWarning notice — in PR 5; the behavior suite
+lives on here against ``compile_request`` + the streaming
 ``WaveBackend``.)
 """
 import os
@@ -125,6 +127,22 @@ def test_autoscaler_replaces_static_schedule():
     np.testing.assert_array_equal(req.gathered_preds(), clean)
 
 
+def test_autoscaler_counts_in_flight_as_occupancy_not_depth():
+    """Dispatched-but-unharvested work must raise occupancy, never the
+    worker count — sizing for it again would double-provision the pool
+    (the non-blocking-dispatch correctness rule)."""
+    pool = PoolConfig(n_workers=2, memory_mb=1024, autoscale=True,
+                      min_workers=1, max_workers=64)
+    scaler = OccupancyAutoscaler(pool)
+    base = scaler.decide(8)
+    busy = scaler.decide(8, in_flight=64)
+    assert busy.n_workers == base.n_workers        # no double-provision
+    assert busy.in_flight == 64 and base.in_flight == 0
+    assert busy.est_occupancy > base.est_occupancy
+    assert busy.est_waves == base.est_waves
+    assert busy.candidate_costs == base.candidate_costs
+
+
 def test_autoscaler_scales_with_queue_depth():
     """Deeper queues get at least as many workers; shallow queues are not
     over-provisioned (cost-aware sizing)."""
@@ -169,33 +187,14 @@ def test_simulated_billing_tracks_memory():
         assert bill > 0
 
 
-def test_removed_executor_import_raises():
-    import warnings
-
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        import repro.serverless.executor as executor_mod
-    with pytest.raises(AttributeError, match="removed"):
-        executor_mod.ServerlessExecutor
-    # the compat re-exports still resolve
-    assert executor_mod.PoolConfig is PoolConfig
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        from repro.core import DMLSession
-        assert executor_mod.DMLSession is DMLSession
-
-
-def test_executor_compat_module_warns_deprecation():
-    """The import-compat shim gives one release of notice before
-    removal: importing the module (or touching its lazy re-exports)
-    emits a DeprecationWarning pointing at the new import paths."""
-    import importlib
-    import sys
-
-    import repro.serverless.executor as executor_mod
-    with pytest.warns(DeprecationWarning,
-                      match="repro.serverless.executor is deprecated"):
-        importlib.reload(executor_mod)
-    sys.modules.pop("repro.serverless.executor", None)
-    with pytest.warns(DeprecationWarning, match="will be removed"):
-        from repro.serverless.executor import PoolConfig as compat_pool
-    assert compat_pool is PoolConfig
+def test_executor_compat_module_removed():
+    """PR 4 shipped the one-release DeprecationWarning notice; the
+    import-compat module is now gone.  Everything it re-exported lives
+    on repro.serverless / repro.core."""
+    with pytest.raises(ModuleNotFoundError):
+        import repro.serverless.executor  # noqa: F401
+    from repro.core import DMLSession, estimate  # noqa: F401
+    from repro.serverless import (                # noqa: F401
+        RunReport, Segment, WaveBackend as _W, WorkRequest,
+    )
+    assert PoolConfig is not None

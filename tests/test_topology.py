@@ -209,6 +209,29 @@ def test_work_stealing_triggers_on_idle_host():
                                       ref.gathered_preds())
 
 
+def test_fusion_under_placement_and_stealing():
+    """Same-shape block fusion stays bitwise-correct when the fused
+    bucket is placed by residency, stolen by an idle host, and harvested
+    out of order across host streams: four same-bucket ridge requests
+    fuse into multi-block launches wherever they land."""
+    cases = [_plr(100 + i, seed=40 + i) for i in range(4)]  # one bucket
+    # capacity 8 = half the bucket: a wave spans 2+ requests (so their
+    # equal-shape blocks fuse) while the rest stays stealable
+    backend = TopologyBackend(PoolConfig(n_hosts=2, n_workers=2,
+                                         memory_mb=1024))
+    _seed_host0_residency(backend, cases)
+    reqs = [compile_request(p, d) for p, d in cases]
+    info = backend.run_requests(reqs)
+    assert backend.compiler.stats.fused_launches >= 1
+    assert info.dispatch is not None
+    assert info.dispatch.harvested == info.dispatch.dispatched
+    for req, (plan, data) in zip(reqs, cases):
+        ref = compile_request(plan, data)
+        InlineBackend().run_requests([ref])
+        np.testing.assert_array_equal(req.gathered_preds(),
+                                      ref.gathered_preds())
+
+
 def test_steal_disabled_keeps_buckets_on_resident_host():
     cases = _same_data_cases()
     backend = TopologyBackend(PoolConfig(n_hosts=2, n_workers=1,
