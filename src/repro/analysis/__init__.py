@@ -1,0 +1,34 @@
+"""repro.analysis — static determinism, cache-key, and async-protocol
+auditor (ISSUE 6 tentpole).
+
+The repo's correctness story rests on three machine-checkable invariant
+families that example-based parity tests enforce only by sampling:
+
+  1. **Jaxpr determinism** (``jaxpr_audit``): fused launches must lower
+     through ``lax.map``/``scan`` — never a vmap-batched leading axis
+     over reductions — with no data-dependent shapes, and every PRNG
+     operand reachable only from the compile-time ``fold_in`` key
+     tables, never from runtime data.
+  2. **Cache-key soundness** (``cache_keys``): every bounded warm cache
+     (programs, fold_in key tables, index maps, block layouts, block
+     tensors, page stacks) is registered via ``@warm_cache`` and its
+     declared key provably covers every field the cached computation
+     reads — a missing-``content_key``-array bug is a lint failure, not
+     a stale-result heisenbug.
+  3. **Async protocol** (``protocol``): the TaskLedger / DispatchQueue /
+     PendingBucket state machine is an explicit transition table; every
+     call site in the serverless layer performs only legal transitions.
+     The same table drives the opt-in ``REPRO_SANITIZE=1`` runtime
+     sanitizer (serverless/sanitize.py).
+
+Run ``python -m repro.analysis`` (add ``--dead-code`` for the
+import-graph report).  Each pass returns ``Finding`` records; an empty
+list is a clean audit.  CI runs the auditor in the ``lint`` job and the
+sanitizer across the async/topology suites in the ``sanitize`` job.
+"""
+from __future__ import annotations
+
+from repro.analysis.registry import REGISTRY, WarmCacheSpec, warm_cache
+from repro.analysis.report import Finding
+
+__all__ = ["Finding", "warm_cache", "WarmCacheSpec", "REGISTRY"]

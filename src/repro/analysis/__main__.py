@@ -1,0 +1,59 @@
+"""CLI: ``python -m repro.analysis [--dead-code] [--pass NAME]``.
+
+Default run executes the three invariant passes (jaxpr determinism,
+cache-key soundness, async protocol) and exits nonzero on any finding;
+``--dead-code`` runs the import-reachability report instead.  CI runs
+both (jobs ``lint`` and ``sanitize`` in .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Callable, Dict, List
+
+from repro.analysis.report import Finding, render
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="static determinism / cache-key / protocol auditor")
+    ap.add_argument("--dead-code", action="store_true",
+                    help="run the import-reachability report instead of "
+                         "the invariant passes")
+    ap.add_argument("--pass", dest="only", default=None,
+                    choices=("jaxpr", "cache-keys", "protocol"),
+                    help="run a single invariant pass")
+    args = ap.parse_args(argv)
+
+    passes: Dict[str, Callable[[], List[Finding]]] = {}
+    if args.dead_code:
+        from repro.analysis import deadcode
+        passes["dead-code"] = deadcode.run
+    else:
+        if args.only in (None, "cache-keys"):
+            from repro.analysis import cache_keys
+            passes["cache-keys"] = cache_keys.run
+        if args.only in (None, "protocol"):
+            from repro.analysis import protocol
+            passes["protocol"] = protocol.run
+        if args.only in (None, "jaxpr"):
+            # imported last: jax init is the slow part
+            from repro.analysis import jaxpr_audit
+            passes["jaxpr"] = jaxpr_audit.run
+
+    findings: List[Finding] = []
+    for name, fn in passes.items():
+        got = fn()
+        status = "OK" if not got else f"{len(got)} finding(s)"
+        print(f"[{name}] {status}")
+        findings.extend(got)
+    if findings:
+        print()
+        print(render(findings, header=f"{len(findings)} finding(s):"))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""Dead-code report — static import reachability over ``src/repro``.
+
+Builds the module import graph by parsing every source file (no
+imports executed), roots it at what the CI entry points actually load —
+the tier-1 tests, the benchmark drivers, and the auditor itself — and
+reports every module nothing reachable imports.  Seed-era launch CLIs
+that no test exercises show up here instead of rotting silently.
+
+Modules that are loaded dynamically (``repro.configs.*`` goes through
+``importlib`` in ``get_arch``) are whitelisted as roots; anything else
+unreachable is a finding, so keeping a module means either wiring it to
+a test or consciously adding it to ``WHITELIST`` with a reason.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+from repro.analysis import astutil
+from repro.analysis.report import Finding
+
+#: dynamically-imported or intentionally-kept modules (module name or
+#: trailing-dot prefix), with the reason they stay
+WHITELIST: Dict[str, str] = {
+    "repro.configs.": "arch configs load via importlib in get_arch()",
+    "repro.analysis.": "the auditor is its own CI entry point",
+    "repro.launch.dryrun": "imported inside the subprocess smoke "
+                           "snippet in tests/test_sharding.py (a string "
+                           "literal, invisible to static imports)",
+}
+
+
+def _module_name(root: Path, path: Path) -> str:
+    rel = path.relative_to(root).with_suffix("")
+    parts = ("repro",) + rel.parts
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _whitelisted(mod: str) -> bool:
+    for w in WHITELIST:
+        if mod == w.rstrip(".") or (w.endswith(".")
+                                    and mod.startswith(w)):
+            return True
+    return False
+
+
+def _with_parents(mod: str, out: Set[str]) -> None:
+    parts = mod.split(".")
+    for i in range(1, len(parts) + 1):
+        out.add(".".join(parts[:i]))
+
+
+def _external_roots(src_root: Path) -> Set[str]:
+    """repro modules imported by the test suite and benchmark drivers."""
+    repo = src_root.parents[1]
+    roots: Set[str] = set()
+    for d in (repo / "tests", repo / "benchmarks"):
+        if not d.is_dir():
+            continue
+        for path in sorted(d.glob("*.py")):
+            tree = astutil.parse(path)
+            for name in astutil.imports_of(tree, path.stem):
+                if name == "repro" or name.startswith("repro."):
+                    roots.add(name)
+    return roots
+
+
+def graph(root: Optional[Path] = None):
+    """``(modules, edges, roots)`` of the static import graph."""
+    root = root or astutil.default_root()
+    paths = {p: _module_name(root, p) for p in astutil.iter_py_files(root)}
+    modules = set(paths.values()) | {"repro"}
+    edges: Dict[str, Set[str]] = {m: set() for m in modules}
+    for path, mod in paths.items():
+        for name in astutil.imports_of(astutil.parse(path), mod):
+            # "from repro.x import y" contributes both repro.x and
+            # repro.x.y — keep whichever are real modules
+            if name in modules and name != mod:
+                edges[mod].add(name)
+    roots: Set[str] = set()
+    for name in _external_roots(root):
+        if name in modules:
+            _with_parents(name, roots)
+    for mod in modules:
+        if _whitelisted(mod):
+            _with_parents(mod, roots)
+    return modules, edges, roots
+
+
+def run(root: Optional[Path] = None) -> List[Finding]:
+    modules, edges, roots = graph(root)
+    seen: Set[str] = set()
+    frontier = sorted(roots & modules)
+    while frontier:
+        mod = frontier.pop()
+        if mod in seen:
+            continue
+        seen.add(mod)
+        for dep in edges.get(mod, ()):
+            ext: Set[str] = set()
+            _with_parents(dep, ext)
+            frontier.extend(ext - seen)
+    findings: List[Finding] = []
+    for mod in sorted(modules - seen):
+        findings.append(Finding(
+            "dead-code", "unreachable-module", mod,
+            "no test, benchmark, or whitelisted entry point reaches "
+            "this module — delete it or whitelist it with a reason"))
+    return findings

@@ -1,0 +1,252 @@
+"""Pass 1 — jaxpr-level determinism audit of the megabatch programs.
+
+The float-pinning contract (PR 5) says a fused launch is **bitwise**
+equal to per-block launches because ``lax.map`` compiles the mapped body
+exactly as the single-block program — where ``vmap`` would add a batched
+leading axis that lets XLA retile the per-lane reductions (~1e-7
+drift).  The parity tests check this by example on sampled inputs; this
+pass checks it structurally on the closed jaxpr, for every learner
+family and program form the ``ProgramCache`` can build:
+
+  * **fused-lowers-through-scan** — the fused program's top-level jaxpr
+    must be exactly one ``scan`` equation (``lax.map`` is scan with no
+    carry); any other top-level primitive means a batched lowering
+    leaked in.
+  * **fused-body-equals-block** — the scan body's primitive sequence
+    must equal the single-block program's primitive sequence: the
+    mapped body IS the per-block computation, so fused results cannot
+    drift from per-block ones.
+  * **sharded-wraps-shard-map** — the partitioned form must lower
+    through one ``shard_map`` whose body passes the same PRNG/shape
+    audit (sharded parity is tolerance-level by contract, so body
+    equality is not required there).
+  * **prng-key-from-runtime-data** — taint analysis over the jaxpr:
+    primitives that consume PRNG keys may only be reached from the
+    ``key_data`` input (the compile-time ``fold_in`` tables), never
+    from the data inputs — a learner that derived randomness from its
+    batch would break schedule invariance.
+  * **data-dependent-shape** — every intermediate aval must have
+    concrete integer dimensions; a data-dependent shape would make the
+    compiled program's output depend on bucket composition.
+
+Unlike the other passes this one imports jax and the learner registry —
+it audits what actually traces, not what the source says.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import Finding
+from repro.learners import get_batched_learner, resolve_params
+
+#: the six registry families (kept literal so a silently dropped
+#: registry entry fails the audit instead of shrinking its coverage)
+FAMILIES: Tuple[str, ...] = ("ols", "ridge", "lasso", "logistic",
+                             "kernel_ridge", "mlp")
+
+#: primitives that consume or produce PRNG state
+PRNG_PRIMS: Set[str] = {
+    "random_wrap", "random_unwrap", "random_seed", "random_bits",
+    "random_fold_in", "random_gamma", "threefry2x32",
+}
+
+# probe shape: small but structurally faithful (B tasks, N rows, P
+# features, G fused blocks).  Tracing only — nothing is compiled or run.
+_B, _N, _P, _G = 8, 32, 8, 3
+
+
+# ---------------------------------------------------------------------------
+# taint analysis over (nested) jaxprs
+# ---------------------------------------------------------------------------
+def _unwrap(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def _taint_jaxpr(jaxpr, invar_marks: List[Set[str]], where: str,
+                 findings: List[Finding], depth: int = 0) -> None:
+    """Propagate {"data", "key"} marks through one jaxpr, flagging PRNG
+    primitives that touch data-derived values.  Sub-jaxprs with a known
+    1:1 invar mapping (pjit, scan, shard_map, call-like) are recursed
+    with per-position marks; unknown higher-order primitives union-taint
+    their outputs without recursing (conservative, no false positives).
+    """
+    if depth > 32:
+        return
+    marks: Dict[int, Set[str]] = {}
+    for var, m in zip(jaxpr.invars, invar_marks):
+        marks[id(var)] = set(m)
+    for var in jaxpr.constvars:
+        marks[id(var)] = set()
+
+    def of(atom) -> Set[str]:
+        return marks.get(id(atom), set())
+
+    for eqn in jaxpr.eqns:
+        in_marks: Set[str] = set()
+        for a in eqn.invars:
+            in_marks |= of(a)
+        pname = eqn.primitive.name
+
+        if pname in PRNG_PRIMS:
+            bad = sorted({m for a in eqn.invars for m in of(a)
+                          if m == "data"})
+            if bad:
+                findings.append(Finding(
+                    "jaxpr", "prng-key-from-runtime-data",
+                    where,
+                    f"primitive {pname!r} consumes a value derived "
+                    "from the data inputs — PRNG state must derive "
+                    "only from the compile-time fold_in key tables"))
+            in_marks = in_marks | {"key"}
+
+        # recurse into sub-jaxprs whose invars map 1:1 onto eqn.invars
+        params = eqn.params
+        subs: List[Tuple[object, List[Set[str]]]] = []
+        eq_marks = [of(a) for a in eqn.invars]
+        if pname in ("pjit", "scan", "shard_map", "closed_call",
+                     "core_call", "xla_call", "remat", "checkpoint",
+                     "custom_jvp_call", "custom_vjp_call"):
+            sub = params.get("jaxpr") or params.get("call_jaxpr")
+            if sub is not None:
+                sub = _unwrap(sub)
+                if len(sub.invars) == len(eqn.invars):
+                    subs.append((sub, eq_marks))
+        elif pname == "cond":
+            for br in params.get("branches", ()):
+                sub = _unwrap(br)
+                if len(sub.invars) == len(eqn.invars) - 1:
+                    subs.append((sub, eq_marks[1:]))
+        elif pname == "while":
+            cn = params.get("cond_nconsts", 0)
+            bn = params.get("body_nconsts", 0)
+            body = _unwrap(params.get("body_jaxpr"))
+            cond = _unwrap(params.get("cond_jaxpr"))
+            if body is not None:
+                subs.append((body, eq_marks[cn:]))
+            if cond is not None:
+                subs.append((cond, eq_marks[:cn] + eq_marks[cn + bn:]))
+        for sub, sub_marks in subs:
+            _taint_jaxpr(sub, sub_marks, where, findings, depth + 1)
+
+        shaped = [v for v in eqn.outvars if hasattr(v, "aval")]
+        for v in shaped:
+            aval = v.aval
+            dims = getattr(aval, "shape", ())
+            if not all(isinstance(d, int) for d in dims):
+                findings.append(Finding(
+                    "jaxpr", "data-dependent-shape", where,
+                    f"primitive {pname!r} produces aval {aval} with a "
+                    "non-concrete dimension — compiled shapes must be "
+                    "pure functions of the bucket spec"))
+            marks[id(v)] = set(in_marks)
+
+
+# ---------------------------------------------------------------------------
+# program forms
+# ---------------------------------------------------------------------------
+def _probe_avals(fused: bool):
+    kw = jax.random.key_data(jax.random.key(0)).shape
+    lead = (_G,) if fused else ()
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    return (jax.ShapeDtypeStruct((1, _N, _P), f32),          # pages
+            jax.ShapeDtypeStruct(lead + (_B,), i32),         # data_idx
+            jax.ShapeDtypeStruct(lead + (_B, _N), f32),      # y
+            jax.ShapeDtypeStruct(lead + (_B, _N), f32),      # w
+            jax.ShapeDtypeStruct(lead + (_B, _N), f32),      # valid
+            jax.ShapeDtypeStruct(lead + (_B,) + kw, u32))    # key_data
+
+
+def _program_pair(family: str):
+    """(single-block run, lax.map-fused run) for one learner family —
+    the exact bodies ``ProgramCache.program`` / ``fused_program`` jit."""
+    params = resolve_params(family, None, n_obs=_N, dim_x=_P)
+    batched_fn = get_batched_learner(family, params)
+
+    def run(pages, data_idx, y, w, valid, key_data):
+        xb = pages[data_idx]
+        keys = jax.random.wrap_key_data(key_data)
+        return batched_fn(xb, y, w, valid, keys)
+
+    def run_fused(pages, data_idx, y, w, valid, key_data):
+        return jax.lax.map(lambda t: run(pages, *t),
+                           (data_idx, y, w, valid, key_data))
+
+    return run, run_fused
+
+
+def _prim_seq(jaxpr) -> List[str]:
+    return [e.primitive.name for e in jaxpr.eqns]
+
+
+def audit_fused_pair(single_jaxpr, fused_jaxpr, where: str,
+                     ) -> List[Finding]:
+    """The structural fused-launch checks, factored out so the mutation
+    tests can feed a deliberately vmap-built fused program."""
+    findings: List[Finding] = []
+    top = _prim_seq(fused_jaxpr.jaxpr)
+    if top != ["scan"]:
+        findings.append(Finding(
+            "jaxpr", "fused-lowers-through-scan", where,
+            f"fused program's top-level jaxpr is {top} — must be "
+            "exactly one scan (lax.map); a vmap-batched lowering lets "
+            "XLA retile reductions and breaks bitwise block parity"))
+        return findings
+    body = _unwrap(fused_jaxpr.jaxpr.eqns[0].params["jaxpr"])
+    if _prim_seq(body) != _prim_seq(single_jaxpr.jaxpr):
+        findings.append(Finding(
+            "jaxpr", "fused-body-equals-block", where,
+            "fused scan body's primitive sequence differs from the "
+            "single-block program — the mapped body must compile to "
+            "exactly the per-block computation"))
+    return findings
+
+
+def _data_key_marks(jaxpr) -> List[Set[str]]:
+    """Input marks for the program signature: everything but the
+    trailing key_data operand is runtime data."""
+    n = len(jaxpr.invars)
+    return [{"data"}] * (n - 1) + [{"key"}]
+
+
+def audit_family(family: str) -> List[Finding]:
+    findings: List[Finding] = []
+    run, run_fused = _program_pair(family)
+
+    single = jax.make_jaxpr(run)(*_probe_avals(fused=False))
+    fused = jax.make_jaxpr(run_fused)(*_probe_avals(fused=True))
+
+    findings.extend(audit_fused_pair(single, fused, f"{family}/fused"))
+    _taint_jaxpr(single.jaxpr, _data_key_marks(single.jaxpr),
+                 f"{family}/block", findings)
+    _taint_jaxpr(fused.jaxpr, _data_key_marks(fused.jaxpr),
+                 f"{family}/fused", findings)
+
+    # the partitioned (ShardedBackend) form: shard_map over "data"
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.policy import megabatch_specs
+    in_specs, out_specs = megabatch_specs("data")
+    sharded_fn = shard_map_compat(run, mesh=make_host_mesh(),
+                                  in_specs=in_specs, out_specs=out_specs)
+    sharded = jax.make_jaxpr(sharded_fn)(*_probe_avals(fused=False))
+    tops = _prim_seq(sharded.jaxpr)
+    if "shard_map" not in tops:
+        findings.append(Finding(
+            "jaxpr", "sharded-wraps-shard-map", f"{family}/sharded",
+            f"partitioned program's top-level jaxpr is {tops} — the "
+            "sharded form must lower through shard_map"))
+    _taint_jaxpr(sharded.jaxpr, _data_key_marks(sharded.jaxpr),
+                 f"{family}/sharded", findings)
+    return findings
+
+
+def run(root=None) -> List[Finding]:
+    """Audit every (family, program form); ``root`` is accepted for
+    signature uniformity with the static passes and ignored."""
+    findings: List[Finding] = []
+    for family in FAMILIES:
+        findings.extend(audit_family(family))
+    return findings

@@ -1,0 +1,235 @@
+"""Pass 3 — the async drain protocol as an explicit, checked table.
+
+The TaskLedger / DispatchQueue / PendingBucket machine was previously
+documented only in prose (PR 3/5 docstrings).  This module declares it
+as data — invocation states, legal ledger transitions, and the *sole*
+call sites allowed to perform each protocol action — and statically
+checks every audited file against the table.  The same table drives the
+opt-in runtime sanitizer (``repro/serverless/sanitize.py``,
+``REPRO_SANITIZE=1``), so the static allowlist and the live assertions
+cannot drift apart.
+
+The protocol (one bucket slice's life):
+
+    PLANNED ──mark_running──▶ DISPATCHED ──harvest──▶ HARVESTED
+        ──record_success(es)/record_failure──▶ BOOKED
+
+  * every ``dispatch_bucket`` launch is preceded by ``mark_running`` on
+    its invocations (a checkpoint taken mid-flight must re-queue them);
+  * a bucket is harvested exactly once, and only the dispatch queue (or
+    the synchronous ``run_bucket`` wrapper) may harvest;
+  * only the two booking functions may write ledger results — booking
+    anywhere else would bypass billing, retry, and finalization;
+  * schedulers must view pending work through
+    ``pending_by_bucket(exclude=<in-flight>)`` so an invocation whose
+    launch is on device is never dispatched twice (the one allowlisted
+    exception is a pricing thunk that runs while the queue is empty).
+
+The ROADMAP's multi-process topology item starts from this table: a
+remote host stream must perform exactly these transitions over the wire.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.report import Finding
+
+# ---------------------------------------------------------------------------
+# the state machine, as data
+# ---------------------------------------------------------------------------
+#: invocation states (mirrors serverless/ledger.py PENDING..FAILED)
+INVOCATION_STATES: Dict[str, int] = {
+    "PENDING": 0, "RUNNING": 1, "DONE": 2, "FAILED": 3,
+}
+
+#: ledger method -> (legal source states, destination state).  RUNNING
+#: is a legal source of mark_running (re-dispatch of orphaned rows) and
+#: PENDING a legal source of the record methods (resume path: a loaded
+#: ledger books rows the previous process had already computed).
+LEDGER_TRANSITIONS: Dict[str, Tuple[Tuple[str, ...], str]] = {
+    "mark_running": (("PENDING", "FAILED", "RUNNING"), "RUNNING"),
+    "record_success": (("RUNNING", "PENDING"), "DONE"),
+    "record_successes": (("RUNNING", "PENDING"), "DONE"),
+    "record_failure": (("RUNNING",), "FAILED"),
+}
+
+#: bucket states (PendingBucket's life in a DispatchQueue)
+BUCKET_STATES: Tuple[str, ...] = (
+    "PLANNED", "DISPATCHED", "HARVESTED", "BOOKED")
+
+# ---------------------------------------------------------------------------
+# performer allowlists: (file relative to src/repro, function qualname)
+# ---------------------------------------------------------------------------
+#: files the static checker audits (relative to the source root)
+AUDITED_FILES: Tuple[str, ...] = (
+    "serverless/backends.py", "serverless/dispatch.py",
+    "serverless/topology.py", "serverless/ledger.py",
+    "core/session.py", "compile/program.py", "compile/buckets.py",
+)
+
+#: the ONLY call sites allowed to write ledger results
+BOOKING_PERFORMERS: FrozenSet[Tuple[str, str]] = frozenset({
+    ("serverless/backends.py", "_StreamBackend._book_direct"),
+    ("serverless/backends.py", "WaveBackend._book_request_wave"),
+})
+_BOOKING_METHODS = ("record_success", "record_successes", "record_failure")
+
+#: the ONLY call sites allowed to harvest in-flight work
+HARVEST_PERFORMERS: FrozenSet[Tuple[str, str]] = frozenset({
+    ("serverless/dispatch.py", "DispatchQueue.push"),
+    ("serverless/dispatch.py", "DispatchQueue._harvest"),
+    ("serverless/dispatch.py", "DispatchQueue.harvest_ready"),
+    ("serverless/dispatch.py", "DispatchQueue.harvest_next"),
+    ("serverless/dispatch.py", "DispatchQueue.harvest_all"),
+    ("serverless/backends.py", "_BucketStreamBackend.step"),
+    ("serverless/backends.py", "WaveBackend.step"),
+    ("serverless/topology.py", "TopologyBackend.step"),
+    ("compile/program.py", "run_bucket"),
+})
+_HARVEST_METHODS = ("harvest", "harvest_ready", "harvest_next",
+                    "harvest_all")
+
+#: call sites allowed to view pending work WITHOUT excluding in-flight
+#: entries — only the wave autoscaler's roofline pricing thunk, which
+#: runs strictly between harvest_all and the next dispatch (queue empty)
+PENDING_VIEW_EXEMPT: FrozenSet[Tuple[str, str]] = frozenset({
+    ("serverless/backends.py", "WaveBackend._wave_workers"),
+})
+
+#: files whose dispatch_bucket calls must be preceded by mark_running in
+#: the same function (the compiler's own synchronous run_bucket wrapper
+#: sits below the ledger layer and is exempt by scope)
+_LEDGER_LAYER = ("serverless/backends.py", "serverless/topology.py",
+                 "core/session.py")
+
+#: dataclasses whose generated __eq__ would compare in-flight jax arrays
+#: elementwise — identity equality (eq=False) is load-bearing
+IDENTITY_DATACLASSES: Dict[str, str] = {
+    "PendingBucket": "serverless/dispatch.py",
+    "Launch": "compile/program.py",
+    "BucketDispatch": "compile/program.py",
+}
+
+
+def _last(callee: str) -> str:
+    return callee.rsplit(".", 1)[-1]
+
+
+def _check_file(rel: str, tree: ast.Module) -> List[Finding]:
+    findings: List[Finding] = []
+    calls = astutil.module_calls(tree)
+
+    for qual, lineno, callee in calls:
+        leaf = _last(callee)
+        if leaf in _BOOKING_METHODS and "." in callee:
+            if (rel, qual) not in BOOKING_PERFORMERS:
+                findings.append(Finding(
+                    "protocol", "booking-performer", f"{rel}:{lineno}",
+                    f"{callee}() in {qual} — ledger results may only be "
+                    "written by the declared booking functions "
+                    f"{sorted(q for _, q in BOOKING_PERFORMERS)}"))
+        if leaf in _HARVEST_METHODS and "." in callee:
+            if (rel, qual) not in HARVEST_PERFORMERS:
+                findings.append(Finding(
+                    "protocol", "harvest-performer", f"{rel}:{lineno}",
+                    f"{callee}() in {qual} — only the dispatch queue and "
+                    "the declared scheduler steps may harvest"))
+
+    # pending_by_bucket(exclude=...) — never re-dispatch in-flight work
+    for qual, fn in astutil.iter_functions(tree):
+        for lineno, callee, node in astutil.calls_in(fn):
+            if _last(callee) != "pending_by_bucket":
+                continue
+            has_exclude = any(kw.arg == "exclude" for kw in node.keywords) \
+                or len(node.args) >= 1
+            if not has_exclude and (rel, qual) not in PENDING_VIEW_EXEMPT:
+                findings.append(Finding(
+                    "protocol", "pending-view-excludes-in-flight",
+                    f"{rel}:{lineno}",
+                    f"{qual} calls pending_by_bucket() without "
+                    "exclude= — dispatched-but-unharvested invocations "
+                    "would be dispatched twice"))
+
+    # mark_running must precede dispatch_bucket in the same function
+    if rel in _LEDGER_LAYER:
+        for qual, fn in astutil.iter_functions(tree):
+            cs = astutil.calls_in(fn)
+            dispatches = [ln for ln, c, _ in cs
+                          if _last(c) == "dispatch_bucket"]
+            if not dispatches:
+                continue
+            marks = [ln for ln, c, _ in cs if _last(c) == "mark_running"]
+            for ln in dispatches:
+                if not any(m < ln for m in marks):
+                    findings.append(Finding(
+                        "protocol", "mark-before-dispatch",
+                        f"{rel}:{ln}",
+                        f"{qual} dispatches a bucket without first "
+                        "mark_running() its invocations — a checkpoint "
+                        "taken mid-flight would not re-queue them"))
+
+    # identity-equality dataclasses
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if IDENTITY_DATACLASSES.get(node.name) != rel:
+            continue
+        ok = False
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and \
+                    astutil.call_name(dec) is not None and \
+                    _last(astutil.call_name(dec)) == "dataclass":
+                for kw in dec.keywords:
+                    if kw.arg == "eq" and \
+                            isinstance(kw.value, ast.Constant) and \
+                            kw.value.value is False:
+                        ok = True
+        if not ok:
+            findings.append(Finding(
+                "protocol", "identity-equality", f"{rel}:{node.lineno}",
+                f"{node.name} must be @dataclass(eq=False): a generated "
+                "__eq__ compares in-flight jax arrays elementwise and "
+                "raises when two pending buckets share a key"))
+
+    # ledger.py: transition methods exist, save() is atomic
+    if rel == "serverless/ledger.py":
+        methods = {q.rsplit(".", 1)[-1]
+                   for q, _ in astutil.iter_functions(tree)
+                   if q.startswith("TaskLedger.")}
+        for name in LEDGER_TRANSITIONS:
+            if name not in methods:
+                findings.append(Finding(
+                    "protocol", "transition-table-drift", rel,
+                    f"LEDGER_TRANSITIONS names TaskLedger.{name} but the "
+                    "method does not exist — update the table with the "
+                    "rename"))
+        for qual, fn in astutil.iter_functions(tree):
+            if qual != "TaskLedger.save":
+                continue
+            if not any(_last(c) == "replace" and c.startswith("os.")
+                       for _, c, _ in astutil.calls_in(fn)):
+                findings.append(Finding(
+                    "protocol", "atomic-ledger-save",
+                    f"{rel}:{fn.lineno}",
+                    "TaskLedger.save must write tmp + os.replace — a "
+                    "crash mid-write must never corrupt the ledger"))
+    return findings
+
+
+def run(root: Optional[Path] = None) -> List[Finding]:
+    """Statically check every audited file against the protocol table."""
+    root = root or astutil.default_root()
+    findings: List[Finding] = []
+    for rel in AUDITED_FILES:
+        path = root / rel
+        if not path.exists():
+            findings.append(Finding(
+                "protocol", "missing-audited-file", rel,
+                "audited file disappeared — update AUDITED_FILES with "
+                "the move"))
+            continue
+        findings.extend(_check_file(rel, astutil.parse(path)))
+    return findings

@@ -38,6 +38,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.registry import warm_cache
 from repro.core.crossfit import aligned_bucket, pow2_bucket
 from repro.learners import FEATURE_PAD_SAFE
 
@@ -103,6 +104,11 @@ class MegabatchPlan:
                 out.append(key)
         return out
 
+    # the plan owns its requests, so req_idx names one fixed request for
+    # this plan's lifetime (the cache dict dies with the plan: ambient)
+    @warm_cache(name="plan_pages", key=("req_idx", "key.n_pad",
+                                        "key.p_pad"),
+                ambient=("self",))
     def page(self, req_idx: int, key: BucketKey) -> np.ndarray:
         """The request's feature page padded to the bucket shape."""
         pkey = (req_idx, key.n_pad, key.p_pad)

@@ -47,12 +47,13 @@ from __future__ import annotations
 import dataclasses
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import warm_cache
 from repro.core.crossfit import pow2_bucket
 
 # page identity: (data fingerprint, n_pad, p_pad)
@@ -294,6 +295,11 @@ class PagePool:
                 self._drop_stack(skey)
 
     # ------------------------------------------------------------------
+    # page contents are pinned by the PageKeys inside ``needs`` (a
+    # page_key embeds the request's data_key); the composition cache
+    # and residency maps live on this pool instance (ambient)
+    @warm_cache(name="page_pool_stacks", key=("needs", "n_pad", "p_pad"),
+                ambient=("self",))
     def stack(self, needs: Sequence[Tuple[PageKey, object]],
               n_pad: int, p_pad: int):
         """Assemble the (D, N_pad, P_pad) stack for one launch.

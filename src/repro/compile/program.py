@@ -59,6 +59,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.analysis.registry import warm_cache
 from repro.core.crossfit import PaddingStats, aligned_bucket, pow2_bucket
 from repro.compile.buckets import BucketKey, Entry, MegabatchPlan
 from repro.compile.pages import PagePool
@@ -121,6 +122,13 @@ class ProgramCache:
         self.partition = partition
         self.stats = CompileStats()
 
+    # BucketKey pins the segment's (learner, params) and padded shapes,
+    # which fully determine the batched fn the thunk builds — hence
+    # covers={"key": ("fn_thunk",)}; the cache dict lives on this
+    # ProgramCache instance, so instance state is ambient.
+    @warm_cache(name="program_cache", key=("key", "b_pad", "d_pad"),
+                reads=("fn_thunk",), covers={"key": ("fn_thunk",)},
+                ambient=("self",))
     def program(self, key: BucketKey, b_pad: int, d_pad: int,
                 fn_thunk: Callable[[], Callable]) -> Callable:
         pkey = (key, b_pad, d_pad)
@@ -142,6 +150,10 @@ class ProgramCache:
         self._programs[pkey] = prog
         return prog
 
+    @warm_cache(name="fused_program_cache",
+                key=("key", "b_pad", "d_pad", "g"),
+                reads=("fn_thunk",), covers={"key": ("fn_thunk",)},
+                ambient=("self",))
     def fused_program(self, key: BucketKey, b_pad: int, d_pad: int,
                       g: int, fn_thunk: Callable[[], Callable]) -> Callable:
         """One launch carrying ``g`` same-shape blocks over a shared
@@ -253,6 +265,10 @@ class BucketDispatch:
     def harvest(self) -> Dict[Entry, np.ndarray]:
         """Block until every launch lands; scatter predictions back per
         invocation.  Returns {(req_idx, inv): preds (tpi, n_obs)}."""
+        # function-level import: the compile layer must not load the
+        # serverless package at module scope (core <-> serverless cycle)
+        from repro.serverless.sanitize import check_harvest_once
+        check_harvest_once(self)
         results: Dict[Entry, np.ndarray] = {}
         for launch in self.launches:
             out = np.asarray(jax.block_until_ready(launch.out), np.float32)
@@ -277,6 +293,15 @@ _BLOCK_LAYOUT_CACHE: Dict[Tuple, List] = {}
 _BLOCK_LAYOUT_CACHE_MAX = 1024
 
 
+# segment_of_inv and _index_maps are pure functions of (grid, scaling,
+# segment l_ids) — all key components — hence covers under req.segments
+@warm_cache(name="block_layouts",
+            key=("req.grid.n_rep", "req.grid.n_folds",
+                 "req.grid.n_nuisance", "req.scaling", "req.segments",
+                 "invs", "b_block", "b_align"),
+            reads=("req.segment_of_inv", "req._index_maps"),
+            covers={"req.segments": ("req.segment_of_inv",
+                                     "req._index_maps")})
 def _request_block_layout(req, invs: List[int], b_block: int,
                           b_align: int) -> List:
     layout_key = (req.grid.n_rep, req.grid.n_folds, req.grid.n_nuisance,
@@ -354,6 +379,17 @@ _BLOCK_TENSOR_CACHE_BYTES = 256 * 1024 * 1024
 _block_tensor_bytes = 0
 
 
+# work_key pins the FULL data content plus plan structure (the PR 5
+# staleness fix), which determines the wave arrays and key-data tables;
+# a block's lane count k is determined by its member list
+@warm_cache(name="block_tensors",
+            key=("req.work_key", "seg_idx", "blk.members", "blk.b_pad",
+                 "n_pad"),
+            reads=("req.wave_arrays", "req.task_key_data", "blk.k",
+                   "blk.n"),
+            covers={"req.work_key": ("req.wave_arrays",
+                                     "req.task_key_data", "blk.n"),
+                    "blk.members": ("blk.k",)})
 def _block_tensors(req, seg_idx: int, blk: _Block, n_pad: int):
     """Stack one block's task tensors at its canonical padded shape."""
     global _block_tensor_bytes

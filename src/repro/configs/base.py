@@ -7,8 +7,7 @@ are hashable (usable as static args) and trivially serializable.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax.numpy as jnp
-import numpy as np
 from repro.scipy_free_stats import norm_ppf
 
 

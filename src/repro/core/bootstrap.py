@@ -7,7 +7,6 @@ exactly as in Chernozhukov et al. (2018) §3.3 and the DoubleML package.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
-import jax
 import jax.numpy as jnp
 
 F32 = jnp.float32

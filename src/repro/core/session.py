@@ -67,6 +67,7 @@ from repro.serverless.backends import (
     Segment, WorkRequest, make_backend,
 )
 from repro.serverless.ledger import TaskLedger
+from repro.serverless.sanitize import check_drained
 
 
 @dataclass
@@ -334,6 +335,7 @@ class DMLSession:
         cache and page pool survive; only the admission bookkeeping and
         its telemetry, already exposed via ``last_run_info``, retire)."""
         if not self._queue and self._state is not None:
+            check_drained(self._state, "session retire")
             self._state = None
             self._state_backend = None
 

@@ -15,7 +15,6 @@ block across the inner n-block loop.  P is padded to a multiple of 128
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,11 +22,9 @@ import gc
 import json
 import time
 import traceback
-from dataclasses import replace
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime
@@ -38,7 +36,7 @@ from repro.launch.roofline import (
     probe_plan, solve_extrapolation,
 )
 from repro.models import build_model
-from repro.models.param import sharding_tree, spec_tree, struct_tree
+from repro.models.param import sharding_tree, struct_tree
 from repro.sharding.axes import rules_for
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.trainer import make_train_step

@@ -18,8 +18,6 @@ paper's M*K*L task grid collapsing into MXU batch dimensions.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

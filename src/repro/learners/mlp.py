@@ -4,7 +4,6 @@ simultaneously as one batched computation (the serverless concurrency of
 the paper collapsed into a vmap axis)."""
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

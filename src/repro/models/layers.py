@@ -9,7 +9,6 @@ TPU path ever materializes an (Sq, Skv) score matrix; the Pallas kernel in
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -13,13 +13,11 @@ vocab-sharded logits (never materializes (B,S,V) at once).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import ssm as S
@@ -27,7 +25,7 @@ from repro.models.layers import (
     attn_decls, attn_decode, attn_forward, mlp_decls, mlp_forward, rms_norm,
     sinusoidal_pos,
 )
-from repro.models.moe import moe_decls, moe_forward, padded_experts
+from repro.models.moe import moe_decls, moe_forward
 from repro.models.param import PDecl, is_decl
 from repro.runtime import maybe_scan
 from repro.sharding.axes import LogicalRules, logical_constraint

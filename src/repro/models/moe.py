@@ -17,7 +17,6 @@ masks padded experts to -inf so they are never selected.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -28,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, MoEConfig
 from repro.models.param import PDecl
 from repro.models.layers import act_fn, mlp_decls, mlp_forward
-from repro.sharding.axes import LogicalRules, logical_constraint
+from repro.sharding.axes import LogicalRules
 
 from repro.sharding.compat import shard_map_compat as _shard_map
 

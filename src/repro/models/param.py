@@ -7,7 +7,6 @@ views structurally identical by construction.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 

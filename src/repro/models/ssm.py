@@ -11,17 +11,17 @@ FLOPs are corrected analytically in the roofline (launch/roofline.py).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, SSMConfig
+from repro.configs.base import ArchConfig
 from repro.models.param import PDecl
-from repro.models.layers import rms_norm, act_fn
+from repro.models.layers import rms_norm
 from repro.runtime import maybe_scan
-from repro.sharding.axes import LogicalRules, logical_constraint
+from repro.sharding.axes import LogicalRules
 
 F32 = jnp.float32
 

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 
 
 def norm_ppf(p: float) -> float:

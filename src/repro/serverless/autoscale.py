@@ -34,7 +34,7 @@ cost-reasoned instead of unit-guessed (ROADMAP "autoscaler signals").
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Tuple
 
 from repro.serverless.cost import speedup_of
 

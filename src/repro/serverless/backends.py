@@ -65,7 +65,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import warm_cache
 from repro.runtime import bounded_put
+from repro.serverless import sanitize
 from repro.serverless.autoscale import AutoscaleDecision, OccupancyAutoscaler
 from repro.serverless.cost import Bill, BillingRecord, speedup_of
 from repro.serverless.dispatch import (
@@ -111,6 +113,8 @@ _KEY_TABLE_CACHE_MAX = 512
 _INDEX_MAP_CACHE: Dict[Tuple, Tuple] = {}
 
 
+@warm_cache(name="fold_in_key_tables",
+            key=("base_key", "n_tasks", "key_ref"))
 def _segment_key_table(base_key, n_tasks: int,
                        key_ref: Optional[Tuple] = None) -> np.ndarray:
     if key_ref is not None:
@@ -299,6 +303,21 @@ class WorkRequest:
                    work_key=work_key)
 
     # ---- derived index maps (cached) ------------------------------------
+    # the grid's coordinate methods are pure functions of its scalar
+    # shape fields (all keyed) — hence covers under grid.n_rep; the
+    # per-instance memo self._maps is ambient
+    @warm_cache(name="work_request_index_maps",
+                key=("self.grid.n_rep", "self.grid.n_folds",
+                     "self.grid.n_nuisance", "self.scaling",
+                     "self.segments"),
+                reads=("self.grid.invocation_task_ids",
+                       "self.grid.task_coords",
+                       "self.grid.n_invocations"),
+                covers={"self.grid.n_rep": (
+                    "self.grid.invocation_task_ids",
+                    "self.grid.task_coords",
+                    "self.grid.n_invocations")},
+                ambient=("self._maps",))
     def _index_maps(self):
         if not hasattr(self, "_maps"):
             g = self.grid
@@ -529,6 +548,7 @@ class _StreamBackend:
 
     # ------------------------------------------------------------------
     def _finish(self, state: DrainState):
+        sanitize.check_drained(state, "backend finish")
         for ri in range(len(state.requests)):
             self._finalize_request(state, ri)
 
@@ -560,6 +580,7 @@ class _StreamBackend:
             per_req.setdefault(ri, []).append(inv)
         for ri, invs in per_req.items():
             req = state.requests[ri]
+            sanitize.check_booking(req.ledger, invs, "record_successes")
             req.ledger.record_successes(
                 invs, np.stack([results[(ri, inv)] for inv in invs]))
             _fill_rows(req, np.asarray(invs),
@@ -896,6 +917,8 @@ class WaveBackend(_StreamBackend):
             # timeout cap — then fall through to the general machinery
             per = wall / max(len(entries), 1)
             if per <= pool.timeout_s:
+                sanitize.check_booking(ledger, inv_arr,
+                                       "record_successes")
                 ledger.record_successes(inv_arr, preds_rows)
                 for i, e in enumerate(entries):
                     report.bill.add(BillingRecord(
@@ -928,9 +951,11 @@ class WaveBackend(_StreamBackend):
                 if ledger.attempts[e.inv] >= pool.max_retries:
                     raise RuntimeError(
                         f"invocation {e.inv} exceeded retry budget")
+                sanitize.check_booking(ledger, e.inv, "record_failure")
                 ledger.record_failure(e.inv)
                 report.failures += 1
                 continue
+            sanitize.check_booking(ledger, e.inv, "record_success")
             ledger.record_success(int(e.inv), preds_rows[i])
             report.bill.add(BillingRecord(
                 invocation=int(e.inv), duration_s=float(durs[i]),

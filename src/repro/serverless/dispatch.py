@@ -26,6 +26,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from repro.serverless import sanitize
+
 # (request index, invocation id) — compile/buckets.py::Entry, redeclared
 # here because repro.compile must load lazily (core <-> serverless cycle)
 Entry = Tuple[int, int]
@@ -179,6 +181,7 @@ class DispatchQueue:
         # frontier already attributed to earlier harvests; summed
         # durations then equal the true elapsed wall, matching the old
         # synchronous per-bucket accounting.
+        sanitize.check_attribution(t1, self._t_attr)
         elapsed = t1 - max(pb.t_dispatch, self._t_attr)
         self._t_attr = t1
         book(pb, results, max(elapsed, 0.0))

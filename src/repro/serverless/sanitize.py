@@ -1,0 +1,102 @@
+"""Opt-in runtime sanitizer for the async drain protocol.
+
+``REPRO_SANITIZE=1`` arms cheap invariant checks at the protocol's
+choke points — the live counterpart of the static checker
+(``repro/analysis/protocol.py``), driven by the SAME transition table so
+the two cannot drift apart:
+
+  * a bucket dispatch is harvested exactly once (a second harvest would
+    re-book rows and double-bill the wave);
+  * booking only lands on rows in a legal source state per
+    ``LEDGER_TRANSITIONS`` (a DONE row being re-booked outside the wave
+    backend's speculative path means a lost-race or double-harvest);
+  * the duration-attribution frontier only moves forward (overlapping
+    attribution double-charges GB-seconds and skews the autoscaler EMA);
+  * a drain never retires with buckets still in flight (a lost bucket
+    is work billed but never booked).
+
+Checks are no-ops unless the environment variable is set — it is read
+per call so a test can flip it with ``monkeypatch.setenv``.  CI runs the
+tier-1 async/topology suites with the sanitizer armed (job ``sanitize``
+in .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.analysis.protocol import INVOCATION_STATES, LEDGER_TRANSITIONS
+
+
+class ProtocolError(AssertionError):
+    """An async-protocol invariant was violated at runtime."""
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+_STATE_NAME = {v: k for k, v in INVOCATION_STATES.items()}
+
+
+def check_harvest_once(dispatch) -> None:
+    """Arm-once flag on a BucketDispatch: a second ``harvest()`` of the
+    same in-flight bucket raises (it would re-book every entry)."""
+    if not enabled():
+        return
+    if getattr(dispatch, "_sanitize_harvested", False):
+        raise ProtocolError(
+            f"bucket {dispatch.key} harvested twice — a dispatch is "
+            "booked exactly once; a second harvest re-books its rows")
+    dispatch._sanitize_harvested = True
+
+
+def check_booking(ledger, invs, method: str) -> None:
+    """Rows being booked must be in a legal source state for ``method``
+    per the protocol table (RUNNING, or PENDING on the resume path)."""
+    if not enabled():
+        return
+    legal = {INVOCATION_STATES[s] for s in LEDGER_TRANSITIONS[method][0]}
+    invs_arr = np.atleast_1d(np.asarray(invs, np.int64))
+    status = np.asarray(ledger.status)[invs_arr]
+    bad = invs_arr[~np.isin(status, list(legal))]
+    if bad.size:
+        states = sorted({_STATE_NAME[int(s)]
+                         for s in np.asarray(ledger.status)[bad]})
+        raise ProtocolError(
+            f"{method} on invocations {bad.tolist()} in state(s) "
+            f"{states} — legal sources are "
+            f"{list(LEDGER_TRANSITIONS[method][0])}; a DONE row being "
+            "re-booked means a double-harvest or lost race")
+
+
+def check_attribution(t_harvest: float, t_frontier: float) -> None:
+    """The non-overlapping duration-attribution frontier is monotone:
+    booking a harvest behind the frontier would double-charge the span
+    already attributed to an earlier harvest."""
+    if not enabled():
+        return
+    if t_harvest < t_frontier:
+        raise ProtocolError(
+            f"harvest attribution frontier moved backwards "
+            f"({t_harvest:.6f} < {t_frontier:.6f}) — concurrent buckets "
+            "would be billed overlapping wall-clock spans")
+
+
+def check_drained(state, where: str) -> None:
+    """A drain may only retire with every dispatch queue empty — an
+    in-flight bucket left behind is work billed but never booked."""
+    if not enabled():
+        return
+    n = 0
+    q = getattr(state, "queue", None)
+    if q is not None:
+        n += len(q)
+    for hq in getattr(state, "queues", {}).values():
+        n += len(hq)
+    if n:
+        raise ProtocolError(
+            f"{where}: drain retiring with {n} bucket(s) still in "
+            "flight — every dispatched bucket must be harvested and "
+            "booked before the state is dropped")

@@ -8,7 +8,7 @@ sharding scheme = swapping one rules table, no model edits.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple, Union
 
 import jax

@@ -17,7 +17,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.sharding.axes import LogicalRules, rules_for
+from repro.sharding.axes import rules_for
 
 
 @dataclass(frozen=True)

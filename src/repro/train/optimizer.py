@@ -5,7 +5,6 @@ int8 gradient compression with error feedback for the DP all-reduce.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

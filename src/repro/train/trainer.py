@@ -8,14 +8,12 @@ gradient all-reduce, so the roofline sees the full step.
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.lm import ModelBundle
 from repro.models.param import init_tree, sharding_tree, struct_tree

@@ -1,0 +1,228 @@
+"""repro.analysis auditor: clean on HEAD, and each pass demonstrably
+catches its seeded mutation (red) that the pristine tree passes (green).
+
+The static passes are pure-AST, so mutations are applied textually to a
+copy of the source tree in tmp_path — nothing broken is ever imported.
+"""
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import astutil, cache_keys, deadcode, protocol
+
+
+def _mutated_tree(tmp_path, rel, old, new):
+    root = astutil.default_root()
+    tmp = tmp_path / "repro"
+    shutil.copytree(root, tmp)
+    src = (tmp / rel).read_text()
+    assert old in src, f"mutation anchor missing from {rel}"
+    (tmp / rel).write_text(src.replace(old, new))
+    return tmp
+
+
+# ---------------------------------------------------------------------------
+# green: HEAD is clean
+# ---------------------------------------------------------------------------
+def test_static_passes_clean_on_head():
+    assert cache_keys.run() == []
+    assert protocol.run() == []
+    assert deadcode.run() == []
+
+
+def test_registry_covers_expected_caches():
+    from repro.analysis import REGISTRY
+    import repro.compile.buckets     # noqa: F401  (decorators register
+    import repro.compile.pages       # noqa: F401   on import)
+    import repro.compile.program     # noqa: F401
+    import repro.serverless.backends  # noqa: F401
+    assert set(cache_keys.EXPECTED_CACHES) <= set(REGISTRY)
+    spec = REGISTRY["block_tensors"]
+    assert "req.work_key" in spec.key
+    assert "req.wave_arrays" in spec.covers["req.work_key"]
+
+
+# ---------------------------------------------------------------------------
+# red: cache-key pass vs seeded staleness mutations
+# ---------------------------------------------------------------------------
+def test_content_key_role_drop_fails_cache_pass(tmp_path):
+    """Dropping role arrays from DMLData.content_key re-creates the PR 5
+    staleness bug — the pass must turn it into a lint failure."""
+    tmp = _mutated_tree(tmp_path, "core/spec.py",
+                        "for r in _ROLES if", "for r in _ROLES[:2] if")
+    rules = {f.rule for f in cache_keys.run(tmp)}
+    assert "content-key-covers-roles" in rules
+
+
+def test_key_component_drop_fails_cache_pass(tmp_path):
+    """Removing work_key from the block-tensor contract leaves its reads
+    unjustified and the key unable to pin the cached tensors."""
+    tmp = _mutated_tree(
+        tmp_path, "compile/program.py",
+        'key=("req.work_key", "seg_idx", "blk.members", "blk.b_pad",',
+        'key=("seg_idx", "blk.members", "blk.b_pad",')
+    found = [f for f in cache_keys.run(tmp) if "program" in f.where]
+    rules = {f.rule for f in found}
+    assert rules & {"cover-not-a-key", "uncovered-read",
+                    "unkeyed-parameter"}
+
+
+def test_undeclared_bounded_put_fails_cache_pass(tmp_path):
+    """A new bounded cache insert without a @warm_cache contract."""
+    tmp = _mutated_tree(
+        tmp_path, "serverless/backends.py",
+        "@warm_cache(name=\"fold_in_key_tables\",\n"
+        "            key=(\"base_key\", \"n_tasks\", \"key_ref\"))\n", "")
+    rules = {f.rule for f in cache_keys.run(tmp)}
+    assert "unregistered-bounded-put" in rules
+    assert "missing-cache" in rules
+
+
+# ---------------------------------------------------------------------------
+# red: protocol pass vs seeded scheduler mutations
+# ---------------------------------------------------------------------------
+def test_unexcluded_pending_view_fails_protocol_pass(tmp_path):
+    tmp = _mutated_tree(
+        tmp_path, "serverless/backends.py",
+        "groups = state.plan.pending_by_bucket(\n"
+        "            exclude=q.in_flight_entries())",
+        "groups = state.plan.pending_by_bucket()")
+    rules = {f.rule for f in protocol.run(tmp)}
+    assert "pending-view-excludes-in-flight" in rules
+
+
+def test_rogue_booking_site_fails_protocol_pass(tmp_path):
+    tmp = _mutated_tree(
+        tmp_path, "serverless/backends.py",
+        "    def _checkpoint(self, state: DrainState):",
+        "    def _checkpoint(self, state: DrainState):\n"
+        "        state.requests[0].ledger.record_failure(0)")
+    rules = {f.rule for f in protocol.run(tmp)}
+    assert "booking-performer" in rules
+
+
+def test_identity_equality_regression_fails_protocol_pass(tmp_path):
+    tmp = _mutated_tree(
+        tmp_path, "serverless/dispatch.py",
+        "@dataclass(eq=False)\nclass PendingBucket:",
+        "@dataclass\nclass PendingBucket:")
+    rules = {f.rule for f in protocol.run(tmp)}
+    assert "identity-equality" in rules
+
+
+# ---------------------------------------------------------------------------
+# red: jaxpr audit vs a vmap-built fused program
+# ---------------------------------------------------------------------------
+def test_vmap_fused_program_fails_jaxpr_audit():
+    from repro.analysis import jaxpr_audit as ja
+    run, _ = ja._program_pair("ols")
+
+    def run_vmapped(pages, data_idx, y, w, valid, key_data):
+        return jax.vmap(lambda *t: run(pages, *t))(
+            data_idx, y, w, valid, key_data)
+
+    single = jax.make_jaxpr(run)(*ja._probe_avals(fused=False))
+    bad = jax.make_jaxpr(run_vmapped)(*ja._probe_avals(fused=True))
+    rules = {f.rule for f in ja.audit_fused_pair(single, bad, "ols/mut")}
+    assert "fused-lowers-through-scan" in rules
+    # and the real lax.map build passes the same check
+    _, run_fused = ja._program_pair("ols")
+    good = jax.make_jaxpr(run_fused)(*ja._probe_avals(fused=True))
+    assert ja.audit_fused_pair(single, good, "ols/fused") == []
+
+
+def test_data_derived_prng_fails_taint_analysis():
+    from repro.analysis import jaxpr_audit as ja
+    run, _ = ja._program_pair("ols")
+
+    def run_leaky(pages, data_idx, y, w, valid, key_data):
+        # derive PRNG state from a runtime data value: schedule-variant
+        leaked = jax.random.fold_in(
+            jax.random.key(0), data_idx[0].astype(np.uint32))
+        _ = jax.random.uniform(leaked)
+        return run(pages, data_idx, y, w, valid, key_data)
+
+    bad = jax.make_jaxpr(run_leaky)(*ja._probe_avals(fused=False))
+    findings = []
+    ja._taint_jaxpr(bad.jaxpr, ja._data_key_marks(bad.jaxpr),
+                    "ols/leak", findings)
+    assert any(f.rule == "prng-key-from-runtime-data" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer (REPRO_SANITIZE=1)
+# ---------------------------------------------------------------------------
+def _dispatched_bucket():
+    from repro.compile import plan_buckets
+    from repro.compile.program import ProgramCache, dispatch_bucket
+    from repro.core import DMLData, DMLPlan
+    from repro.core.session import compile_request
+    from repro.data import make_plr_data
+
+    data = DMLData.from_dict(
+        make_plr_data(n_obs=40, dim_x=3, theta=0.5, seed=0))
+    plan = DMLPlan.for_model("plr", learner="ridge",
+                             learner_params={"reg": 1.0},
+                             n_folds=2, n_rep=1, seed=7)
+    req = compile_request(plan, data)
+    mp = plan_buckets([req])
+    key, entries = next(iter(mp.pending_by_bucket().items()))
+    return req, dispatch_bucket(mp, ProgramCache(), key, entries)
+
+
+def test_sanitizer_trips_on_double_harvest(monkeypatch):
+    from repro.serverless.sanitize import ProtocolError
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    _, bd = _dispatched_bucket()
+    bd.harvest()
+    with pytest.raises(ProtocolError, match="harvested twice"):
+        bd.harvest()
+
+
+def test_sanitizer_off_allows_double_harvest(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    _, bd = _dispatched_bucket()
+    first = bd.harvest()
+    again = bd.harvest()
+    assert set(first) == set(again)
+
+
+def test_sanitizer_trips_on_booking_done_rows(monkeypatch):
+    from repro.serverless.sanitize import ProtocolError, check_booking
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    req, bd = _dispatched_bucket()
+    results = bd.harvest()
+    invs = sorted({inv for _, inv in bd.entries})
+    req.ledger.record_successes(
+        invs, np.stack([results[(0, inv)] for inv in invs]))
+    with pytest.raises(ProtocolError, match="record_successes"):
+        check_booking(req.ledger, invs, "record_successes")
+
+
+def test_sanitizer_trips_on_lost_bucket(monkeypatch):
+    from repro.serverless.dispatch import DispatchQueue, PendingBucket
+    from repro.serverless.sanitize import ProtocolError, check_drained
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+
+    class _State:
+        queue = DispatchQueue()
+        queues = {}
+
+    _, bd = _dispatched_bucket()
+    _State.queue._pending.append(PendingBucket(dispatch=bd))
+    with pytest.raises(ProtocolError, match="in\\s?flight"):
+        check_drained(_State, "test retire")
+    _State.queue._pending.clear()
+    check_drained(_State, "test retire")     # empty queue passes
+
+
+def test_transition_table_matches_ledger():
+    """The table the sanitizer and static checker share names real
+    TaskLedger methods and the module's state constants."""
+    from repro.serverless import ledger as L
+    for name in protocol.LEDGER_TRANSITIONS:
+        assert callable(getattr(L.TaskLedger, name))
+    for sname, code in protocol.INVOCATION_STATES.items():
+        assert getattr(L, sname) == code

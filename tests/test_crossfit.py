@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.crossfit import (
-    TaskGrid, TaskKey, check_partition, draw_fold_masks, stitch_predictions,
+    TaskGrid, check_partition, draw_fold_masks, stitch_predictions,
 )
 
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.learners import get_learner
 from repro.learners.linear import lasso_fit_predict, ridge_fit_predict

@@ -8,7 +8,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
 from repro.models.moe import _moe_local, moe_decls, padded_experts

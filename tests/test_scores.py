@@ -2,10 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.scores import (
-    SPECS, evaluate_score, irm_score, pliv_score, plr_score, score_se,
+    SPECS, irm_score, plr_score, score_se,
     solve_theta,
 )
 

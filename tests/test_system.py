@@ -4,7 +4,6 @@ levels, the paper's headline latency property, and serving."""
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

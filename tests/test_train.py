@@ -1,5 +1,4 @@
 """Optimizer, checkpointing, trainer integration."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import pytest
 
 from repro.train.checkpoint import Checkpointer, payload_to_tree, tree_to_payload
 from repro.train.optimizer import (
-    OptConfig, adamw_update, compress_int8, global_norm, init_opt_state,
+    OptConfig, adamw_update, compress_int8, init_opt_state,
     schedule,
 )
 
