@@ -46,7 +46,21 @@ EXPECTED_CACHES: Tuple[str, ...] = (
     "work_request_index_maps",  # serverless/backends.py::_index_maps
     "page_pool_stacks",         # compile/pages.py::PagePool.stack
     "plan_pages",               # compile/buckets.py::MegabatchPlan.page
+    "persistent_program_cache",  # compile/persist.py::PersistentProgramCache.lookup
+    # the process-wide L1 over the disk tier shares the same triple key;
+    # its single insert site (PersistentProgramCache._process_put) is
+    # what lookup() and store() both remember through
+    "persistent_program_cache_process_tier",
 )
+
+#: the persistent program cache outlives the process, so its key must
+#: pin everything that can differ between two processes sharing the
+#: cache directory: the jax build (serialized executables are not
+#: portable across versions), the backend platform (an executable
+#: compiled for one device kind is wrong on another), and the program
+#: fingerprint (shapes, dtypes, learner spec, x64 mode)
+PERSIST_KEY_COMPONENTS: Tuple[str, ...] = (
+    "build", "platform", "fingerprint")
 
 
 def _covered(chain: str, paths: Sequence[str]) -> bool:
@@ -228,6 +242,18 @@ def run(root: Optional[Path] = None) -> List[Finding]:
                     f"{registered[name][0]} ({registered[name][1]})"))
             registered[name] = (rel, qual)
             findings.extend(_check_contract(rel, qual, fn, kwargs))
+            if name.startswith("persistent_program_cache"):
+                key = tuple(kwargs.get("key", ()))
+                missing = [c for c in PERSIST_KEY_COMPONENTS
+                           if c not in key]
+                if missing:
+                    findings.append(Finding(
+                        "cache-keys", "persist-key-components",
+                        f"{rel}:{fn.lineno}",
+                        f"{qual}: persistent (cross-process) cache key "
+                        f"is missing {missing} — a shared cache dir "
+                        "would serve executables across jax builds, "
+                        "backend platforms, or program shapes"))
 
         # every bounded_put insertion must sit inside a registered cache
         for qual, lineno, callee in astutil.module_calls(tree):

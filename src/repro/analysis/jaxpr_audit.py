@@ -28,6 +28,16 @@ family and program form the ``ProgramCache`` can build:
   * **data-dependent-shape** — every intermediate aval must have
     concrete integer dimensions; a data-dependent shape would make the
     compiled program's output depend on bucket composition.
+  * **morph-classified** — every family must be classified by the
+    cross-shape coalescer (ISSUE 7): in ``MORPH_BITWISE_FAMILIES``
+    (bitwise-proven B-invariant, morph freely) or
+    ``MORPH_TOLERANCE_FAMILIES`` (morph only under an explicit opt-in
+    tolerance on ``PoolConfig``), never silently unclassified — and the
+    two sets must be disjoint.
+  * **morph-structural-b-pin** — a bitwise-morphable family's program
+    must trace to the identical primitive sequence at two different B
+    paddings: padding a tail block up to a neighbor's canonical B may
+    never change the computation's structure, only its lane count.
 
 Unlike the other passes this one imports jax and the learner registry —
 it audits what actually traces, not what the source says.
@@ -147,16 +157,16 @@ def _taint_jaxpr(jaxpr, invar_marks: List[Set[str]], where: str,
 # ---------------------------------------------------------------------------
 # program forms
 # ---------------------------------------------------------------------------
-def _probe_avals(fused: bool):
+def _probe_avals(fused: bool, b: int = _B):
     kw = jax.random.key_data(jax.random.key(0)).shape
     lead = (_G,) if fused else ()
     f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
     return (jax.ShapeDtypeStruct((1, _N, _P), f32),          # pages
-            jax.ShapeDtypeStruct(lead + (_B,), i32),         # data_idx
-            jax.ShapeDtypeStruct(lead + (_B, _N), f32),      # y
-            jax.ShapeDtypeStruct(lead + (_B, _N), f32),      # w
-            jax.ShapeDtypeStruct(lead + (_B, _N), f32),      # valid
-            jax.ShapeDtypeStruct(lead + (_B,) + kw, u32))    # key_data
+            jax.ShapeDtypeStruct(lead + (b,), i32),          # data_idx
+            jax.ShapeDtypeStruct(lead + (b, _N), f32),       # y
+            jax.ShapeDtypeStruct(lead + (b, _N), f32),       # w
+            jax.ShapeDtypeStruct(lead + (b, _N), f32),       # valid
+            jax.ShapeDtypeStruct(lead + (b,) + kw, u32))     # key_data
 
 
 def _program_pair(family: str):
@@ -211,12 +221,51 @@ def _data_key_marks(jaxpr) -> List[Set[str]]:
     return [{"data"}] * (n - 1) + [{"key"}]
 
 
+def audit_morph_classification() -> List[Finding]:
+    """Every learner family must be placed by the cross-shape coalescer:
+    bitwise-morphable or tolerance-gated, never silently unclassified —
+    an unclassified family would quietly opt out of tail coalescing and
+    shrink the launch-efficiency win without any test noticing."""
+    from repro.compile.program import (MORPH_BITWISE_FAMILIES,
+                                       MORPH_TOLERANCE_FAMILIES)
+    findings: List[Finding] = []
+    both = MORPH_BITWISE_FAMILIES & MORPH_TOLERANCE_FAMILIES
+    if both:
+        findings.append(Finding(
+            "jaxpr", "morph-classified", "compile/program.py",
+            f"families {sorted(both)} are in BOTH morph sets — bitwise "
+            "and tolerance-gated are mutually exclusive contracts"))
+    for family in FAMILIES:
+        if family not in MORPH_BITWISE_FAMILIES \
+                and family not in MORPH_TOLERANCE_FAMILIES:
+            findings.append(Finding(
+                "jaxpr", "morph-classified", f"{family}/morph",
+                f"family {family!r} is in neither MORPH_BITWISE_FAMILIES "
+                "nor MORPH_TOLERANCE_FAMILIES — classify it (prove "
+                "bitwise B-invariance or register the tolerance tier) "
+                "so the coalescer's behavior is an explicit contract"))
+    return findings
+
+
 def audit_family(family: str) -> List[Finding]:
     findings: List[Finding] = []
     run, run_fused = _program_pair(family)
 
     single = jax.make_jaxpr(run)(*_probe_avals(fused=False))
     fused = jax.make_jaxpr(run_fused)(*_probe_avals(fused=True))
+
+    # structural B-pin: a morphable family's primitive sequence may not
+    # depend on the B padding (the bitwise proof's structural shadow)
+    from repro.compile.program import MORPH_BITWISE_FAMILIES
+    if family in MORPH_BITWISE_FAMILIES:
+        wide = jax.make_jaxpr(run)(*_probe_avals(fused=False, b=2 * _B))
+        if _prim_seq(wide.jaxpr) != _prim_seq(single.jaxpr):
+            findings.append(Finding(
+                "jaxpr", "morph-structural-b-pin", f"{family}/morph",
+                f"primitive sequence changes between B={_B} and "
+                f"B={2 * _B} — a B-dependent computation cannot be "
+                "bitwise-morphed; move the family to "
+                "MORPH_TOLERANCE_FAMILIES or fix the learner"))
 
     findings.extend(audit_fused_pair(single, fused, f"{family}/fused"))
     _taint_jaxpr(single.jaxpr, _data_key_marks(single.jaxpr),
@@ -247,6 +296,7 @@ def run(root=None) -> List[Finding]:
     """Audit every (family, program form); ``root`` is accepted for
     signature uniformity with the static passes and ignored."""
     findings: List[Finding] = []
+    findings.extend(audit_morph_classification())
     for family in FAMILIES:
         findings.extend(audit_family(family))
     return findings

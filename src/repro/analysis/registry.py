@@ -14,6 +14,14 @@ component, a declared read, nor ambient state scoped to the cache's own
 lifetime fails the audit — so adding a read without extending the key
 (or consciously documenting why the key already pins it) cannot land.
 
+Cross-process caches raise the bar: a cache whose entries outlive the
+process (the on-disk ``persistent_program_cache``, compile/persist.py)
+must additionally key everything that can differ between two processes
+sharing the store — toolchain build, backend platform, and a full
+program fingerprint — because no in-memory ambient state survives to
+disambiguate entries.  ``cache_keys.py`` enforces those components by
+name for the persistent cache.
+
 This module is imported by hot-path runtime code (compile/, serverless/)
 and therefore has **no repro-internal imports** (no cycle risk) and no
 runtime cost beyond attaching metadata.

@@ -149,6 +149,56 @@ class MegabatchPlan:
                            if (e := (ri, int(inv))) not in (exclude or ()))
         return self.group_entries(entries)
 
+def pack_tail_blocks(lane_counts: Sequence[int], b_block: int,
+                     quantum: int = 8, b_align: int = 1,
+                     ) -> Tuple[List[List[int]], int]:
+    """Pack tail-block lane counts into combined launch blocks sharing
+    ONE uniform lane count ``T`` (ISSUE 7 cross-shape coalescing).
+    Returns ``(groups, T)``: index groups plus the shared padded size.
+
+    A uniform T is what lets every packed group fuse into a single
+    ``lax.map`` launch without a second morph-up pass (morphing smaller
+    groups up to the largest one is where naive packing bleeds padding).
+    T is chosen by sweeping every aligned candidate up to ``b_block``
+    and greedily first-fit packing against it, keeping the T that
+    minimizes total padded lanes (ties: fewer groups, then smaller T).
+
+    Deterministic: inputs are visited in order and placed into the
+    first group with room, so a bucket's packing is a pure function of
+    its tail sizes — the same traffic packs the same way on every
+    drain.  Pure bookkeeping; the bitwise-safety of launching packed
+    lanes at a different compiled B is the compiled-B invariance proven
+    per family in tests/test_compile.py and audited by
+    analysis/jaxpr_audit.py.
+    """
+    counts = [int(k) for k in lane_counts]
+    lo = max(aligned_bucket(k, quantum, b_align) for k in counts)
+    cands = sorted({aligned_bucket(v, quantum, b_align)
+                    for v in range(lo, max(b_block, lo) + 1)})
+
+    def pack(cap: int) -> Tuple[List[List[int]], List[int]]:
+        groups: List[List[int]] = []
+        totals: List[int] = []
+        for i, k in enumerate(counts):
+            for gi, tot in enumerate(totals):
+                if aligned_bucket(tot + k, quantum, b_align) <= cap:
+                    groups[gi].append(i)
+                    totals[gi] = tot + k
+                    break
+            else:
+                groups.append([i])
+                totals.append(k)
+        return groups, totals
+
+    best = None
+    for cap in cands:
+        groups, _ = pack(cap)
+        score = (len(groups) * cap, len(groups), cap)
+        if best is None or score < best[0]:
+            best = (score, groups, cap)
+    return best[1], best[2]
+
+
 def plan_buckets(requests: Sequence, *, min_n: int = 8,
                  min_p: int = 8) -> MegabatchPlan:
     """Assign every (request, segment) to a megabatch bucket (batch form

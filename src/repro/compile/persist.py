@@ -1,0 +1,276 @@
+"""Persistent on-disk megabatch program cache (ISSUE 7 tentpole).
+
+Cold drains used to pay a full trace+compile per (bucket, B, D[, G])
+shape even when an identical session ran seconds earlier in another
+process — the in-memory ``ProgramCache`` dies with the process.  This
+module persists the *compiled executables* across processes:
+
+  * programs are lowered ahead-of-time against their exact argument
+    avals (the megabatch calling convention is shape-total: every
+    operand shape is a pure function of the bucket key and the padded
+    batch shape), serialized via ``jax.experimental.serialize_executable``
+    and written to ``REPRO_PROGRAM_CACHE_DIR``;
+  * JAX's own XLA compilation cache (``jax_compilation_cache_dir``) is
+    pointed at a subdirectory as belt-and-braces for any residual
+    tracing path (partitioned programs, probe traces).
+
+Deserializing an executable is ~14x cheaper than compiling it on this
+backend, which is what flips the BENCH_fusion cold gate: a disk-warm
+cold drain re-traces **zero** programs.
+
+**Custom-call portability (measured, this jaxlib/CPU build):** an
+executable serialized via ``serialize_executable`` embeds raw host
+function pointers for its custom-call targets (LAPACK/BLAS kernels),
+even the name-registered ``_ffi`` variants — deserializing one in a
+fresh process and calling it segfaults under ASLR.  JAX's own XLA
+compilation cache does NOT have this problem (it re-links targets at
+load), so the split is: custom-call-bearing programs (ols, ridge,
+logistic, kernel_ridge solvers) rely on the XLA cache for cross-process
+cold-compile relief, while custom-call-free programs (lasso, mlp — pure
+XLA iterative solvers) additionally skip tracing entirely through the
+AOT store.  ``store()`` enforces this by scanning the optimized HLO and
+refusing to persist non-portable executables (``skipped_unportable``).
+
+A third tier covers the recycled-container case (same process, fresh
+backend): ``_process_programs`` is a process-wide map over the same
+``(build, platform, fingerprint)`` key, safe for ALL programs —
+including custom-call ones — because host pointers stay valid within
+the process.  A warm container's "cold" drain therefore compiles zero
+programs regardless of portability.
+
+Key discipline (the ninth ``@warm_cache`` contract, audited by
+``analysis/cache_keys.py``): a serialized executable is only valid for
+the exact jax build, backend platform, and program shape that produced
+it, so the lookup key is ``(jax_build, platform, fingerprint)`` — the
+fingerprint pins the resolved learner spec (never an object identity),
+the padded shapes, the PRNG key-data layout, and the x64 mode.  Opaque
+callables have process-local identity and are never persisted.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import tempfile
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.registry import warm_cache
+
+# Environment switch: set to a directory path to enable cross-process
+# program persistence.  Unset (the default) keeps the compile layer
+# purely in-memory — zero behavior change for existing callers.
+ENV_CACHE_DIR = "REPRO_PROGRAM_CACHE_DIR"
+
+
+def _key_tail() -> Tuple[int, ...]:
+    """Trailing shape of one task's PRNG key data under the process's
+    configured key implementation (threefry: (2,))."""
+    return tuple(jax.random.key_data(jax.random.key(0)).shape)
+
+
+def jax_build() -> str:
+    """The jax build a serialized executable is valid for."""
+    try:
+        import jaxlib
+        lib = getattr(jaxlib, "__version__", "?")
+    except Exception:                              # pragma: no cover
+        lib = "?"
+    return f"jax-{jax.__version__}+jaxlib-{lib}"
+
+
+def backend_platform() -> str:
+    """The backend platform (and device kind) executables target."""
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:                              # pragma: no cover
+        kind = "?"
+    return f"{jax.default_backend()}:{kind}"
+
+
+def program_fingerprint(key, b_pad: int, d_pad: int,
+                        g: Optional[int] = None) -> Optional[Tuple]:
+    """Value identity of one compiled megabatch program, stable across
+    processes — or None when the program must not be persisted.
+
+    The learner identity must be a resolved spec tuple
+    ``(family, params)``: opaque callables key by ``id()`` which is
+    process-local, so persisting them would alias unrelated programs.
+    """
+    ident = key.learner
+    if not (isinstance(ident, tuple) and len(ident) == 2
+            and isinstance(ident[0], str) and ident[0] != "opaque"):
+        return None
+    return ("megabatch-v1", repr(ident), int(key.n_pad), int(key.p_pad),
+            int(b_pad), int(d_pad), None if g is None else int(g),
+            _key_tail(), bool(jax.config.jax_enable_x64))
+
+
+def program_avals(key, b_pad: int, d_pad: int,
+                  g: Optional[int] = None) -> Tuple:
+    """Exact argument avals of the megabatch calling convention
+    ``run(pages, data_idx, y, w, valid, key_data)`` — single-block when
+    ``g`` is None, fused (leading block axis) otherwise."""
+    n_pad, p_pad = int(key.n_pad), int(key.p_pad)
+    kt = _key_tail()
+    lead = () if g is None else (int(g),)
+    shapes = ((int(d_pad), n_pad, p_pad),          # pages
+              lead + (int(b_pad),),                # data_idx
+              lead + (int(b_pad), n_pad),          # y
+              lead + (int(b_pad), n_pad),          # w
+              lead + (int(b_pad), n_pad),          # valid
+              lead + (int(b_pad),) + kt)           # key_data
+    dtypes = (jnp.float32, jnp.int32, jnp.float32, jnp.float32,
+              jnp.float32, jnp.uint32)
+    return tuple(jax.ShapeDtypeStruct(s, d) for s, d in zip(shapes, dtypes))
+
+
+def _configure_jax_cache(cache_dir: str):
+    """Point JAX's own persistent compilation cache at a subdirectory —
+    covers any tracing path that bypasses the AOT store (partitioned
+    programs, audit probes).  Best-effort: unsupported backends fall
+    back to the AOT store alone."""
+    try:
+        jax.config.update("jax_compilation_cache_dir",
+                          os.path.join(cache_dir, "xla"))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:                              # pragma: no cover
+        pass
+
+
+class PersistentProgramCache:
+    """Directory of AOT-serialized megabatch executables.
+
+    One file per ``(jax_build, platform, fingerprint)``; writes are
+    atomic (tmp + rename) so concurrent processes sharing a cache
+    directory never observe torn blobs, and unreadable/stale entries
+    are treated as misses and evicted.
+    """
+
+    #: process-wide L1 over the disk tier, shared by every instance:
+    #: a recycled container (same process, fresh backend/ProgramCache)
+    #: reuses already-compiled executables without re-tracing — and
+    #: unlike the disk tier this is safe for custom-call programs too,
+    #: because the baked host pointers are valid within the process.
+    #: Keyed by the SAME (build, platform, fingerprint) triple as disk.
+    _process_programs: dict = {}
+    _PROCESS_CAP = 256
+
+    def __init__(self, cache_dir: str):
+        self.cache_dir = cache_dir
+        self.loads = 0                  # executables deserialized from disk
+        self.process_hits = 0           # served from the in-process tier
+        self.stores = 0                 # executables serialized to disk
+        self.errors = 0                 # unreadable / unserializable entries
+        self.skipped_unportable = 0     # custom-call programs not persisted
+        os.makedirs(cache_dir, exist_ok=True)
+        _configure_jax_cache(cache_dir)
+
+    def _path(self, build: str, platform: str, fingerprint: Tuple) -> str:
+        h = hashlib.sha1(
+            repr((build, platform, fingerprint)).encode()).hexdigest()
+        return os.path.join(self.cache_dir, f"{h}.prog")
+
+    # Both tiers cache under the SAME full triple: the jax build and
+    # platform pin the executable format, the fingerprint pins the
+    # program (resolved spec + padded shapes + key layout + x64 mode).
+    # This is the only insert site of the process-wide tier — lookup's
+    # disk path and store both remember through it.
+    @warm_cache(name="persistent_program_cache_process_tier",
+                key=("build", "platform", "fingerprint"),
+                reads=("prog",),
+                covers={"fingerprint": ("prog",)},
+                ambient=("self",))
+    def _process_put(self, build: str, platform: str, fingerprint: Tuple,
+                     prog) -> None:
+        from repro.runtime import bounded_put
+        bounded_put(self._process_programs,
+                    (build, platform, fingerprint), prog,
+                    self._PROCESS_CAP)
+
+    # The on-disk entry is a pure function of the full lookup key (same
+    # triple as the process tier).  The directory handle is instance
+    # state (ambient).
+    @warm_cache(name="persistent_program_cache",
+                key=("build", "platform", "fingerprint"),
+                ambient=("self",))
+    def lookup(self, build: str, platform: str, fingerprint: Tuple):
+        """Serve from the in-process tier, else deserialize a
+        previously-stored executable from disk, else None."""
+        prog = self._process_programs.get((build, platform, fingerprint))
+        if prog is not None:
+            self.process_hits += 1
+            return prog
+        path = self._path(build, platform, fingerprint)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                payload, in_tree, out_tree = pickle.loads(f.read())
+            from jax.experimental import serialize_executable as se
+            prog = se.deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:
+            # stale jax build, torn write, foreign blob: evict and miss
+            self.errors += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+        self.loads += 1
+        self._process_put(build, platform, fingerprint, prog)
+        return prog
+
+    @staticmethod
+    def portable(compiled) -> bool:
+        """A serialized executable only survives a process boundary when
+        it contains NO custom calls: XLA:CPU bakes custom-call targets
+        in by host address (segfault under ASLR in the next process).
+        Conservative on inspection failure: not portable."""
+        try:
+            return "custom-call" not in compiled.as_text()
+        except Exception:                          # pragma: no cover
+            return False
+
+    def store(self, build: str, platform: str, fingerprint: Tuple,
+              compiled) -> bool:
+        """Record one AOT-compiled executable: always into the
+        in-process tier; onto disk (atomic write) only when portable —
+        custom-call-bearing programs (see ``portable``) lean on the XLA
+        compilation cache for cross-process relief instead.  Returns
+        whether a disk entry was written."""
+        self._process_put(build, platform, fingerprint, compiled)
+        if not self.portable(compiled):
+            self.skipped_unportable += 1
+            return False
+        try:
+            from jax.experimental import serialize_executable as se
+            blob = pickle.dumps(se.serialize(compiled))
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, self._path(build, platform, fingerprint))
+            finally:
+                if os.path.exists(tmp):
+                    os.remove(tmp)
+        except Exception:                          # pragma: no cover
+            self.errors += 1
+            return False
+        self.stores += 1
+        return True
+
+    def summary(self) -> dict:
+        return {"cache_dir": self.cache_dir, "disk_loads": self.loads,
+                "process_hits": self.process_hits,
+                "disk_stores": self.stores, "disk_errors": self.errors,
+                "skipped_unportable": self.skipped_unportable}
+
+
+def default_persist() -> Optional[PersistentProgramCache]:
+    """The environment-configured persistent cache, or None."""
+    d = os.environ.get(ENV_CACHE_DIR)
+    return PersistentProgramCache(d) if d else None

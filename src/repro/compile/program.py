@@ -61,8 +61,12 @@ import numpy as np
 
 from repro.analysis.registry import warm_cache
 from repro.core.crossfit import PaddingStats, aligned_bucket, pow2_bucket
-from repro.compile.buckets import BucketKey, Entry, MegabatchPlan
+from repro.compile.buckets import (BucketKey, Entry, MegabatchPlan,
+                                   pack_tail_blocks)
 from repro.compile.pages import PagePool
+from repro.compile.persist import (PersistentProgramCache, backend_platform,
+                                   default_persist, jax_build,
+                                   program_avals, program_fingerprint)
 from repro.learners import as_batched, get_batched_learner
 from repro.runtime import bounded_put
 
@@ -73,12 +77,20 @@ class CompileStats:
 
     ``launches`` counts device dispatches; ``blocks`` counts the
     canonical blocks they carried — ``blocks > launches`` is same-shape
-    fusion at work (``fused_launches`` of them carried 2+ blocks)."""
+    fusion at work (``fused_launches`` of them carried 2+ launch
+    blocks).  ``coalesced_blocks`` counts canonical tail blocks that
+    rode a *combined* launch block (cross-shape coalescing);
+    ``disk_hits``/``disk_misses`` track the persistent program cache —
+    a disk hit deserializes an executable instead of compiling, so it
+    does NOT count as a compile (``misses``)."""
     hits: int = 0
     misses: int = 0
+    disk_hits: int = 0
+    disk_misses: int = 0
     launches: int = 0
     blocks: int = 0
     fused_launches: int = 0
+    coalesced_blocks: int = 0
     padding: PaddingStats = field(default_factory=PaddingStats)
 
     @property
@@ -90,11 +102,16 @@ class CompileStats:
         return {"programs_compiled": self.misses,
                 "cache_hits": self.hits,
                 "cache_hit_rate": self.hit_rate,
+                "disk_hits": self.disk_hits,
+                "disk_misses": self.disk_misses,
                 "launches": self.launches,
                 "blocks": self.blocks,
                 "fused_launches": self.fused_launches,
+                "coalesced_blocks": self.coalesced_blocks,
                 "padding_waste_frac": self.padding.waste_frac,
                 "padding_waste_b_frac": self.padding.b_waste_frac,
+                "padding_waste_b_morphed_frac":
+                    self.padding.b_waste_frac_morphed,
                 "padding_waste_n_frac": self.padding.n_waste_frac,
                 "padding_waste_p_frac": self.padding.p_waste_frac,
                 "tasks": self.padding.tasks,
@@ -115,12 +132,53 @@ class ProgramCache:
     Keys are ``(BucketKey, B_pad, D_pad)`` — pure value identity, so two
     requests built from equal plans share programs, and a session's
     repeat traffic never re-traces.
+
+    When a ``PersistentProgramCache`` is attached (default: the
+    environment-configured one, see ``persist.ENV_CACHE_DIR``), an
+    in-memory miss consults the disk before tracing: spec-identified,
+    unpartitioned programs are AOT-compiled against their exact avals,
+    serialized to disk on first compile, and deserialized (~14x cheaper
+    than compiling here) by later processes — a disk-warm cold drain
+    compiles zero programs.
+
+    Donation: the megabatch output ``(…, B, N_pad) f32`` is shape- and
+    dtype-identical to the ``y`` operand, so ``y`` (argnum 2) is donated
+    and XLA writes the predictions in place.  The page stack is NEVER
+    donated — the device-resident ``PagePool`` retains and reuses those
+    buffers across launches.
     """
 
-    def __init__(self, partition: Optional[Callable] = None):
+    def __init__(self, partition: Optional[Callable] = None,
+                 persist: object = "auto"):
         self._programs: Dict[Tuple, Callable] = {}
         self.partition = partition
+        self.persist: Optional[PersistentProgramCache] = \
+            default_persist() if persist == "auto" else persist
         self.stats = CompileStats()
+
+    def _disk(self, key: BucketKey):
+        """(persist, fingerprint-builder inputs) when this program may be
+        persisted: spec-identified learners only, never partitioned
+        programs (shard_map closes over mesh state the serialized
+        executable would not carry)."""
+        if self.persist is None or self.partition is not None:
+            return None
+        return self.persist
+
+    def _disk_lookup(self, fp):
+        prog = self.persist.lookup(jax_build(), backend_platform(), fp)
+        if prog is not None:
+            self.stats.disk_hits += 1
+        else:
+            self.stats.disk_misses += 1
+        return prog
+
+    def _compile_persistable(self, run, fp, key, b_pad, d_pad, g=None):
+        """AOT-compile at exact avals and serialize to disk."""
+        compiled = jax.jit(run, donate_argnums=(2,)).lower(
+            *program_avals(key, b_pad, d_pad, g)).compile()
+        self.persist.store(jax_build(), backend_platform(), fp, compiled)
+        return compiled
 
     # BucketKey pins the segment's (learner, params) and padded shapes,
     # which fully determine the batched fn the thunk builds — hence
@@ -136,6 +194,13 @@ class ProgramCache:
         if prog is not None:
             self.stats.hits += 1
             return prog
+        fp = program_fingerprint(key, b_pad, d_pad) \
+            if self._disk(key) is not None else None
+        if fp is not None:
+            prog = self._disk_lookup(fp)
+            if prog is not None:
+                self._programs[pkey] = prog
+                return prog
         self.stats.misses += 1
         batched_fn = fn_thunk()
 
@@ -145,8 +210,11 @@ class ProgramCache:
             return batched_fn(xb, y, w, valid, keys)
 
         if self.partition is not None:
-            run = self.partition(run)
-        prog = jax.jit(run)
+            prog = jax.jit(self.partition(run))
+        elif fp is not None:
+            prog = self._compile_persistable(run, fp, key, b_pad, d_pad)
+        else:
+            prog = jax.jit(run, donate_argnums=(2,))
         self._programs[pkey] = prog
         return prog
 
@@ -166,6 +234,13 @@ class ProgramCache:
         if prog is not None:
             self.stats.hits += 1
             return prog
+        fp = program_fingerprint(key, b_pad, d_pad, g) \
+            if self._disk(key) is not None else None
+        if fp is not None:
+            prog = self._disk_lookup(fp)
+            if prog is not None:
+                self._programs[pkey] = prog
+                return prog
         self.stats.misses += 1
         batched_fn = fn_thunk()
 
@@ -178,7 +253,11 @@ class ProgramCache:
             return jax.lax.map(lambda t: run_one(pages, *t),
                                (data_idx, y, w, valid, key_data))
 
-        prog = jax.jit(run_fused)
+        if fp is not None:
+            prog = self._compile_persistable(run_fused, fp, key, b_pad,
+                                             d_pad, g)
+        else:
+            prog = jax.jit(run_fused, donate_argnums=(2,))
         self._programs[pkey] = prog
         return prog
 
@@ -186,19 +265,37 @@ class ProgramCache:
 # A launch carries at most B_BLOCK task lanes.  The compiled B is part
 # of the determinism contract: per-lane floats are independent of lane
 # position and of the *other lanes' contents* (verified per family by
-# tests/test_compile.py::test_tail_launch_b_invariance), but they DO
-# depend on the compiled B itself (XLA reduction tiling — B=8 and B=16
-# programs differ by ~1e-6).  So a task's launch B must be a pure
-# function of its own request, never of what a scheduler happened to
-# hand over in one call: within each (request, segment), the segment's
-# flat tasks in ascending order split into **canonical blocks** of
-# B_BLOCK tasks, and a block always compiles at its canonical aligned
-# size — full blocks at B_BLOCK, the tail at its sublane-aligned count —
+# tests/test_compile.py::test_tail_launch_b_invariance).  Whether they
+# depend on the compiled B itself is a *per-family, per-platform*
+# property (XLA reduction tiling CAN retile across B): families listed
+# in MORPH_BITWISE_FAMILIES below are proven **compiled-B invariant** —
+# the same lane content launched at B=16 and B=32 is bitwise-equal —
+# by the parametrized morph gate in tests/test_compile.py and a
+# structural check in analysis/jaxpr_audit.py.  For those families a
+# task's launch B is a scheduling degree of freedom; for everything
+# else (opaque callables, unproven families) it must stay a pure
+# function of the task's own request.  Within each (request, segment),
+# the segment's flat tasks in ascending order split into **canonical
+# blocks** of B_BLOCK tasks, and a block's canonical size — full blocks
+# at B_BLOCK, the tail at its sublane-aligned count — is what launches
 # even when a capacity-limited wave executes only part of it (the
 # missing lanes ride as padding; lane-content independence makes the
 # result identical to the full-block launch).  Flat task ids are
 # scaling-level-invariant, so per-split and per-fold scaling also
 # compile identical launch shapes.
+#
+# **Cross-shape coalescing** (ISSUE 7 tentpole): for morph-proven
+# families the scheduler goes one step further — canonical *tail*
+# blocks (b_pad < B_BLOCK) from different requests pack
+# lane-contiguously into one combined launch block
+# (buckets.pack_tail_blocks), and when a bucket is still left with
+# mixed shapes under fusion, the smaller blocks morph UP to the largest
+# b_pad so the whole bucket rides one lax.map launch.  Packing is
+# deterministic (first-fit in block order) and bitwise-neutral by the
+# proven B-invariance + lane-content independence; families outside the
+# bitwise set may only morph via the explicit opt-in tolerance tier
+# (PoolConfig.morph_tolerance > 0 + MORPH_TOLERANCE_FAMILIES), which
+# the jaxpr auditor knows about.
 #
 # This replaces the PR-3 rule that padded *every* launch up to B_BLOCK:
 # constant-shape was sufficient for bitwise invariance but blew B-axis
@@ -216,6 +313,42 @@ class ProgramCache:
 # bitwise only on a 1-device mesh.
 B_BLOCK = 32
 
+# Families with a standing bitwise compiled-B invariance proof on this
+# backend: the same lane content produces bit-identical floats at any
+# aligned launch B.  Enforced empirically (per-family parametrized gate,
+# tests/test_compile.py) and structurally (analysis/jaxpr_audit.py
+# morph audit); the coalescing scheduler only morphs these.
+MORPH_BITWISE_FAMILIES = frozenset(
+    {"ols", "ridge", "lasso", "logistic", "kernel_ridge", "mlp"})
+
+# Opt-in tolerance tier: families whose morphed launches are only
+# float-tolerance-equal to canonical launches.  Morphing them requires
+# PoolConfig.morph_tolerance > 0 — an explicit user opt-out of bitwise
+# reproducibility, which the jaxpr auditor reports.  Empty today: every
+# registered family passes the bitwise gate on this backend.
+MORPH_TOLERANCE_FAMILIES = frozenset()
+
+
+def bucket_family(key: BucketKey) -> Optional[str]:
+    """Learner family name of a spec-identified bucket, else None."""
+    ident = key.learner
+    if isinstance(ident, tuple) and len(ident) == 2 \
+            and isinstance(ident[0], str) and ident[0] != "opaque":
+        return ident[0]
+    return None
+
+
+def morph_allowed(key: BucketKey, morph_tolerance: float = 0.0) -> bool:
+    """May this bucket's tail blocks be coalesced/morphed?  Bitwise
+    families always; tolerance-tier families only under an explicit
+    ``morph_tolerance`` opt-in; opaque callables never."""
+    fam = bucket_family(key)
+    if fam is None:
+        return False
+    if fam in MORPH_BITWISE_FAMILIES:
+        return True
+    return morph_tolerance > 0.0 and fam in MORPH_TOLERANCE_FAMILIES
+
 
 @dataclass
 class _Block:
@@ -230,12 +363,60 @@ class _Block:
     tpi: int                              # rows per invocation buffer
 
 
+@dataclass
+class _LaunchBlock:
+    """One launch-shaped unit: one canonical block at its canonical
+    shape (the common case), several tail blocks packed
+    lane-contiguously (cross-shape coalescing), or a block morphed up
+    to a neighbor's B.  ``offsets[i]`` is the first lane of
+    ``parts[i]`` inside the combined (b_pad,) batch axis."""
+    parts: List[_Block]
+    offsets: List[int]
+    b_pad: int
+    k: int                                # total real lanes
+
+
+def _coalesce(blocks: List[_Block], b_block: int, b_align: int,
+              morph: bool, fuse: bool) -> List[_LaunchBlock]:
+    """Lower canonical blocks to launch blocks.
+
+    Without morphing this is the identity wrapping (every block at its
+    own canonical shape).  With morphing: tails pack first-fit into
+    combined blocks at one uniform padded size T chosen to minimize
+    total padded lanes (buckets.pack_tail_blocks), then — if fusing
+    would still face mixed shapes (full blocks vs packed tails) —
+    remaining blocks morph up to the largest b_pad so the bucket fuses
+    into a single lax.map launch.
+    """
+    out = [_LaunchBlock([b], [0], b.b_pad, b.k)
+           for b in blocks if b.b_pad >= b_block]
+    tails = [b for b in blocks if b.b_pad < b_block]
+    if not morph or len(tails) <= 1:
+        out += [_LaunchBlock([b], [0], b.b_pad, b.k) for b in tails]
+    else:
+        groups, target = pack_tail_blocks([b.k for b in tails], b_block,
+                                          8, b_align)
+        for idxs in groups:
+            parts = [tails[i] for i in idxs]
+            offs, tot = [], 0
+            for p in parts:
+                offs.append(tot)
+                tot += p.k
+            out.append(_LaunchBlock(parts, offs, target, tot))
+    if morph and fuse and len(out) > 1:
+        target = max(lb.b_pad for lb in out)
+        out = [lb if lb.b_pad == target else
+               _LaunchBlock(lb.parts, lb.offsets, target, lb.k)
+               for lb in out]
+    return out
+
+
 @dataclass(eq=False)            # identity equality: comparing in-flight
 class Launch:                   # jax arrays elementwise would raise
     """One device dispatch: ``out`` is the raw in-flight ``jax.Array``
-    ((B, N_pad) single-block, (G, B, N_pad) fused)."""
+    ((B, N_pad) single launch block, (G, B, N_pad) fused)."""
     out: object
-    blocks: List[_Block]
+    blocks: List[_LaunchBlock]
     fused: bool
 
     def is_ready(self) -> bool:
@@ -273,13 +454,14 @@ class BucketDispatch:
         for launch in self.launches:
             out = np.asarray(jax.block_until_ready(launch.out), np.float32)
             outs = out if launch.fused else out[None]
-            for g, blk in enumerate(launch.blocks):
-                for lane, (_, inv, row) in enumerate(blk.members):
-                    buf = results.get((blk.ri, inv))
-                    if buf is None:
-                        buf = results[(blk.ri, inv)] = \
-                            np.empty((blk.tpi, blk.n), np.float32)
-                    buf[row] = outs[g, lane, :blk.n]
+            for g, lb in enumerate(launch.blocks):
+                for blk, ofs in zip(lb.parts, lb.offsets):
+                    for lane, (_, inv, row) in enumerate(blk.members):
+                        buf = results.get((blk.ri, inv))
+                        if buf is None:
+                            buf = results[(blk.ri, inv)] = \
+                                np.empty((blk.tpi, blk.n), np.float32)
+                        buf[row] = outs[g, ofs + lane, :blk.n]
         return results
 
 
@@ -439,112 +621,197 @@ class _PaddingAcc:
         for f in self.__slots__:
             setattr(self, f, 0)
 
-    def book(self, key: BucketKey, blk: _Block, exact_shapes: bool):
+    def book_part(self, key: BucketKey, blk: _Block, exact_shapes: bool):
+        """Per-canonical-block terms: true work and N/P-axis lanes."""
         # opaque exact-shape buckets never padded N under either rule
         n_pow2 = blk.n if exact_shapes else pow2_bucket(blk.n, 8)
         self.true_cells += blk.k * blk.n
-        self.padded_cells += blk.b_pad * key.n_pad
         self.tasks += blk.k
-        self.padded_tasks += blk.b_pad
         self.lane_cells += blk.k * key.n_pad
         self.lane_cells_pow2 += blk.k * n_pow2
         self.true_feats += blk.k * blk.p
         self.padded_feats += blk.k * key.p_pad
 
-    def stats(self, padded_tasks_pow2: int) -> PaddingStats:
+    def book_launch(self, key: BucketKey, lb: _LaunchBlock):
+        """Per-launch-block terms: what the device actually burned —
+        a coalesced launch block bills its combined b_pad ONCE."""
+        self.padded_cells += lb.b_pad * key.n_pad
+        self.padded_tasks += lb.b_pad
+
+    def stats(self, padded_tasks_pow2: int,
+              padded_tasks_morphed: int) -> PaddingStats:
         return PaddingStats(
             true_cells=self.true_cells, padded_cells=self.padded_cells,
             tasks=self.tasks, padded_tasks=self.padded_tasks,
             padded_tasks_pow2=padded_tasks_pow2,
+            padded_tasks_morphed=padded_tasks_morphed,
             lane_cells=self.lane_cells,
             lane_cells_pow2=self.lane_cells_pow2,
             true_feats=self.true_feats, padded_feats=self.padded_feats)
+
+
+def _page_key_of(plan: MegabatchPlan, pages: Optional[PagePool],
+                 blk: _Block, n_pad: int, p_pad: int):
+    """Identity of a block's feature page: the PagePool content key when
+    pooled, the request index on the host-stacked path."""
+    if pages is not None:
+        return PagePool.page_key(plan.requests[blk.ri], n_pad, p_pad)
+    return blk.ri
+
+
+def _launch_pages(plan: MegabatchPlan, pages: Optional[PagePool],
+                  key: BucketKey, lbs: List[_LaunchBlock],
+                  n_pad: int, p_pad: int):
+    """Union page stack + page-key -> lane map across launch blocks."""
+    lane_of: Dict[object, int] = {}
+    needs = []
+    for lb in lbs:
+        for blk in lb.parts:
+            pk = _page_key_of(plan, pages, blk, n_pad, p_pad)
+            if pk not in lane_of:
+                lane_of[pk] = len(lane_of)
+                needs.append((pk, plan.requests[blk.ri]))
+    if pages is not None:
+        pages_arr = pages.stack(needs, n_pad, p_pad)
+    else:
+        stack = [plan.page(ri, key) for ri, _ in needs]
+        d_pad = pow2_bucket(len(stack), 1)
+        stack += [np.zeros((n_pad, p_pad), np.float32)] \
+            * (d_pad - len(stack))
+        pages_arr = np.stack(stack)
+    return pages_arr, lane_of
+
+
+def _launch_tensors(plan: MegabatchPlan, lb: _LaunchBlock, n_pad: int):
+    """One launch block's (y, w, valid, kd) at its launch shape.
+
+    Single canonical blocks at their own shape come straight from the
+    content-keyed tensor cache (zero copy); packed or morphed launch
+    blocks assemble their combined batch axis from the parts' cached
+    tensors (padding lanes stay zero with valid=0)."""
+    if len(lb.parts) == 1 and lb.b_pad == lb.parts[0].b_pad:
+        blk = lb.parts[0]
+        return _block_tensors(plan.requests[blk.ri], blk.si, blk, n_pad)
+    y = np.zeros((lb.b_pad, n_pad), np.float32)
+    w = np.zeros((lb.b_pad, n_pad), np.float32)
+    valid = np.zeros((lb.b_pad, n_pad), np.float32)
+    kd = None
+    for blk, ofs in zip(lb.parts, lb.offsets):
+        py, pw, pv, pkd = _block_tensors(plan.requests[blk.ri], blk.si,
+                                         blk, n_pad)
+        if kd is None:
+            kd = np.zeros((lb.b_pad,) + pkd.shape[1:], pkd.dtype)
+        k = blk.k
+        y[ofs:ofs + k] = py[:k]
+        w[ofs:ofs + k] = pw[:k]
+        valid[ofs:ofs + k] = pv[:k]
+        kd[ofs:ofs + k] = pkd[:k]
+    return y, w, valid, kd
+
+
+def _launch_didx(plan: MegabatchPlan, pages: Optional[PagePool],
+                 lb: _LaunchBlock, lane_of: Dict[object, int],
+                 n_pad: int, p_pad: int) -> np.ndarray:
+    """Per-lane page index for one launch block.  Padding lanes point at
+    page 0 — their gather is masked by valid=0, and a fixed index keeps
+    the launch deterministic."""
+    didx = np.zeros((lb.b_pad,), np.int32)
+    for blk, ofs in zip(lb.parts, lb.offsets):
+        didx[ofs:ofs + blk.k] = \
+            lane_of[_page_key_of(plan, pages, blk, n_pad, p_pad)]
+    return didx
 
 
 def dispatch_bucket(plan: MegabatchPlan, cache: ProgramCache,
                     key: BucketKey, entries: Sequence[Entry], *,
                     b_align: int = 1, pages: Optional[PagePool] = None,
                     b_block: int = B_BLOCK, fuse: bool = True,
+                    coalesce: bool = True, morph_tolerance: float = 0.0,
                     ) -> BucketDispatch:
     """Launch one bucket slice WITHOUT waiting for the device.
 
-    Groups the entries' tasks into canonical launch blocks, packs
-    equal-``b_pad`` blocks into fused launches (a leading block axis
-    over one union page stack; per-block launches when ``fuse`` is off,
-    the block is unique at its shape, or the cache is partitioned), and
-    dispatches each program.  Returns the in-flight ``BucketDispatch``;
-    call ``.harvest()`` (or go through ``run_bucket``) for the results.
+    Groups the entries' tasks into canonical launch blocks; for
+    morph-proven families (``coalesce``, see MORPH_BITWISE_FAMILIES)
+    tail blocks pack cross-request into combined launch blocks and
+    residual mixed shapes morph up so the bucket fuses into one
+    ``lax.map`` launch.  Equal-``b_pad`` launch blocks pack into fused
+    launches (a leading block axis over one union page stack; per-block
+    launches when ``fuse`` is off, the block is unique at its shape, or
+    the cache is partitioned).  Returns the in-flight
+    ``BucketDispatch``; call ``.harvest()`` (or go through
+    ``run_bucket``) for the results.
     """
     requests = plan.requests
     n_pad, p_pad = key.n_pad, key.p_pad
     blocks = _plan_blocks(plan, key, entries, b_block, b_align)
     fuse = fuse and cache.partition is None
+    can_morph = morph_allowed(key, morph_tolerance)
+    morph = coalesce and can_morph
+    lblocks = _coalesce(blocks, b_block, b_align, morph, fuse)
+    # the morphed-B comparator: what the coalescing scheduler burns (or
+    # would burn, when coalesce is off) on this slice's B axis
+    morphed_tasks = sum(lb.b_pad for lb in lblocks) if morph == can_morph \
+        else sum(lb.b_pad for lb in
+                 _coalesce(blocks, b_block, b_align, can_morph, fuse))
 
-    by_shape: Dict[int, List[_Block]] = {}
-    for blk in blocks:
-        by_shape.setdefault(blk.b_pad, []).append(blk)
+    by_shape: Dict[int, List[_LaunchBlock]] = {}
+    for lb in lblocks:
+        by_shape.setdefault(lb.b_pad, []).append(lb)
 
     pad_acc = _PaddingAcc()
     launches: List[Launch] = []
     for b_pad, group in by_shape.items():
-        seg = requests[group[0].ri].segments[group[0].si]
+        lead = group[0].parts[0]
+        seg = requests[lead.ri].segments[lead.si]
         if not fuse or len(group) == 1:
-            for blk in group:
-                req = requests[blk.ri]
-                if pages is not None:
-                    pages_arr = pages.stack(
-                        [(pages.page_key(req, n_pad, p_pad), req)],
-                        n_pad, p_pad)
-                else:
-                    pages_arr = plan.page(blk.ri, key)[None]
-                y, w, valid, kd = _block_tensors(req, blk.si, blk, n_pad)
-                didx = np.zeros((b_pad,), np.int32)
-                blk_seg = req.segments[blk.si]
+            for lb in group:
+                pages_arr, lane_of = _launch_pages(plan, pages, key, [lb],
+                                                   n_pad, p_pad)
+                y, w, valid, kd = _launch_tensors(plan, lb, n_pad)
+                didx = _launch_didx(plan, pages, lb, lane_of, n_pad, p_pad)
+                blk_seg = requests[lb.parts[0].ri].segments[lb.parts[0].si]
                 prog = cache.program(
                     key, b_pad, int(pages_arr.shape[0]),
                     lambda: segment_batched_fn(blk_seg))
                 out = prog(pages_arr, didx, y, w, valid, kd)
-                launches.append(Launch(out=out, blocks=[blk], fused=False))
+                launches.append(Launch(out=out, blocks=[lb], fused=False))
                 cache.stats.launches += 1
-                cache.stats.blocks += 1
-                pad_acc.book(key, blk, blk_seg.learner is None)
+                cache.stats.blocks += len(lb.parts)
+                if len(lb.parts) > 1:
+                    # a coalesced multi-part launch IS a fused launch:
+                    # 2+ canonical blocks went up in one dispatch
+                    cache.stats.coalesced_blocks += len(lb.parts)
+                    cache.stats.fused_launches += 1
+                for blk in lb.parts:
+                    pad_acc.book_part(
+                        key, blk,
+                        requests[blk.ri].segments[blk.si].learner is None)
+                pad_acc.book_launch(key, lb)
             continue
 
-        # ---- fused launch: G same-shape blocks, one union page stack ----
-        lane_of: Dict[object, int] = {}
-        needs = []
-        for blk in group:
-            req = requests[blk.ri]
-            pk = PagePool.page_key(req, n_pad, p_pad) if pages is not None \
-                else blk.ri
-            if pk not in lane_of:
-                lane_of[pk] = len(lane_of)
-                needs.append((pk, req))
-        if pages is not None:
-            pages_arr = pages.stack(needs, n_pad, p_pad)
-        else:
-            stack = [plan.page(ri, key) for ri, _ in needs]
-            d_pad = pow2_bucket(len(stack), 1)
-            stack += [np.zeros((n_pad, p_pad), np.float32)] \
-                * (d_pad - len(stack))
-            pages_arr = np.stack(stack)
+        # ---- fused launch: G same-shape launch blocks, one union stack
+        pages_arr, lane_of = _launch_pages(plan, pages, key, group,
+                                           n_pad, p_pad)
         g = len(group)
         ys = np.empty((g, b_pad, n_pad), np.float32)
         ws = np.empty((g, b_pad, n_pad), np.float32)
         valids = np.empty((g, b_pad, n_pad), np.float32)
         didx = np.empty((g, b_pad), np.int32)
         kds = None
-        for gi, blk in enumerate(group):
-            req = requests[blk.ri]
-            pk = PagePool.page_key(req, n_pad, p_pad) if pages is not None \
-                else blk.ri
-            y, w, valid, kd = _block_tensors(req, blk.si, blk, n_pad)
+        for gi, lb in enumerate(group):
+            y, w, valid, kd = _launch_tensors(plan, lb, n_pad)
             if kds is None:
                 kds = np.empty((g,) + kd.shape, kd.dtype)
             ys[gi], ws[gi], valids[gi], kds[gi] = y, w, valid, kd
-            didx[gi] = lane_of[pk]
-            cache.stats.blocks += 1
-            pad_acc.book(key, blk, seg.learner is None)
+            didx[gi] = _launch_didx(plan, pages, lb, lane_of, n_pad, p_pad)
+            cache.stats.blocks += len(lb.parts)
+            if len(lb.parts) > 1:
+                cache.stats.coalesced_blocks += len(lb.parts)
+            for blk in lb.parts:
+                pad_acc.book_part(
+                    key, blk,
+                    requests[blk.ri].segments[blk.si].learner is None)
+            pad_acc.book_launch(key, lb)
         prog = cache.fused_program(key, b_pad, int(pages_arr.shape[0]), g,
                                    lambda: segment_batched_fn(seg))
         out = prog(pages_arr, didx, ys, ws, valids, kds)
@@ -554,9 +821,10 @@ def dispatch_bucket(plan: MegabatchPlan, cache: ProgramCache,
 
     total_tasks = sum(blk.k for blk in blocks)
     # one merge per dispatch; padded_tasks_pow2 records what the old rule
-    # (one pow2 launch per bucket slice) would have cost
+    # (one pow2 launch per bucket slice) would have cost, and
+    # padded_tasks_morphed what the coalescing scheduler costs
     cache.stats.padding = cache.stats.padding.merge(
-        pad_acc.stats(pow2_bucket(total_tasks, 8)))
+        pad_acc.stats(pow2_bucket(total_tasks, 8), morphed_tasks))
     return BucketDispatch(key=key, launches=launches,
                           entries=list(entries), n_tasks=total_tasks)
 
@@ -564,7 +832,8 @@ def dispatch_bucket(plan: MegabatchPlan, cache: ProgramCache,
 def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
                entries: Sequence[Entry], *, b_align: int = 1,
                pages: Optional[PagePool] = None, b_block: int = B_BLOCK,
-               fuse: bool = True,
+               fuse: bool = True, coalesce: bool = True,
+               morph_tolerance: float = 0.0,
                ) -> Tuple[Dict[Entry, np.ndarray], float]:
     """Synchronous wrapper: dispatch one bucket slice and block for its
     results.  Returns ({(req_idx, inv): preds (tpi, n_obs)}, wall_s).
@@ -576,6 +845,7 @@ def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
     """
     t0 = time.perf_counter()
     bd = dispatch_bucket(plan, cache, key, entries, b_align=b_align,
-                         pages=pages, b_block=b_block, fuse=fuse)
+                         pages=pages, b_block=b_block, fuse=fuse,
+                         coalesce=coalesce, morph_tolerance=morph_tolerance)
     results = bd.harvest()
     return results, time.perf_counter() - t0

@@ -166,21 +166,30 @@ class PaddingStats:
     tasks: int = 0
     padded_tasks: int = 0
     padded_tasks_pow2: int = 0          # what pow2 B-bucketing would have cost
+    # what the cross-shape coalescing scheduler costs on the B axis
+    # (ISSUE 7): equals padded_tasks when coalescing is on, the packed
+    # counterfactual when it is off — benches report both so the
+    # coalescing win is visible per-axis
+    padded_tasks_morphed: int = 0
     lane_cells: int = 0                 # sum over launches of tasks * N_pad
     lane_cells_pow2: int = 0            # what pow2 N-bucketing would have cost
     true_feats: int = 0                 # sum over tasks of their true P
     padded_feats: int = 0               # sum over tasks of P_pad
 
     def merge(self, other: "PaddingStats") -> "PaddingStats":
-        return PaddingStats(self.true_cells + other.true_cells,
-                            self.padded_cells + other.padded_cells,
-                            self.tasks + other.tasks,
-                            self.padded_tasks + other.padded_tasks,
-                            self.padded_tasks_pow2 + other.padded_tasks_pow2,
-                            self.lane_cells + other.lane_cells,
-                            self.lane_cells_pow2 + other.lane_cells_pow2,
-                            self.true_feats + other.true_feats,
-                            self.padded_feats + other.padded_feats)
+        return PaddingStats(
+            true_cells=self.true_cells + other.true_cells,
+            padded_cells=self.padded_cells + other.padded_cells,
+            tasks=self.tasks + other.tasks,
+            padded_tasks=self.padded_tasks + other.padded_tasks,
+            padded_tasks_pow2=self.padded_tasks_pow2
+            + other.padded_tasks_pow2,
+            padded_tasks_morphed=self.padded_tasks_morphed
+            + other.padded_tasks_morphed,
+            lane_cells=self.lane_cells + other.lane_cells,
+            lane_cells_pow2=self.lane_cells_pow2 + other.lane_cells_pow2,
+            true_feats=self.true_feats + other.true_feats,
+            padded_feats=self.padded_feats + other.padded_feats)
 
     @property
     def waste_frac(self) -> float:
@@ -203,6 +212,14 @@ class PaddingStats:
         if not self.padded_tasks_pow2:
             return 0.0
         return 1.0 - self.tasks / self.padded_tasks_pow2
+
+    @property
+    def b_waste_frac_morphed(self) -> float:
+        """The B-axis waste under the cross-shape coalescing scheduler
+        (actual when coalescing is on, counterfactual when off)."""
+        if not self.padded_tasks_morphed:
+            return 0.0
+        return 1.0 - self.tasks / self.padded_tasks_morphed
 
     @property
     def n_waste_frac(self) -> float:

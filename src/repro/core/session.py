@@ -258,6 +258,13 @@ class DMLSession:
 
     def __init__(self, backend: Union[str, ExecutionBackend] = "wave",
                  pool: Optional[PoolConfig] = None):
+        # calibrate roofline launch-overhead pricing on THIS runtime
+        # (memoized no-op dispatch probe; constant fallback on failure)
+        try:
+            from repro.launch.roofline import measure_launch_overhead_s
+            measure_launch_overhead_s()
+        except Exception:
+            pass
         self.backend = make_backend(backend, pool)
         self._queue: List[_Pending] = []
         self._results: Dict[int, DMLResult] = {}

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -231,8 +231,54 @@ def megabatch_task_bytes(n: int, p: int) -> float:
 # enqueue), measured ~0.3 ms on the serving hosts.  It dwarfs the
 # compute/memory terms for small buckets — which is exactly why the
 # dispatcher packs same-shape blocks into one fused launch: the overhead
-# is paid once per launch, not once per block.
+# is paid once per launch, not once per block.  This constant is the
+# FALLBACK; ``measure_launch_overhead_s`` replaces it with a per-session
+# measurement on the actual runtime (session init calls it once).
 LAUNCH_OVERHEAD_S = 3e-4
+
+# session-measured override; None until measure_launch_overhead_s runs
+_MEASURED_LAUNCH_OVERHEAD_S: Optional[float] = None
+
+
+def launch_overhead_s() -> float:
+    """Host dispatch cost of one compiled-program launch: the session
+    measurement when one has been taken, else the hardcoded fallback."""
+    if _MEASURED_LAUNCH_OVERHEAD_S is not None:
+        return _MEASURED_LAUNCH_OVERHEAD_S
+    return LAUNCH_OVERHEAD_S
+
+
+def measure_launch_overhead_s(repeats: int = 30) -> float:
+    """Measure the per-launch dispatch overhead with a timed no-op
+    program: compile a trivial jit once, then time warm re-dispatches
+    and take the median.  Memoized module-globally — sessions call this
+    at init so autoscaler pricing uses the runtime actually underneath
+    us instead of the serving-host constant.  Clamped to a sane band
+    (10 us .. 10 ms); any failure falls back to ``LAUNCH_OVERHEAD_S``.
+    """
+    global _MEASURED_LAUNCH_OVERHEAD_S
+    if _MEASURED_LAUNCH_OVERHEAD_S is not None:
+        return _MEASURED_LAUNCH_OVERHEAD_S
+    try:
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        noop = jax.jit(lambda x: x + 1.0)
+        x = jnp.zeros((8,), jnp.float32)
+        noop(x).block_until_ready()            # compile outside the timer
+        samples = []
+        for _ in range(max(int(repeats), 3)):
+            t0 = time.perf_counter()
+            noop(x).block_until_ready()
+            samples.append(time.perf_counter() - t0)
+        samples.sort()
+        measured = samples[len(samples) // 2]
+        _MEASURED_LAUNCH_OVERHEAD_S = min(max(measured, 1e-5), 1e-2)
+    except Exception:
+        _MEASURED_LAUNCH_OVERHEAD_S = LAUNCH_OVERHEAD_S
+    return _MEASURED_LAUNCH_OVERHEAD_S
 
 
 def invocation_roofline_s(learner: str, params, tasks_per_invocation: int,
@@ -251,7 +297,7 @@ def invocation_roofline_s(learner: str, params, tasks_per_invocation: int,
     flops = t * megabatch_task_flops(learner, n_pad, p_pad, params)
     byts = t * megabatch_task_bytes(n_pad, p_pad)
     return max(flops / PEAK_FLOPS, byts / HBM_BW) \
-        + amortized_launches * LAUNCH_OVERHEAD_S
+        + amortized_launches * launch_overhead_s()
 
 
 @dataclass

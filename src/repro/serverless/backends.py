@@ -180,6 +180,19 @@ class PoolConfig:
     # non-blocking dispatch: buckets a drain stream may hold in flight
     # before a push force-harvests the oldest (device-liveness bound)
     max_inflight: int = 8
+    # cross-shape coalescing (compile/program.py, ISSUE 7): pack/morph
+    # tail blocks of morph-proven families into combined launches.
+    # Bitwise families coalesce whenever this is on; families in the
+    # tolerance tier additionally need morph_tolerance > 0 — an explicit
+    # opt-out of bitwise reproducibility the jaxpr auditor reports
+    coalesce: bool = True
+    morph_tolerance: float = 0.0
+    # double-buffered dispatch (ISSUE 7): waves a fault-free drain may
+    # hold unsettled while filling/stacking the next one (wave k+1's
+    # host work overlaps wave k's device execution).  Chaos pools
+    # (simulate/failure/straggler) always run wave-synchronous so fault
+    # RNG draw order is preserved
+    pipeline_depth: int = 2
 
     def lanes_per_worker(self) -> int:
         """Worker 'memory' buys lane width (DESIGN.md §2 mapping)."""
@@ -454,6 +467,10 @@ class DrainState:
     seen_buckets: set = field(default_factory=set)
     finalized: set = field(default_factory=set)
     queue: Optional[DispatchQueue] = None    # in-flight buckets (one stream)
+    # pipelined waves dispatched but not yet settled (WaveBackend): each
+    # settles — books ledgers, bills, finalizes — when its last bucket
+    # lands; the sanitizer requires this empty at drain retirement
+    waves_inflight: List = field(default_factory=list)
 
     @property
     def requests(self) -> List[WorkRequest]:
@@ -485,7 +502,8 @@ def roofline_pending_inv_s(requests, groups) -> Optional[float]:
                 key.n_pad, key.p_pad,
                 # the whole bucket typically rides one fused launch, so
                 # each invocation carries an amortized share of its
-                # dispatch overhead (launch/roofline.LAUNCH_OVERHEAD_S)
+                # dispatch overhead (launch/roofline.launch_overhead_s —
+                # session-measured, constant fallback)
                 amortized_launches=1.0 / len(entries))
             n += 1
     return total / n if n else None
@@ -518,6 +536,13 @@ class _StreamBackend:
         """Same-shape block fusion is off for partitioned (shard_map)
         program caches — the specs map a single block's operands."""
         return self.pool.fuse and self.compiler.partition is None
+
+    def _dispatch_opts(self) -> Dict:
+        """The launch-scheduling knobs every dispatch_bucket call takes:
+        fusion plus the cross-shape coalescing pair (coalesce gates the
+        scheduler, morph_tolerance opts tolerance-tier families in)."""
+        return {"fuse": self._fuse(), "coalesce": self.pool.coalesce,
+                "morph_tolerance": self.pool.morph_tolerance}
 
     def admit(self, state: DrainState, req: WorkRequest) -> int:
         """Lower one request into the live plan; its fault stream is keyed
@@ -642,7 +667,8 @@ class _BucketStreamBackend(_StreamBackend):
             state.requests[ri].ledger.mark_running(invs)
         bd = _compile().dispatch_bucket(
             state.plan, self.compiler, bkey, entries,
-            b_align=self._b_align(), pages=self.pages, fuse=self._fuse())
+            b_align=self._b_align(), pages=self.pages,
+            **self._dispatch_opts())
         q.push(PendingBucket(dispatch=bd), book)
         state.seen_buckets.add(bkey)
         state.info.buckets = len(state.seen_buckets)
@@ -730,6 +756,24 @@ class _Entry:
     speculative: bool = False
 
 
+@dataclass(eq=False)            # identity equality: removed by list.remove
+class _WaveLatch:
+    """One pipelined wave awaiting settlement (ISSUE 7 double-buffered
+    dispatch).
+
+    A fault-free wave no longer barriers at the end of its step — its
+    buckets stay in flight while the next wave is filled and stacked.
+    The latch accumulates the wave's results and frontier-attributed
+    wall shares as each bucket's booking continuation fires, and the
+    wave **settles** (ledgers booked, bills recorded, requests
+    finalized, checkpoint written) the moment its last bucket lands.
+    """
+    dispatch: List[_Entry]
+    outstanding: int                    # buckets still in flight
+    results: Dict = field(default_factory=dict)
+    wall_of_req: Dict = field(default_factory=dict)
+
+
 class WaveBackend(_StreamBackend):
     """The paper's wave scheduler (§4) generalized to a request stream.
 
@@ -788,18 +832,57 @@ class WaveBackend(_StreamBackend):
                 tasks_per_invocation=max(1, tasks // max(depth, 1)),
                 padding_waste=self.compiler.stats.padding.waste_frac,
                 in_flight=state.queue.in_flight if state.queue else 0,
+                # pipelined waves can leave the queue non-empty here, so
+                # the pricing view excludes in-flight entries — they are
+                # occupancy, not dispatchable depth
                 roofline_inv_s=lambda: roofline_pending_inv_s(
-                    state.requests, state.plan.pending_by_bucket()))
+                    state.requests, state.plan.pending_by_bucket(
+                        exclude=state.queue.in_flight_entries()
+                        if state.queue else None)))
             state.info.autoscale.append(decision)
             return decision.n_workers
         return pool.n_workers
 
+    def _chaos(self) -> bool:
+        """Does this pool inject faults/stragglers or model durations?
+        Chaos pools run wave-synchronous (the legacy barrier) so the
+        per-slot Philox draw order — and with it every fault pattern —
+        is identical to the pre-pipelined scheduler."""
+        pool = self.pool
+        return pool.simulate or pool.straggler_rate > 0 \
+            or pool.failure_rate > 0
+
     def step(self, state: DrainState) -> bool:
-        """Dispatch and book one wave; False once nothing is pending."""
+        """Dispatch one wave — and, fault-free, pipeline it: the wave's
+        buckets stay in flight while the next step fills and stacks
+        wave k+1, up to ``pool.pipeline_depth`` unsettled waves.  Books
+        via per-wave latches (book-at-push); False once nothing is
+        pending and the pipeline has drained."""
         pool = self.pool
         requests = state.requests
-        pendings = [req.ledger.pending() for req in requests]
+        q = state.queue
+        pipelined = not self._chaos()
+        if pipelined:
+            # opportunistic booking: settle any wave whose buckets all
+            # landed while the host was filling the previous wave
+            q.harvest_ready()
+            # ledger.pending() includes RUNNING rows, so the wave fill
+            # must exclude every entry still in flight: on the queue OR
+            # in an unsettled wave latch — a harvested bucket leaves the
+            # queue before its wave settles (and books), and re-dispatching
+            # its rows would double-book them
+            inflight = q.in_flight_entries()
+            for latch in state.waves_inflight:
+                inflight.update((e.req_idx, e.inv) for e in latch.dispatch)
+            pendings = [np.asarray([i for i in req.ledger.pending()
+                                    if (ri, int(i)) not in inflight],
+                                   np.int64)
+                        for ri, req in enumerate(requests)]
+        else:
+            pendings = [req.ledger.pending() for req in requests]
         if all(len(p) == 0 for p in pendings):
+            if pipelined and q.harvest_next():
+                return True         # drain the in-flight pipeline tail
             return False
         t0 = time.perf_counter()
         n_workers = self._wave_workers(state, pendings)
@@ -841,24 +924,51 @@ class WaveBackend(_StreamBackend):
             requests[ri].ledger.mark_running(invs)
         # dispatch every bucket of the wave without blocking — all of a
         # wave's launches execute concurrently on device while the host
-        # stacks the next bucket's tensors; harvest once at the end of
-        # the wave (fault booking needs the results in hand)
-        results: Dict[Tuple[int, int], np.ndarray] = {}
-        wall_of_req: Dict[int, float] = {}
+        # stacks the next bucket's tensors
+        groups = state.plan.group_entries(list(unique))
+        if pipelined:
+            # two-deep pipeline: the wave's buckets carry a latch that
+            # settles (books + bills) when its last bucket lands —
+            # possibly steps later, while wave k+1 is already filling
+            ctx = _WaveLatch(dispatch=dispatch, outstanding=len(groups))
+            state.waves_inflight.append(ctx)
 
-        def book(pb, res, elapsed):
-            results.update(res)
-            per = elapsed / max(len(pb.entries), 1)
-            for ri, _ in pb.entries:
-                wall_of_req[ri] = wall_of_req.get(ri, 0.0) + per
+            def book(pb, res, elapsed):
+                ctx.results.update(res)
+                per = elapsed / max(len(pb.entries), 1)
+                for ri, _ in pb.entries:
+                    ctx.wall_of_req[ri] = ctx.wall_of_req.get(ri, 0.0) + per
+                ctx.outstanding -= 1
+                if ctx.outstanding == 0:
+                    self._settle_wave(state, ctx)
+        else:
+            # legacy wave barrier: fault booking needs results in hand,
+            # in the exact per-wave order the fault RNG streams expect
+            results: Dict[Tuple[int, int], np.ndarray] = {}
+            wall_of_req: Dict[int, float] = {}
 
-        q = state.queue
-        for bkey, ents in state.plan.group_entries(list(unique)).items():
+            def book(pb, res, elapsed):
+                results.update(res)
+                per = elapsed / max(len(pb.entries), 1)
+                for ri, _ in pb.entries:
+                    wall_of_req[ri] = wall_of_req.get(ri, 0.0) + per
+
+        for bkey, ents in groups.items():
             state.seen_buckets.add(bkey)
             bd = _compile().dispatch_bucket(state.plan, self.compiler,
                                             bkey, ents, pages=self.pages,
-                                            fuse=self._fuse())
+                                            **self._dispatch_opts())
             q.push(PendingBucket(dispatch=bd), book)
+        state.wave += 1
+        state.info.buckets = len(state.seen_buckets)
+        state.info.waves = state.wave
+        if pipelined:
+            # bound the pipeline: block-harvest oldest buckets until at
+            # most pipeline_depth waves remain unsettled
+            depth = max(1, pool.pipeline_depth)
+            while len(state.waves_inflight) > depth and q.harvest_next():
+                pass
+            return True
         q.harvest_all(book)
         touched = []
         for ri, req in enumerate(requests):
@@ -869,9 +979,6 @@ class WaveBackend(_StreamBackend):
                                     lambda: self._slot_rng(state, ri), pool,
                                     wall_of_req.get(ri, 0.0))
             touched.append(ri)
-        state.wave += 1
-        state.info.buckets = len(state.seen_buckets)
-        state.info.waves = state.wave
         step_wall = time.perf_counter() - t0
         if self.autoscaler is not None and dispatch and not pool.simulate:
             self.autoscaler.observe(step_wall / len(dispatch))
@@ -884,6 +991,35 @@ class WaveBackend(_StreamBackend):
             self._finalize_request(state, ri)
         self._checkpoint(state)
         return True
+
+    def _settle_wave(self, state: DrainState, ctx: _WaveLatch):
+        """Book one pipelined wave the moment its last bucket lands:
+        ledgers, bills, per-request wall attribution, finalization,
+        checkpoint.  Wall time uses the queue's NON-overlapping
+        attribution frontier, so concurrent waves' billed spans sum to
+        the true elapsed wall instead of double-charging overlap."""
+        pool = self.pool
+        requests = state.requests
+        state.waves_inflight.remove(ctx)
+        touched = []
+        for ri, req in enumerate(requests):
+            entries = [e for e in ctx.dispatch if e.req_idx == ri]
+            if not entries:
+                continue
+            self._book_request_wave(req, ri, entries, ctx.results,
+                                    lambda: self._slot_rng(state, ri), pool,
+                                    ctx.wall_of_req.get(ri, 0.0))
+            touched.append(ri)
+        if self.autoscaler is not None and ctx.dispatch:
+            total = sum(ctx.wall_of_req.values())
+            if total > 0:
+                self.autoscaler.observe(total / len(ctx.dispatch))
+        for ri in touched:
+            wall = ctx.wall_of_req.get(ri, 0.0)
+            requests[ri].report.response_time_s += wall
+            requests[ri].report.fit_time_s += wall
+            self._finalize_request(state, ri)
+        self._checkpoint(state)
 
     # ------------------------------------------------------------------
     def _book_request_wave(self, req: WorkRequest, ri: int,

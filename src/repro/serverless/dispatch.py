@@ -83,10 +83,17 @@ class PendingBucket:
     the booking callback needs (which host stream launched it, when).
     An invocation's rows can straddle launches, so the *bucket* is the
     booking unit — ``ready()`` only when every launch has landed.
+
+    ``book`` is the **booking continuation**, attached at push
+    (book-at-push, ISSUE 7): under pipelined dispatch a bucket may land
+    several waves after it was pushed, so its booking context must ride
+    with the bucket instead of being supplied by whichever harvest call
+    happens to drain it.
     """
     dispatch: object                    # compile/program.py::BucketDispatch
     host: int = -1                      # host stream (-1: single-stream)
     t_dispatch: float = field(default_factory=time.perf_counter)
+    book: Optional["BookFn"] = None     # attached by DispatchQueue.push
 
     @property
     def key(self):
@@ -153,19 +160,25 @@ class DispatchQueue:
             self.stats.host_overlap_s += now - self._mark
         self._mark = now
 
-    def push(self, pb: PendingBucket, book: BookFn) -> None:
+    def push(self, pb: PendingBucket, book: Optional[BookFn] = None) -> None:
         """Enqueue one dispatched bucket; force-harvests the oldest
-        first when the in-flight bound is reached."""
+        first when the in-flight bound is reached.  ``book`` becomes the
+        bucket's booking continuation (book-at-push) unless the caller
+        already attached one to ``pb``."""
+        if book is not None:
+            pb.book = book
+        sanitize.check_book_at_push(pb)
         self._note_overlap()
         while len(self._pending) >= self.max_inflight:
-            self.harvest_next(book)
+            self.harvest_next()
         self._pending.append(pb)
         self.stats.dispatched += 1
         self.stats.in_flight_peak = max(self.stats.in_flight_peak,
                                         len(self._pending))
         self._mark = time.perf_counter()
 
-    def _harvest(self, pb: PendingBucket, book: BookFn, blocked: bool):
+    def _harvest(self, pb: PendingBucket, book: Optional[BookFn],
+                 blocked: bool):
         t0 = time.perf_counter()
         results = pb.dispatch.harvest()
         t1 = time.perf_counter()
@@ -184,9 +197,10 @@ class DispatchQueue:
         sanitize.check_attribution(t1, self._t_attr)
         elapsed = t1 - max(pb.t_dispatch, self._t_attr)
         self._t_attr = t1
-        book(pb, results, max(elapsed, 0.0))
+        fn = pb.book if pb.book is not None else book
+        fn(pb, results, max(elapsed, 0.0))
 
-    def harvest_ready(self, book: BookFn) -> int:
+    def harvest_ready(self, book: Optional[BookFn] = None) -> int:
         """Book every bucket whose launches all report ready — the
         non-blocking poll the event loop runs each step.  Harvests in
         FIFO order but stops at the first not-ready bucket only for
@@ -200,7 +214,7 @@ class DispatchQueue:
             self.stats.ready_harvests += 1
         return len(done)
 
-    def harvest_next(self, book: BookFn) -> bool:
+    def harvest_next(self, book: Optional[BookFn] = None) -> bool:
         """Block for the oldest in-flight bucket (the drain has nothing
         left to dispatch); False if the queue is empty."""
         if not self._pending:
@@ -209,6 +223,6 @@ class DispatchQueue:
         self._harvest(self._pending.pop(0), book, blocked=True)
         return True
 
-    def harvest_all(self, book: BookFn) -> None:
+    def harvest_all(self, book: Optional[BookFn] = None) -> None:
         while self.harvest_next(book):
             pass

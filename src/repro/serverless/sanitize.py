@@ -12,8 +12,13 @@ the two cannot drift apart:
     backend's speculative path means a lost-race or double-harvest);
   * the duration-attribution frontier only moves forward (overlapping
     attribution double-charges GB-seconds and skews the autoscaler EMA);
-  * a drain never retires with buckets still in flight (a lost bucket
-    is work billed but never booked).
+  * every pushed bucket carries its booking continuation (book-at-push:
+    under pipelined dispatch a bucket may land waves after it was
+    pushed, so a missing continuation is work that would harvest into
+    the void);
+  * a drain never retires with buckets still in flight OR a pipelined
+    wave still unsettled (a lost bucket/wave is work billed but never
+    booked).
 
 Checks are no-ops unless the environment variable is set — it is read
 per call so a test can flip it with ``monkeypatch.setenv``.  CI runs the
@@ -84,9 +89,23 @@ def check_attribution(t_harvest: float, t_frontier: float) -> None:
             "would be billed overlapping wall-clock spans")
 
 
+def check_book_at_push(pb) -> None:
+    """Every bucket entering a dispatch queue must carry its booking
+    continuation (``PendingBucket.book``) — under pipelined dispatch the
+    harvest may happen waves later, with no caller left to supply one."""
+    if not enabled():
+        return
+    if pb.book is None:
+        raise ProtocolError(
+            f"bucket {pb.key} pushed without a booking continuation — "
+            "book-at-push is required: a deferred harvest has no caller "
+            "context to book against")
+
+
 def check_drained(state, where: str) -> None:
-    """A drain may only retire with every dispatch queue empty — an
-    in-flight bucket left behind is work billed but never booked."""
+    """A drain may only retire with every dispatch queue empty and every
+    pipelined wave settled — an in-flight bucket or unsettled wave left
+    behind is work billed but never booked."""
     if not enabled():
         return
     n = 0
@@ -100,3 +119,9 @@ def check_drained(state, where: str) -> None:
             f"{where}: drain retiring with {n} bucket(s) still in "
             "flight — every dispatched bucket must be harvested and "
             "booked before the state is dropped")
+    waves = getattr(state, "waves_inflight", None)
+    if waves:
+        raise ProtocolError(
+            f"{where}: drain retiring with {len(waves)} pipelined "
+            "wave(s) unsettled — every dispatched wave must settle "
+            "(book + bill) before the state is dropped")

@@ -355,7 +355,7 @@ class TopologyBackend(_StreamBackend):
                 state.requests[ri].ledger.mark_running(invs)
             bd = _compile().dispatch_bucket(
                 state.plan, self.compiler, key, ents, pages=host_pages,
-                fuse=self._fuse())
+                **self._dispatch_opts())
             q.push(PendingBucket(dispatch=bd, host=host_id), book)
             state.seen_buckets.add(key)
         lane.waves += 1

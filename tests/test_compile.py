@@ -319,8 +319,9 @@ def test_fused_multi_request_launch_bitwise_parity(name, params):
 
 
 def test_fusion_off_matches_fused_and_launch_counts():
-    """fuse=False falls back to one launch per canonical block with
-    identical results; fusion strictly reduces the launch count."""
+    """coalesce=False + fuse=False is the canonical baseline (one launch
+    per canonical block); fusion and cross-shape coalescing each
+    strictly reduce the launch count with bitwise-identical results."""
     from repro.compile import ProgramCache
     reqs = [compile_request(*_plr(100 + i, seed=i)) for i in range(3)]
     bplan = plan_buckets(reqs)
@@ -328,12 +329,74 @@ def test_fusion_off_matches_fused_and_launch_counts():
     entries = [(ri, int(i)) for ri, req in enumerate(reqs)
                for i in req.ledger.pending()]
     cache_f, cache_u = ProgramCache(), ProgramCache()
+    cache_b = ProgramCache()
     res_f, _ = run_bucket(bplan, cache_f, bkey, entries, fuse=True)
     res_u, _ = run_bucket(bplan, cache_u, bkey, entries, fuse=False)
-    assert cache_u.stats.launches == cache_u.stats.blocks
+    res_b, _ = run_bucket(bplan, cache_b, bkey, entries, fuse=False,
+                          coalesce=False)
+    # canonical baseline: one launch per canonical block, none coalesced
+    assert cache_b.stats.launches == cache_b.stats.blocks
+    assert cache_b.stats.coalesced_blocks == 0
+    # coalescing packs tail blocks even unfused; fusion cuts further
+    assert cache_u.stats.launches < cache_b.stats.launches
     assert cache_f.stats.launches < cache_u.stats.launches
     for e in entries:
         np.testing.assert_array_equal(res_f[e], res_u[e])
+        np.testing.assert_array_equal(res_f[e], res_b[e])
+
+
+@pytest.mark.parametrize("name,params", FUSION_FAMILIES)
+def test_morphed_tail_launch_bitwise_parity(name, params):
+    """The cross-shape coalescing contract (ISSUE 7): padding a tail
+    block up to a neighbor's canonical B and fusing across the formerly
+    different shapes yields BITWISE the per-block results — for every
+    family in MORPH_BITWISE_FAMILIES (all six; zero-padded lanes are
+    proven not to perturb real lanes on this platform).  Three 6-entry
+    requests force the interesting shape mix: two tails pack to a
+    16-lane launch block, the third rides an 8-lane block that must be
+    MORPHED up to 16 before the shapes can fuse."""
+    from repro.compile import ProgramCache
+    from repro.compile.program import MORPH_BITWISE_FAMILIES, bucket_family
+    cases = [_plr(97 + i, seed=20 + i, learner=name, learner_params=params)
+             for i in range(3)]                     # 6 entries/request
+    reqs = [compile_request(p, d) for p, d in cases]
+    bplan = plan_buckets(reqs)
+    (bkey,) = bplan.buckets
+    assert bucket_family(bkey) in MORPH_BITWISE_FAMILIES
+    entries = [(ri, int(i)) for ri, req in enumerate(reqs)
+               for i in req.ledger.pending()]
+
+    cache_m = ProgramCache()
+    res_m, _ = run_bucket(bplan, cache_m, bkey, entries,
+                          fuse=True, coalesce=True)
+    # the morph really happened: tails were packed into shared launches
+    assert cache_m.stats.coalesced_blocks >= 2
+    assert cache_m.stats.launches < cache_m.stats.blocks
+
+    reqs_b = [compile_request(p, d) for p, d in cases]
+    bplan_b = plan_buckets(reqs_b)
+    (bkey_b,) = bplan_b.buckets
+    res_b, _ = run_bucket(bplan_b, ProgramCache(), bkey_b, entries,
+                          fuse=False, coalesce=False)
+    for e in entries:
+        np.testing.assert_array_equal(res_m[e], res_b[e])
+
+
+def test_morph_tolerance_gate():
+    """A family outside MORPH_BITWISE_FAMILIES only morphs under an
+    explicit opt-in tolerance (PoolConfig.morph_tolerance > 0); the
+    default 0.0 keeps it on canonical shapes."""
+    from repro.compile.program import (MORPH_TOLERANCE_FAMILIES,
+                                       morph_allowed)
+    from repro.compile.buckets import BucketKey
+    # every current family is bitwise-proven, so synthesize the key of a
+    # hypothetical tolerance-tier family to pin the gate's behavior
+    key = BucketKey(learner=("hypothetical", ()), n_pad=8, p_pad=8)
+    assert "hypothetical" not in MORPH_TOLERANCE_FAMILIES
+    assert not morph_allowed(key, 0.0)
+    assert not morph_allowed(key, 1e-6)    # not registered: never morphs
+    ridge = BucketKey(learner=("ridge", (("reg", 1.0),)), n_pad=8, p_pad=8)
+    assert morph_allowed(ridge, 0.0)       # bitwise tier needs no opt-in
 
 
 def test_out_of_order_harvest_parity():
