@@ -294,10 +294,16 @@ def fusion_block_launch(n_requests: int = 12, n_rep: int = 2,
             seeder.compiler.persist = PersistentProgramCache(arm_dir)
             cold_trace_s, _ = drain(seeder)
             # disk-cold: fresh backend, fresh in-memory caches — every
-            # program must come off the seeded disk stores
-            backend = WaveBackend(dataclasses.replace(pool, **knobs))
-            backend.compiler.persist = PersistentProgramCache(arm_dir)
-            cold_s, _ = drain(backend)
+            # program must come off the seeded disk stores.  Single-shot
+            # cold drains are noisy on a loaded host (one slow LAPACK
+            # re-compile skews the whole drain), so take the best of
+            # three fresh backends, each seeing the same seeded stores
+            cold_s = 1e9
+            for _ in range(3):
+                backend = WaveBackend(dataclasses.replace(pool, **knobs))
+                backend.compiler.persist = PersistentProgramCache(arm_dir)
+                s, _ = drain(backend)
+                cold_s = min(cold_s, s)
             misses_cold = backend.compiler.stats.misses
             launches0 = backend.compiler.stats.launches
             warm_s, last_info = 1e9, None
@@ -354,7 +360,13 @@ def _serving_cases(n_requests_per_family: int, n_rep: int, *,
     benches share: every learner family (+ IRM for logistic), one
     (label, plan, data) triple per request.  Labels are unique per
     request — the parity dict must never let a passing replica mask a
-    failing one.  Returns (cases, tasks per round)."""
+    failing one.  Same-family replicas share their family's N (distinct
+    seeds keep the datasets and feature pages distinct), so they land in
+    one aligned-N bucket and their tail blocks can coalesce into shared
+    launches — the cross-shape morphing path the asyncdrain smoke gate
+    measures (an old per-replica N offset silently split every replica
+    into its own bucket and kept morphing permanently idle).  Returns
+    (cases, tasks per round)."""
     from repro.core import DMLData, DMLPlan
     from repro.data import make_irm_data, make_plr_data
 
@@ -362,7 +374,7 @@ def _serving_cases(n_requests_per_family: int, n_rep: int, *,
     for i, (name, params) in enumerate(SERVING_FAMILIES):
         for j in range(n_requests_per_family):
             data = DMLData.from_dict(make_plr_data(
-                n_obs=100 + n_obs_stride * i + 7 * j, dim_x=6, theta=0.5,
+                n_obs=100 + n_obs_stride * i, dim_x=6, theta=0.5,
                 seed=10 * i + j))
             plan = DMLPlan.for_model(
                 "plr", learner=name, learner_params=params, n_folds=3,
@@ -625,3 +637,162 @@ def kernel_compare() -> Dict:
     oracle_us = (time.perf_counter() - t0) / 10 * 1e6
     return {"max_abs_err": err, "oracle_us_per_call": oracle_us,
             "tasks": 64, "n_obs": 5120}
+
+
+def axis_planner(fast: bool = True, repeats: int = 3) -> Dict:
+    """ISSUE 8 per-bucket parallelization-axis planner bench
+    (-> ``BENCH_axisplan.json``).
+
+    Measures the three layouts the planner prices against each other and
+    checks its two invariants:
+
+      * tall-N tasks/s — whole-N task-parallel Gram vs the streaming
+        blocked path (``chunk_tall_n`` + ``batched_gram_blocked``) vs
+        the in-mesh data-parallel executor;
+      * wide-P tasks/s — whole Gram vs the feature-parallel column
+        executor;
+      * decision mix — ``plan_bucket_axis`` over the canonical shape
+        grid on the canonical 8-device mesh (pure pricing, no devices
+        needed), counted per chosen axis;
+      * ``planner_never_worse`` — nowhere on the grid is an executable
+        candidate priced strictly cheaper than the chosen one (the CI
+        gate; holds by construction, so a False means the argmin broke);
+      * sharded-fused warm speedup — the real ``run_bucket`` fused
+        launch on a ridge bucket, unsharded cache vs
+        ``make_sharded_compiler(mesh)``, plus a measured
+        parallel-headroom probe (m sequential matmuls vs one shard_map
+        over the mesh) so the CI gate only demands speedup > 1 where the
+        host really has spare cores — a 1-vCPU runner cannot win by
+        sharding, and there the gate keeps only a sanity floor against
+        catastrophic regressions (e.g. per-call retracing).
+    """
+    import os
+
+    import jax
+    import jax.numpy as jnp
+    from repro.compile import ProgramCache, plan_buckets, run_bucket
+    from repro.compile.buckets import BucketKey, plan_bucket_axis
+    from repro.core import DMLData, DMLPlan
+    from repro.core.session import compile_request
+    from repro.data import make_plr_data
+    from repro.kernels import ops
+    from repro.launch.mesh import make_host_mesh
+    from repro.serverless.backends import make_sharded_compiler
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.gram import data_parallel_gram, feature_parallel_gram
+
+    mesh = make_host_mesh()
+    m = int(mesh.shape["data"])
+
+    def timeit(fn):
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / repeats
+
+    rng = np.random.default_rng(0)
+
+    def _case(b, n, p):
+        xs = jnp.asarray(rng.standard_normal((b, n, p)), jnp.float32)
+        w = jnp.asarray((rng.random((b, n)) > 0.2), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+        return xs, w, y
+
+    # ---- tall-N: task-parallel whole-N vs streaming blocked vs in-mesh
+    b, n, p = (2, 1 << 14, 8) if fast else (4, 1 << 16, 8)
+    xs, w, y = _case(b, n, p)
+    t_task = timeit(lambda: ops.batched_gram(xs, w, y, reg=0.5))
+    xc, wc, yc = ops.chunk_tall_n(xs, w, y, max(n // 8, 256))
+    t_block = timeit(lambda: ops.batched_gram_blocked(xc, wc, yc, reg=0.5))
+    t_data = timeit(lambda: data_parallel_gram(mesh, xs, w, y, reg=0.5))
+    tall = {"b": b, "n": n, "p": p,
+            "task_tasks_per_sec": b / t_task,
+            "blocked_stream_tasks_per_sec": b / t_block,
+            "data_parallel_tasks_per_sec": b / t_data}
+
+    # ---- wide-P: whole Gram vs the feature-parallel column split
+    bw, nw, pw = (1, 512, 1024) if fast else (2, 1024, 4096)
+    xs, w, y = _case(bw, nw, pw)
+    t_task_w = timeit(lambda: ops.batched_gram(xs, w, y, reg=0.5))
+    t_feat = timeit(lambda: feature_parallel_gram(mesh, xs, w, y, reg=0.5))
+    wide = {"b": bw, "n": nw, "p": pw,
+            "task_tasks_per_sec": bw / t_task_w,
+            "feature_parallel_tasks_per_sec": bw / t_feat}
+
+    # ---- decision mix + the never-strictly-worse invariant ------------
+    shapes = [("ridge", (("reg", 1.0),)), ("ols", ()),
+              ("lasso", (("reg", 0.01), ("n_iter", 200))),
+              ("logistic", (("reg", 1.0), ("n_iter", 100))),
+              ("mlp", (("hidden", (8,)), ("n_steps", 100)))]
+    mix = {"task": 0, "data": 0, "feature": 0}
+    never_worse = True
+    for learner, ptuple in shapes:
+        for n_pad in (256, 4096, 1 << 17):
+            for b_ in (1, 16, 64):
+                for ndev in sorted({m, 8}):
+                    d = plan_bucket_axis(BucketKey((learner, ptuple),
+                                                   n_pad, 32),
+                                         n_tasks=b_, n_devices=ndev)
+                    if ndev == 8:
+                        mix[d.axis] += 1
+                    for ax, sh, est, ok in d.candidate_costs:
+                        if ok and est < d.est_s \
+                                and (ax, sh) != (d.axis, d.shards):
+                            never_worse = False
+
+    # ---- parallel-headroom probe: does this host win by sharding? ----
+    if m == 1:
+        headroom = 1.0
+    else:
+        from jax.sharding import PartitionSpec as P
+        k = 128 if fast else 256
+        a = jnp.asarray(rng.standard_normal((m, k, k)), jnp.float32)
+        seq = jax.jit(lambda a: jnp.einsum("mij,mjk->mik", a, a))
+        par = jax.jit(shard_map_compat(
+            lambda a: jnp.einsum("mij,mjk->mik", a, a), mesh=mesh,
+            in_specs=(P("data"),), out_specs=P("data")))
+        headroom = timeit(lambda: seq(a)) / max(timeit(lambda: par(a)),
+                                                1e-12)
+
+    # ---- sharded-fused vs unsharded fused warm launch (real path) ----
+    n_obs, dim_x = (512, 16) if fast else (2048, 32)
+    cases = []
+    for i in range(2):
+        data = DMLData.from_dict(make_plr_data(
+            n_obs=n_obs, dim_x=dim_x, theta=0.5, seed=50 + i))
+        plan = DMLPlan.for_model("plr", learner="ridge",
+                                 learner_params={"reg": 1.0}, n_folds=3,
+                                 n_rep=2, seed=70 + i)
+        cases.append((plan, data))
+    reqs = [compile_request(p, d) for p, d in cases]
+    bplan = plan_buckets(reqs)
+    (bkey,) = bplan.buckets
+    entries = [(ri, int(i)) for ri, req in enumerate(reqs)
+               for i in req.ledger.pending()]
+    cache = ProgramCache()
+    t_unsharded = timeit(
+        lambda: run_bucket(bplan, cache, bkey, entries, fuse=True))
+    sharded = make_sharded_compiler(mesh)
+    t_sharded = timeit(
+        lambda: run_bucket(bplan, sharded, bkey, entries, fuse=True,
+                           b_align=m))
+    assert sharded.stats.fused_launches >= 1
+
+    return {
+        "mesh_devices": m,
+        "host_cores": os.cpu_count() or 1,
+        "parallel_headroom": headroom,
+        "tall_n": tall,
+        "wide_p": wide,
+        "decision_mix_8dev": mix,
+        "planner_never_worse": never_worse,
+        "sharded_fused": {
+            "n_entries": len(entries),
+            "n_obs": n_obs,
+            "warm_unsharded_s": t_unsharded,
+            "warm_sharded_s": t_sharded,
+            "warm_speedup_sharded_vs_unsharded": t_unsharded / t_sharded,
+            "speedup_gate_enforced": headroom >= 1.5,
+        },
+    }

@@ -18,23 +18,36 @@ inline path), the ``blockfusion`` benchmark writes ``BENCH_fusion.json``
 (trace-cold / disk-cold / warm tasks/sec fused vs the canonical
 per-block baseline, launches-per-drain before/after, morphed B-waste,
 persistent-cache counters, and the measured host/device overlap ratio
-of the pipelined dispatch queue), and the ``topology`` benchmark writes
+of the pipelined dispatch queue), the ``topology`` benchmark writes
 ``BENCH_topology.json`` (per-host page hit rates, steal counts,
-cross-host transfer convergence, roofline-priced autoscale candidates)
-so the perf trajectory is tracked across PRs; ``--smoke`` runs
-megabatch + asyncdrain + blockfusion at CI size and fails loudly if the
-compiler regresses below the per-segment path (cold >= 1x,
-warm >= 15x), the page pool stops serving steady traffic from device
-residency, B-axis padding waste exceeds 25% (or 15% under the
-cross-shape morphing scheduler), N-axis waste exceeds 30%, fused drains
-stop launching strictly fewer programs than unfused ones, disk-cold
-fused throughput falls below unfused (the persistent program cache no
-longer pays the fused compile bill back), warm fused speedup falls
-below 1.5x, the pipelined dispatch queue's overlap ratio falls below
-0.5, or async results drift from the synchronous path.  ``--topology-smoke``
-gates the multi-host acceptance criteria: bitwise parity on every
-family, zero steady-state cross-host page transfers, per-host hit rate
->= 0.9, and roofline-priced first-wave autoscale decisions.
+cross-host transfer convergence, roofline-priced autoscale candidates),
+and the ``axisplan`` benchmark writes ``BENCH_axisplan.json`` (per-axis
+tasks/s on tall-N and wide-P Gram shapes, the planner's decision mix
+over the canonical shape grid, the sharded-fused vs unsharded warm
+launch speedup, and a measured parallel-headroom probe) so the perf
+trajectory is tracked across PRs; ``--smoke`` runs
+megabatch + asyncdrain + blockfusion + axisplan at CI size and fails
+loudly if the compiler regresses below the per-segment path (cold >= 1x,
+warm >= 12x), the page pool stops serving steady traffic from device
+residency, morphed B-axis padding waste exceeds 15% (25% raw backstop),
+N-axis waste exceeds 30%, fused drains stop launching strictly fewer
+programs than unfused ones, disk-cold fused throughput falls below
+unfused (the persistent program cache no longer pays the fused compile
+bill back), warm fused throughput falls below unfused (parity-or-better;
+the launches-per-drain gate carries the structural fusion claim since
+the bucket-coherent wave fill halved the unfused baseline's launch
+count), the pipelined dispatch
+queue's overlap ratio falls below 0.5, async results drift from the
+synchronous path, the axis planner picks a candidate priced strictly
+worse than another executable one, or the sharded-fused warm launch
+regresses (> 1x required only when the headroom probe shows real spare
+cores; a 0.25x sanity floor otherwise — 1-vCPU runners cannot win by
+sharding).  ``--topology-smoke`` gates the multi-host acceptance
+criteria: bitwise parity on every family, zero steady-state cross-host
+page transfers, per-host hit rate >= 0.9, and roofline-priced
+first-wave autoscale decisions.  ``--axisplan-smoke`` runs just the
+axisplan gates (the multihost-smoke job runs it 8-way, where the
+sharded paths really split).
 """
 from __future__ import annotations
 
@@ -55,20 +68,27 @@ def main() -> None:
                     help="CI gate: topology benchmark only, exit nonzero "
                          "on parity/locality/autoscaler regressions "
                          "(multihost-smoke job)")
+    ap.add_argument("--axisplan-smoke", action="store_true",
+                    help="CI gate: axis-planner benchmark only, exit "
+                         "nonzero on planner/sharded-fused regressions "
+                         "(multihost-smoke job runs it 8-way)")
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--megabatch-json", default="BENCH_megabatch.json")
     ap.add_argument("--asyncdrain-json", default="BENCH_asyncdrain.json")
     ap.add_argument("--fusion-json", default="BENCH_fusion.json")
     ap.add_argument("--topology-json", default="BENCH_topology.json")
+    ap.add_argument("--axisplan-json", default="BENCH_axisplan.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
-    if args.smoke or args.topology_smoke:       # composable gate modes
-        only = set()
+    if args.smoke or args.topology_smoke or args.axisplan_smoke:
+        only = set()                            # composable gate modes
         args.fast = True
         if args.smoke:
-            only |= {"megabatch", "asyncdrain", "blockfusion"}
+            only |= {"megabatch", "asyncdrain", "blockfusion", "axisplan"}
         if args.topology_smoke:
             only |= {"topology"}
+        if args.axisplan_smoke:
+            only |= {"axisplan"}
 
     from benchmarks import paper_tables as T
 
@@ -159,7 +179,10 @@ def main() -> None:
             json.dump(fu, f, indent=1, default=float)
 
     if want("asyncdrain"):
-        ad = T.async_drain(n_requests_per_family=1, n_rep=2,
+        # 2 replicas per family: same-family replicas share an aligned-N
+        # bucket, so the steady-state drain actually exercises the
+        # cross-shape tail coalescing the morphed B-waste gate measures
+        ad = T.async_drain(n_requests_per_family=2, n_rep=2,
                            rounds=3 if args.fast else 5)
         results["asyncdrain"] = ad
         rows.append(("asyncdrain_steady_round",
@@ -172,6 +195,23 @@ def main() -> None:
                      f"parity={ad['bitwise_parity_all']}"))
         with open(args.asyncdrain_json, "w") as f:
             json.dump(ad, f, indent=1, default=float)
+
+    if want("axisplan"):
+        ax = T.axis_planner(fast=args.fast)
+        results["axisplan"] = ax
+        sf = ax["sharded_fused"]
+        rows.append(("axisplan_sharded_fused_warm",
+                     sf["warm_sharded_s"] * 1e6,
+                     f"mesh={ax['mesh_devices']}dev_"
+                     f"headroom={ax['parallel_headroom']:.2f}_"
+                     f"sharded_speedup="
+                     f"{sf['warm_speedup_sharded_vs_unsharded']:.2f}x_"
+                     f"mix=task{ax['decision_mix_8dev']['task']}/"
+                     f"data{ax['decision_mix_8dev']['data']}/"
+                     f"feat{ax['decision_mix_8dev']['feature']}_"
+                     f"never_worse={ax['planner_never_worse']}"))
+        with open(args.axisplan_json, "w") as f:
+            json.dump(ax, f, indent=1, default=float)
 
     if want("topology"):
         tp = T.topology_drain(n_hosts=2, n_requests_per_family=1, n_rep=2,
@@ -226,9 +266,15 @@ def main() -> None:
                     f"unfused {fu['tasks_per_sec_cold_unfused']:.0f} "
                     "(persistent program cache no longer pays back the "
                     "fused compile bill)")
-        elif fu["warm_speedup_fused_vs_unfused"] < 1.5:
+        elif fu["warm_speedup_fused_vs_unfused"] < 1.0:
+            # re-baselined in PR 8: the bucket-coherent wave fill halved
+            # the unfused baseline's launches per drain (64 -> 32), so
+            # the warm ratio compressed from ~1.5-1.7x to ~1.1-1.3x.
+            # The structural fusion claim stays strict in the
+            # launches-per-drain gate above (5 vs 32); this gate now
+            # pins parity-or-better: fusing must never cost throughput
             fail = (f"warm fused speedup "
-                    f"{fu['warm_speedup_fused_vs_unfused']:.2f}x < 1.5x "
+                    f"{fu['warm_speedup_fused_vs_unfused']:.2f}x < 1x "
                     "vs the canonical per-block baseline (coalescing / "
                     "fusion hot path regressed)")
         elif fu["overlap_ratio_warm"] < 0.5:
@@ -245,9 +291,22 @@ def main() -> None:
         elif ad["page_bytes_h2d_steady"] != 0:
             fail = (f"steady-state drains re-transferred "
                     f"{ad['page_bytes_h2d_steady']} bytes host->device")
-        # 0.1pt tolerance: the serving mix lands on exactly 25.0 today
-        # (12-task tails pad to 16), and the gate exists to catch the
-        # pad-to-B_BLOCK regression (~65%), not sub-point drift
+        # re-baselined in PR 8: with 2 replicas per family sharing each
+        # aligned-N bucket, the bucket-coherent wave fill lets same-N
+        # tail blocks coalesce and steady-state B waste lands at ~4%
+        # (the old serving mix sat at exactly 25.0 because a per-replica
+        # N offset split every replica into its own bucket and kept
+        # morphing permanently idle); 15% holds wide margin while still
+        # catching a return of cross-wave tail fragmentation
+        elif ad["padding_waste_b_morphed_pct"] > 15.0:
+            fail = (f"morphed B-axis padding waste "
+                    f"{ad['padding_waste_b_morphed_pct']:.1f}% > 15% "
+                    "(bucket-coherent wave fill / tail coalescing "
+                    "regressed)")
+        # raw-waste backstop for the pad-to-B_BLOCK regression (~65%):
+        # under the coalescing scheduler raw == morphed (launch booking
+        # records actual lanes), so this only fires if coalescing is
+        # disabled outright
         elif ad["padding_waste_b_pct"] > 25.0 + 0.1:
             fail = (f"B-axis padding waste "
                     f"{ad['padding_waste_b_pct']:.1f}% > 25% "
@@ -273,10 +332,46 @@ def main() -> None:
               f"morphed B waste {fu['padding_waste_b_morphed_pct']:.0f}%; "
               f"asyncdrain {ad['steady_tasks_per_sec']:.0f} tasks/s steady, "
               f"page hit rate {ad['page_pool_hit_rate']:.2f}, "
-              f"B waste {ad['padding_waste_b_pct']:.0f}%, "
+              f"B waste {ad['padding_waste_b_pct']:.0f}% "
+              f"(morphed {ad['padding_waste_b_morphed_pct']:.0f}%), "
               f"N waste {ad['padding_waste_n_pct']:.0f}% "
               f"(pow2 was {ad['padding_waste_n_pow2_pct']:.0f}%), "
               f"bitwise parity {ad['bitwise_parity_all']}")
+
+    if args.smoke or args.axisplan_smoke:
+        ax = results["axisplan"]
+        sf = ax["sharded_fused"]
+        speedup = sf["warm_speedup_sharded_vs_unsharded"]
+        fail = None
+        if not ax["planner_never_worse"]:
+            fail = ("axis planner picked a candidate priced strictly "
+                    "worse than another executable one (argmin broke)")
+        elif sf["speedup_gate_enforced"] and speedup <= 1.0:
+            fail = (f"sharded-fused warm speedup {speedup:.2f}x <= 1x "
+                    f"despite parallel headroom "
+                    f"{ax['parallel_headroom']:.2f} (in-mesh sharded "
+                    "fusion stopped paying for itself)")
+        elif speedup < 0.25:
+            # no-headroom sanity floor: a shard_map of the same total
+            # work on a saturated host costs overhead, not 4x — below
+            # this the sharded-fused path is retracing or recompiling
+            fail = (f"sharded-fused warm launch {speedup:.2f}x of the "
+                    "unsharded fused launch (catastrophic overhead: "
+                    "per-call retrace or compile-cache miss)")
+        if fail:
+            print(f"AXISPLAN SMOKE FAIL: {fail}", file=sys.stderr)
+            sys.exit(1)
+        print(f"AXISPLAN SMOKE OK: {ax['mesh_devices']}-device mesh, "
+              f"headroom {ax['parallel_headroom']:.2f} "
+              f"(speedup gate "
+              f"{'on' if sf['speedup_gate_enforced'] else 'floor-only'}), "
+              f"sharded-fused warm {speedup:.2f}x, "
+              f"decision mix task/data/feature = "
+              f"{ax['decision_mix_8dev']['task']}/"
+              f"{ax['decision_mix_8dev']['data']}/"
+              f"{ax['decision_mix_8dev']['feature']}, "
+              f"planner never strictly worse: "
+              f"{ax['planner_never_worse']}")
 
     if args.topology_smoke:
         tp = results["topology"]

@@ -40,6 +40,10 @@ from repro.analysis.report import Finding
 EXPECTED_CACHES: Tuple[str, ...] = (
     "program_cache",            # ProgramCache.program
     "fused_program_cache",      # ProgramCache.fused_program
+    # the shard_map-wrapped fused form (ISSUE 8): keyed additionally by
+    # the mesh axes the partition_fused transform closes over, because
+    # the same bucket on a differently-shaped mesh compiles differently
+    "sharded_fused_program_cache",  # ProgramCache.sharded_fused_program
     "block_layouts",            # compile/program.py::_request_block_layout
     "block_tensors",            # compile/program.py::_block_tensors
     "fold_in_key_tables",       # serverless/backends.py::_segment_key_table

@@ -20,6 +20,16 @@ family and program form the ``ProgramCache`` can build:
     through one ``shard_map`` whose body passes the same PRNG/shape
     audit (sharded parity is tolerance-level by contract, so body
     equality is not required there).
+  * **sharded-fused-wraps-scan** — the sharded-fused form (ISSUE 8:
+    partitioned caches now fuse) must lower through exactly one
+    ``shard_map`` whose body is exactly one ``scan`` whose body's
+    primitive sequence equals the single-block program: the shard only
+    splits the task axis, so each device runs the identical fused
+    ``lax.map`` over its B/m lane slice.  This pins the *structure*;
+    numeric parity vs the unsharded fused launch is bitwise on a
+    1-device mesh and the ~1e-6 sharded float tier on m-way meshes
+    (compiled-B retiling below 16 lanes — see the B_BLOCK caveat in
+    compile/program.py).
   * **prng-key-from-runtime-data** — taint analysis over the jaxpr:
     primitives that consume PRNG keys may only be reached from the
     ``key_data`` input (the compile-time ``fold_in`` tables), never
@@ -214,6 +224,41 @@ def audit_fused_pair(single_jaxpr, fused_jaxpr, where: str,
     return findings
 
 
+def audit_sharded_fused(single_jaxpr, sharded_fused_jaxpr, where: str,
+                        ) -> List[Finding]:
+    """Structural checks for the sharded-fused form (ISSUE 8): one
+    shard_map, whose body is one scan, whose body is the single-block
+    program.  Factored out (like ``audit_fused_pair``) so the mutation
+    tests can feed a deliberately vmap-built body and watch it fail."""
+    findings: List[Finding] = []
+    tops = _prim_seq(sharded_fused_jaxpr.jaxpr)
+    if tops != ["shard_map"]:
+        findings.append(Finding(
+            "jaxpr", "sharded-fused-wraps-scan", where,
+            f"sharded-fused program's top-level jaxpr is {tops} — must "
+            "be exactly one shard_map so the partition only splits the "
+            "task axis"))
+        return findings
+    body = _unwrap(sharded_fused_jaxpr.jaxpr.eqns[0].params["jaxpr"])
+    inner = _prim_seq(body)
+    if inner != ["scan"]:
+        findings.append(Finding(
+            "jaxpr", "sharded-fused-wraps-scan", where,
+            f"shard_map body's primitive sequence is {inner} — must be "
+            "exactly one scan (lax.map); a vmap-batched body inside the "
+            "shard would retile reductions and break the bitwise "
+            "sharded-fused contract"))
+        return findings
+    scan_body = _unwrap(body.eqns[0].params["jaxpr"])
+    if _prim_seq(scan_body) != _prim_seq(single_jaxpr.jaxpr):
+        findings.append(Finding(
+            "jaxpr", "sharded-fused-wraps-scan", where,
+            "sharded-fused scan body's primitive sequence differs from "
+            "the single-block program — each device's fused lanes must "
+            "compile to exactly the per-block computation"))
+    return findings
+
+
 def _data_key_marks(jaxpr) -> List[Set[str]]:
     """Input marks for the program signature: everything but the
     trailing key_data operand is runtime data."""
@@ -289,6 +334,21 @@ def audit_family(family: str) -> List[Finding]:
             "sharded form must lower through shard_map"))
     _taint_jaxpr(sharded.jaxpr, _data_key_marks(sharded.jaxpr),
                  f"{family}/sharded", findings)
+
+    # the sharded-FUSED form (ISSUE 8): shard_map around the lax.map
+    # fused body, task axis sharded, pages replicated — the form
+    # ProgramCache.sharded_fused_program jits for partitioned buckets
+    fin_specs, fout_specs = megabatch_specs("data", fused=True)
+    sharded_fused_fn = shard_map_compat(
+        run_fused, mesh=make_host_mesh(),
+        in_specs=fin_specs, out_specs=fout_specs)
+    sharded_fused = jax.make_jaxpr(sharded_fused_fn)(
+        *_probe_avals(fused=True))
+    findings.extend(audit_sharded_fused(single, sharded_fused,
+                                        f"{family}/sharded-fused"))
+    _taint_jaxpr(sharded_fused.jaxpr,
+                 _data_key_marks(sharded_fused.jaxpr),
+                 f"{family}/sharded-fused", findings)
     return findings
 
 

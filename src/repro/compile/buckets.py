@@ -207,3 +207,64 @@ def plan_buckets(requests: Sequence, *, min_n: int = 8,
     for req in requests:
         plan.admit(req)
     return plan
+
+
+# ---------------------------------------------------------------------------
+# Per-bucket parallelization-axis planning (ISSUE 8)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AxisDecision:
+    """One bucket's parallelization-axis choice plus the full roofline
+    candidate table it was picked from — logged on
+    ``BackendRunInfo.axis_plans`` exactly like autoscale decisions, so a
+    drain's layout choices are auditable after the fact."""
+    bucket: BucketKey
+    axis: str                           # task | data | feature
+    shards: int                         # mesh devices the layout spans
+    n_tasks: int                        # pending tasks priced
+    n_pad: int
+    p_pad: int
+    mesh_devices: int                   # devices the planner could use
+    priced_by: str = "roofline"
+    # (axis, shards, est_s, executable) per candidate, planner input
+    candidate_costs: Tuple[Tuple[str, int, float, bool], ...] = ()
+
+    @property
+    def est_s(self) -> float:
+        """The chosen candidate's priced wall-clock."""
+        for axis, shards, est, _ in self.candidate_costs:
+            if axis == self.axis and shards == self.shards:
+                return est
+        return float("nan")
+
+
+def plan_bucket_axis(key: BucketKey, *, n_tasks: int, n_devices: int,
+                     ) -> "AxisDecision | None":
+    """Pick the parallelization axis for one bucket on an
+    ``n_devices`` mesh: roofline-price the task-parallel, data-parallel
+    (blocked Gram) and feature-parallel candidates
+    (``launch/roofline.py::axis_candidate_costs``) and take the cheapest
+    *executable* one.  Returns None for opaque-callable buckets (no
+    analytic model — they always run task-parallel unsharded).
+
+    Pure pricing: deterministic in (bucket, n_tasks, n_devices), no
+    device access — so the decision is unit-testable and the bench gate
+    "the planner never picks a candidate priced strictly worse than
+    another executable one" holds by construction.
+    """
+    ident = key.learner
+    if not (isinstance(ident, tuple) and len(ident) == 2
+            and isinstance(ident[0], str)) or ident[0] == "opaque":
+        return None
+    from repro.launch.roofline import axis_candidate_costs
+    learner, ptuple = ident
+    cands = axis_candidate_costs(learner, dict(ptuple), n_tasks,
+                                 key.n_pad, key.p_pad, n_devices)
+    runnable = [c for c in cands if c[3]]
+    if not runnable:                      # e.g. tall-N non-Gram family
+        runnable = [c for c in cands if c[0] == "task"]
+    axis, shards, _, _ = min(runnable, key=lambda c: (c[2], c[1], c[0]))
+    return AxisDecision(bucket=key, axis=axis, shards=shards,
+                        n_tasks=int(n_tasks), n_pad=key.n_pad,
+                        p_pad=key.p_pad, mesh_devices=int(n_devices),
+                        candidate_costs=tuple(cands))

@@ -149,9 +149,22 @@ class ProgramCache:
     """
 
     def __init__(self, partition: Optional[Callable] = None,
-                 persist: object = "auto"):
+                 persist: object = "auto",
+                 partition_fused: Optional[Callable] = None,
+                 partition_axes: Optional[Tuple] = None):
         self._programs: Dict[Tuple, Callable] = {}
         self.partition = partition
+        # ISSUE 8: shard_map transform for the *fused* calling convention
+        # (leading block axis G replicated, task axis sharded).  When
+        # set, partitioned buckets fuse again — the per-shard body is the
+        # unsharded lax.map program, so fused sharded launches stay
+        # bitwise-equal to per-block unsharded ones.  partition_axes
+        # names the mesh axes (and their sizes) the transform closes
+        # over; it is part of the program cache key because two meshes
+        # with different shard counts compile different programs.
+        self.partition_fused = partition_fused
+        self.partition_axes = tuple(partition_axes) if partition_axes \
+            else None
         self.persist: Optional[PersistentProgramCache] = \
             default_persist() if persist == "auto" else persist
         self.stats = CompileStats()
@@ -161,7 +174,8 @@ class ProgramCache:
         persisted: spec-identified learners only, never partitioned
         programs (shard_map closes over mesh state the serialized
         executable would not carry)."""
-        if self.persist is None or self.partition is not None:
+        if self.persist is None or self.partition is not None \
+                or self.partition_fused is not None:
             return None
         return self.persist
 
@@ -261,6 +275,55 @@ class ProgramCache:
         self._programs[pkey] = prog
         return prog
 
+    # The sharded-fused program closes over the mesh the partition_fused
+    # transform was built with, so the mesh axes (names + sizes) join the
+    # cache key — same bucket on a differently-sized mesh is a different
+    # program.  Never persisted to disk (the serialized executable would
+    # not carry the mesh), which _disk() enforces.
+    @warm_cache(name="sharded_fused_program_cache",
+                key=("key", "b_pad", "d_pad", "g", "self.partition_axes"),
+                reads=("fn_thunk",), covers={"key": ("fn_thunk",)},
+                ambient=("self",))
+    def sharded_fused_program(self, key: BucketKey, b_pad: int, d_pad: int,
+                              g: int,
+                              fn_thunk: Callable[[], Callable]) -> Callable:
+        """The fused launch shard_mapped over the host mesh (ISSUE 8):
+        ``shard_map`` *around* the ``lax.map`` fused body, task axis
+        sharded and the block axis G replicated
+        (``megabatch_specs(fused=True)``), lifting the PR 5 "sharded
+        caches never fuse" restriction.  Each shard compiles the SAME
+        lax.map body as the unsharded fused program over its B/m lane
+        slice — the structural contract audited by
+        analysis/jaxpr_audit.py (sharded-fused-wraps-scan).  Parity vs
+        the unsharded fused launch is bitwise on a 1-device mesh; on an
+        m-way mesh XLA may retile reductions at the smaller compiled
+        B/m (measured: B-invariance holds down to 16 lanes, not below),
+        so multi-device results sit in the same ~1e-6 float tier as the
+        unfused sharded path — verified per family by
+        tests/test_compile.py::test_sharded_fused_launch_bitwise_parity.
+        The win is launch count: partitioned drains now pack blocks
+        into fused launches instead of one launch per block."""
+        pkey = (key, b_pad, d_pad, g, ("mesh",) + self.partition_axes)
+        prog = self._programs.get(pkey)
+        if prog is not None:
+            self.stats.hits += 1
+            return prog
+        self.stats.misses += 1
+        batched_fn = fn_thunk()
+
+        def run_one(pages, data_idx, y, w, valid, key_data):
+            xb = pages[data_idx]
+            keys = jax.random.wrap_key_data(key_data)
+            return batched_fn(xb, y, w, valid, keys)
+
+        def run_fused(pages, data_idx, y, w, valid, key_data):
+            return jax.lax.map(lambda t: run_one(pages, *t),
+                               (data_idx, y, w, valid, key_data))
+
+        prog = jax.jit(self.partition_fused(run_fused))
+        self._programs[pkey] = prog
+        return prog
+
 
 # A launch carries at most B_BLOCK task lanes.  The compiled B is part
 # of the determinism contract: per-lane floats are independent of lane
@@ -307,10 +370,16 @@ class ProgramCache:
 # steady throughput on the session benches — 32 is the measured sweet
 # spot.
 #
-# Caveat: ShardedBackend aligns B up to its shard count and shard_map
-# retiles the per-lane reductions, so the sharded scheduler agrees with
-# the unsharded ones to float tolerance (~1e-6) on multi-device meshes,
-# bitwise only on a 1-device mesh.
+# Caveat: partitioned paths agree with the unsharded schedulers to
+# float tolerance (~1e-6) on multi-device meshes, bitwise only on a
+# 1-device mesh.  For the *unfused* sharded path the cause is shard_map
+# retiling the batched learner's B-axis reductions; the *sharded-fused*
+# path (ISSUE 8) wraps the lax.map fused body so each shard runs the
+# per-lane program unchanged (structurally audited), but it compiles
+# that body at B/m lanes and compiled-B invariance only holds down to
+# 16 lanes on this platform — below that XLA retiles and the same
+# ~1e-6 tier applies.  Verified per family by the sharded-fused parity
+# gate in tests/test_compile.py.
 B_BLOCK = 32
 
 # Families with a standing bitwise compiled-B invariance proof on this
@@ -744,7 +813,11 @@ def dispatch_bucket(plan: MegabatchPlan, cache: ProgramCache,
     requests = plan.requests
     n_pad, p_pad = key.n_pad, key.p_pad
     blocks = _plan_blocks(plan, key, entries, b_block, b_align)
-    fuse = fuse and cache.partition is None
+    # a partitioned cache fuses again when it carries the sharded-fused
+    # transform (ISSUE 8) — shard_map wraps the lax.map body, so the
+    # PR 5 "sharded caches never fuse" restriction is lifted
+    fuse = fuse and (cache.partition is None
+                     or cache.partition_fused is not None)
     can_morph = morph_allowed(key, morph_tolerance)
     morph = coalesce and can_morph
     lblocks = _coalesce(blocks, b_block, b_align, morph, fuse)
@@ -812,8 +885,14 @@ def dispatch_bucket(plan: MegabatchPlan, cache: ProgramCache,
                     key, blk,
                     requests[blk.ri].segments[blk.si].learner is None)
             pad_acc.book_launch(key, lb)
-        prog = cache.fused_program(key, b_pad, int(pages_arr.shape[0]), g,
-                                   lambda: segment_batched_fn(seg))
+        if cache.partition_fused is not None:
+            prog = cache.sharded_fused_program(
+                key, b_pad, int(pages_arr.shape[0]), g,
+                lambda: segment_batched_fn(seg))
+        else:
+            prog = cache.fused_program(
+                key, b_pad, int(pages_arr.shape[0]), g,
+                lambda: segment_batched_fn(seg))
         out = prog(pages_arr, didx, ys, ws, valids, kds)
         launches.append(Launch(out=out, blocks=list(group), fused=True))
         cache.stats.launches += 1

@@ -15,6 +15,17 @@ path:
                             preds_b = valid_b * (X_b @ beta_b)
                             that scatters fitted coefficients back to
                             per-row predictions, zeroing padding lanes.
+``batched_gram_blocked_pallas``
+                            the streaming variant (ISSUE 8): the N axis
+                            arrives pre-chunked as (B, C, Nc, P) and the
+                            kernel accumulates across a compile-time
+                            (chunk, n_block) grid, so one task's N never
+                            has to fit a single device page.  The (c, j)
+                            accumulation order equals the unblocked
+                            kernel's j order over the merged N axis, so
+                            results are bitwise-identical when the
+                            chunks tile N exactly; ragged tails carry
+                            w == 0 rows whose FMA terms are exact zeros.
 
 Tiling mirrors crossfit_gram.py: grid (task_blocks, n_blocks); per-task X
 tiles (bb, bn, P) live in VMEM; the (bb, P, P) f32 accumulator persists in
@@ -79,6 +90,66 @@ def batched_gram_pallas(xs, w, y, *, block_b: int = 8, block_n: int = 256,
         ],
         interpret=interpret,
     )(xs, w, y)
+    return g, bv
+
+
+def _gram_blocked_kernel(x_ref, w_ref, y_ref, g_ref, b_ref):
+    c = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((c == 0) & (j == 0))
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    x = x_ref[...].astype(F32)[:, 0]               # (bb, 1, bn, P) -> 3D
+    w = w_ref[...].astype(F32)[:, 0]               # (bb, bn)
+    y = y_ref[...].astype(F32)[:, 0]               # (bb, bn)
+    wx = w[:, :, None] * x
+    g_ref[...] += jax.lax.dot_general(
+        wx, x, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=F32)
+    b_ref[...] += jnp.einsum("bn,bnp->bp", w * y, x,
+                             preferred_element_type=F32)
+
+
+def batched_gram_blocked_pallas(xc, w, y, *, block_b: int = 8,
+                                block_n: int = 256,
+                                interpret: bool = False):
+    """Streaming blocked Gram over N-chunks.
+
+    xc: (B, C, Nc, P) — the N axis pre-chunked into C streamed pieces of
+    Nc rows each; w, y: (B, C, Nc).  Returns (G (B,P,P) f32, b (B,P) f32).
+
+    The accumulator persists in the output block across the (c, j) grid,
+    so partial sums land in the same order as the unblocked kernel's
+    n-block loop over the merged (B, C*Nc, P) tensor — bitwise-equal by
+    construction when Nc is a multiple of block_n.  Nc must be a
+    multiple of block_n and B of block_b (wrapper pads).
+    """
+    b_dim, c_dim, nc, p = xc.shape
+    assert nc % block_n == 0 and b_dim % block_b == 0, \
+        (b_dim, c_dim, nc, block_b, block_n)
+    grid = (b_dim // block_b, c_dim, nc // block_n)
+    g, bv = pl.pallas_call(
+        _gram_blocked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 1, block_n, p),
+                         lambda i, c, j: (i, c, j, 0)),
+            pl.BlockSpec((block_b, 1, block_n), lambda i, c, j: (i, c, j)),
+            pl.BlockSpec((block_b, 1, block_n), lambda i, c, j: (i, c, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, p, p), lambda i, c, j: (i, 0, 0)),
+            pl.BlockSpec((block_b, p), lambda i, c, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, p, p), F32),
+            jax.ShapeDtypeStruct((b_dim, p), F32),
+        ],
+        interpret=interpret,
+    )(xc, w, y)
     return g, bv
 
 

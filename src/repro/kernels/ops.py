@@ -17,7 +17,9 @@ from repro import runtime
 from repro.kernels import ref
 from repro.kernels.crossfit_gram import crossfit_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.megabatch import batched_gram_pallas, batched_predict_pallas
+from repro.kernels.megabatch import (
+    batched_gram_blocked_pallas, batched_gram_pallas, batched_predict_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -95,6 +97,77 @@ def batched_gram(xs, w, y, reg: float = 0.0):
     y, _ = _pad_to(y, 0, 8)
     g, bv = batched_gram_pallas(xp, w, y, block_b=8, block_n=block_n,
                                 interpret=_interpret())
+    g = g[:b0, :p0, :p0]
+    bv = bv[:b0, :p0]
+    if reg:
+        g = g + reg * jnp.eye(p0, dtype=g.dtype)
+    return g, bv
+
+
+# Blocked-Gram parity tiers (ISSUE 8).  For families whose fit is a
+# pure function of the Gram statistics (X'X, X'y), streaming the N axis
+# chunk-by-chunk adds partial sums in the same order as the unblocked
+# kernel's n-block loop, so results are bitwise-equal.  Families whose
+# iterations re-reduce per-row activations (logistic's sigmoid pass,
+# kernel_ridge's kernel matrix, mlp's backprop) genuinely reorder float
+# accumulation when N is re-chunked — they get an explicit tolerance
+# tier instead of a false bitwise promise.
+BLOCKED_GRAM_BITWISE_FAMILIES = frozenset({"ols", "ridge", "lasso"})
+BLOCKED_GRAM_TOLERANCE_FAMILIES = frozenset(
+    {"logistic", "kernel_ridge", "mlp"})
+
+
+def chunk_tall_n(xs, w, y, chunk_rows: int):
+    """Split a tall (B, N, P) task batch into (B, C, Nc, P) N-chunks for
+    the streaming blocked Gram path.
+
+    A ragged tail (N % chunk_rows != 0) is padded with w == 0 rows, which
+    the kernel's masked accumulation treats as exact no-ops.  Pure
+    relayout otherwise — no float arithmetic.
+    """
+    b_dim, n, p = xs.shape
+    nc = int(chunk_rows)
+    pad = (-n) % nc
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+    c = (n + pad) // nc
+    return (xs.reshape(b_dim, c, nc, p), w.reshape(b_dim, c, nc),
+            y.reshape(b_dim, c, nc))
+
+
+@functools.partial(jax.jit, static_argnames=("reg",))
+def batched_gram_blocked(xc, w, y, reg: float = 0.0):
+    """Streaming blocked Gram: per-task normal equations accumulated
+    over pre-chunked N.
+
+    xc: (B, C, Nc, P); w/y: (B, C, Nc).  Returns G (B,P,P) f32,
+    b (B,P) f32 — the same contract as ``batched_gram`` on the merged
+    (B, C*Nc, P) tensor, but each chunk is streamed through the device
+    separately so a task's N never has to fit one page.
+    """
+    if not _use_pallas():
+        return ref.batched_gram_blocked_ref(xc, w, y, reg)
+    b_dim, c_dim, nc, p = xc.shape
+    # prefer the 256-row MXU block only when it tiles Nc exactly: an
+    # exactly-tiled chunk grid keeps partial-sum order identical to the
+    # unblocked kernel (bitwise); a ragged Nc falls back to 8-row blocks
+    # plus zero-weight padding (tolerance tier)
+    block_n = 256 if nc % 256 == 0 and nc >= 256 else 8
+    xp, _ = _pad_to(xc, 3, 128)          # lane-align features
+    p0 = p
+    xp, _ = _pad_to(xp, 2, block_n)      # Nc to a block multiple
+    padn = xp.shape[2] - nc
+    if padn:                              # padded rows get zero weight
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, padn)))
+        y = jnp.pad(y, ((0, 0), (0, 0), (0, padn)))
+    xp, b0 = _pad_to(xp, 0, 8)           # task-batch to sublane multiple
+    w, _ = _pad_to(w, 0, 8)
+    y, _ = _pad_to(y, 0, 8)
+    g, bv = batched_gram_blocked_pallas(xp, w, y, block_b=8,
+                                        block_n=block_n,
+                                        interpret=_interpret())
     g = g[:b0, :p0, :p0]
     bv = bv[:b0, :p0]
     if reg:

@@ -45,6 +45,20 @@ def batched_gram_ref(xs, w, y, reg: float = 0.0):
     return g, b
 
 
+def batched_gram_blocked_ref(xc, w, y, reg: float = 0.0):
+    """Oracle for the streaming blocked Gram kernel.
+
+    xc: (B, C, Nc, P) N-chunked feature pages; w/y: (B, C, Nc).  Merging
+    the chunk axis back into N is a pure relayout (no float ops), so the
+    oracle IS ``batched_gram_ref`` on the merged tensor — the blocked
+    kernel's contract is to match it despite streaming the chunks.
+    """
+    b, c, nc, p = xc.shape
+    return batched_gram_ref(xc.reshape(b, c * nc, p),
+                            w.reshape(b, c * nc),
+                            y.reshape(b, c * nc), reg)
+
+
 def batched_predict_ref(xs, beta, valid):
     """Masked per-task GEMV: preds_b = valid_b * (X_b @ beta_b)."""
     pred = jnp.einsum("bnp,bp->bn", xs.astype(F32), beta.astype(F32))

@@ -300,6 +300,129 @@ def invocation_roofline_s(learner: str, params, tasks_per_invocation: int,
         + amortized_launches * launch_overhead_s()
 
 
+# ---------------------------------------------------------------------------
+# Parallelization-axis pricing (ISSUE 8: the per-bucket axis planner)
+# ---------------------------------------------------------------------------
+# Hardware-model ceiling on the rows of one device-resident feature
+# page: a bucket whose N_pad exceeds this cannot run the one-page
+# task-parallel layout and must stream N-chunks through the blocked
+# Gram kernel (kernels/ops.py::batched_gram_blocked).
+DEVICE_PAGE_ROWS = 1 << 16
+
+# Dispatch-side tax of an m-way shard_map launch relative to the
+# single-device program: extra argument sharding/unsharding and the
+# runtime's per-shard bookkeeping, expressed as a fraction of one launch
+# overhead per extra shard.  Keeps the planner honest on tiny serving
+# buckets, where sharding 8 ways costs more host time than it saves.
+SHARD_OVERHEAD_FRAC = 0.15
+
+#: families whose fit is a pure function of (X'X, X'y) — the data-
+#: parallel blocked-Gram axis reconstructs their exact statistics from
+#: per-shard partial sums, and the feature axis can split their
+#: coordinate updates.  Everything else prices only the task axis.
+GRAM_FAMILIES = ("ols", "ridge", "lasso")
+
+
+def chunked_gram_flops(n: int, p: int, chunk_rows: int) -> float:
+    """FLOPs of accumulating X'X / X'y over ceil(n/chunk) N-chunks (the
+    streaming blocked Gram kernel): the same 2np^2 + 2np MACs as the
+    unblocked Gram, plus one (p, p) accumulator add per extra chunk —
+    the term that prices chunk granularity."""
+    n_chunks = max(int(np.ceil(n / max(int(chunk_rows), 1))), 1)
+    return 2.0 * n * p * p + 2.0 * n * p + (n_chunks - 1) * float(p) * p
+
+
+def _solve_flops(learner: str, n: int, p: int, params: Dict) -> float:
+    """The non-Gram remainder of a Gram-family fit: the part data-
+    parallel sharding cannot split (solve / iterated coordinate
+    updates run on the reduced statistics, replicated per shard)."""
+    gram = 2.0 * n * p * p
+    total = megabatch_task_flops(learner, n, p, params)
+    return max(total - gram, 0.0)
+
+
+def axis_candidate_costs(learner: str, params, n_tasks: int, n_pad: int,
+                         p_pad: int, n_devices: int,
+                         ) -> List[Tuple[str, int, float, bool]]:
+    """Price every parallelization-axis candidate for one bucket.
+
+    Returns ``[(axis, shards, est_s, executable), ...]`` — the roofline
+    wall-clock of draining ``n_tasks`` tasks of padded shape
+    (n_pad, p_pad) on an ``n_devices`` mesh under each layout:
+
+    * ``task``     — whole tasks round-robin over shards (the fused
+                     sharded launch; shards=1 is today's single-device
+                     baseline).  No collectives; an m-way launch pays a
+                     shard_map dispatch tax.
+    * ``data``     — every shard accumulates a partial Gram over N/m
+                     rows through the blocked kernel, psums the (P, P)
+                     statistics, then solves on the reduced moments.
+                     Splits the N axis: the only layout that can run a
+                     bucket whose N_pad exceeds DEVICE_PAGE_ROWS.
+    * ``feature``  — each shard owns P/m columns (LightGBM's feature-
+                     parallel analogue): compute splits by column,
+                     iterative families all-gather their coefficient
+                     block per sweep, and the final predictions gather
+                     the column partials.
+
+    ``executable`` marks candidates the current launch layer can
+    actually run (task always; data/feature only for GRAM_FAMILIES,
+    through the standalone in-mesh executors in sharding/gram.py).
+    Pure pricing — no jax, no device access — so planner decisions are
+    deterministic and unit-testable.
+    """
+    params = dict(params or ())
+    b = max(int(n_tasks), 1)
+    m = max(int(n_devices), 1)
+    lo = launch_overhead_s()
+    f1 = megabatch_task_flops(learner, n_pad, p_pad, params)
+    by1 = megabatch_task_bytes(n_pad, p_pad)
+    gram_ok = learner in GRAM_FAMILIES
+    fits_page = n_pad <= DEVICE_PAGE_ROWS
+
+    def launch_cost(shards: int) -> float:
+        return lo * (1.0 + SHARD_OVERHEAD_FRAC * (shards - 1))
+
+    out: List[Tuple[str, int, float, bool]] = []
+    # ---- task axis: ceil(b/m) whole tasks per shard, no collectives
+    for shards in sorted({1, m}):
+        per_dev = float(int(np.ceil(b / shards)))
+        est = max(per_dev * f1 / PEAK_FLOPS, per_dev * by1 / HBM_BW) \
+            + launch_cost(shards)
+        out.append(("task", shards, est, fits_page))
+    if m == 1:
+        return out
+
+    # ---- data axis: blocked-Gram partials over N/m rows + psum(P^2)
+    if gram_ok or learner == "logistic":
+        chunk = max(int(np.ceil(n_pad / m)), 1)
+        gram_dev = b * chunked_gram_flops(n_pad, p_pad, chunk) / m
+        tail = b * _solve_flops(learner, n_pad, p_pad, params)
+        psum_rounds = 1.0 if learner != "logistic" \
+            else float(params.get("n_iter", 32))
+        psum_bytes = b * (p_pad * p_pad + p_pad) * 4.0 * psum_rounds
+        coll = psum_bytes * 2.0 * (m - 1) / m / ICI_BW
+        est = max((gram_dev + tail) / PEAK_FLOPS, by1 * b / m / HBM_BW) \
+            + coll + launch_cost(m)
+        out.append(("data", m, est, gram_ok))
+    else:
+        # no analytic data-parallel decomposition for this family
+        out.append(("data", m, float("inf"), False))
+
+    # ---- feature axis: P/m columns per shard + coefficient gathers
+    if gram_ok:
+        sweeps = float(params.get("n_iter", 200)) \
+            if learner == "lasso" else 1.0
+        gather_bytes = b * (n_pad * p_pad / m + sweeps * p_pad) * 4.0
+        coll = gather_bytes * (m - 1) / m / ICI_BW
+        est = max(f1 * b / m / PEAK_FLOPS, by1 * b / m / HBM_BW) \
+            + coll + launch_cost(m)
+        out.append(("feature", m, est, fits_page))
+    else:
+        out.append(("feature", m, float("inf"), False))
+    return out
+
+
 @dataclass
 class RooflineTerms:
     flops_per_dev: float

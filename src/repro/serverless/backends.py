@@ -174,8 +174,9 @@ class PoolConfig:
     steal: bool = True
     # same-shape block fusion (compile/program.py): pack equal-canonical-B
     # blocks of different requests into one launch (bitwise-equal to
-    # per-block launches; the sharded backend's partitioned programs
-    # never fuse regardless)
+    # per-block launches).  Since ISSUE 8 partitioned program caches fuse
+    # too: the sharded backends carry a partition_fused transform that
+    # wraps the lax.map fused body in shard_map over the host mesh
     fuse: bool = True
     # non-blocking dispatch: buckets a drain stream may hold in flight
     # before a push force-harvests the oldest (device-liveness bound)
@@ -439,6 +440,10 @@ class BackendRunInfo:
     autoscale: List[AutoscaleDecision] = field(default_factory=list)
     topology: Optional[object] = None   # per-host streams (TopologyInfo)
     dispatch: Optional[DispatchStats] = None  # in-flight queue accounting
+    # per-bucket parallelization-axis decisions (ISSUE 8): one
+    # compile.buckets.AxisDecision per (bucket, mesh) the drain priced,
+    # logged like autoscale decisions
+    axis_plans: List[object] = field(default_factory=list)
 
     @property
     def shared_waves(self) -> int:
@@ -471,6 +476,10 @@ class DrainState:
     # settles — books ledgers, bills, finalizes — when its last bucket
     # lands; the sanitizer requires this empty at drain retirement
     waves_inflight: List = field(default_factory=list)
+    # (bucket key, n_devices) -> AxisDecision memo: each bucket's
+    # parallelization axis is priced once per drain per mesh size
+    # (ISSUE 8); the decisions are also appended to info.axis_plans
+    axis_planned: Dict = field(default_factory=dict)
 
     @property
     def requests(self) -> List[WorkRequest]:
@@ -533,9 +542,13 @@ class _StreamBackend:
         return state
 
     def _fuse(self) -> bool:
-        """Same-shape block fusion is off for partitioned (shard_map)
-        program caches — the specs map a single block's operands."""
-        return self.pool.fuse and self.compiler.partition is None
+        """Same-shape block fusion for this stream's program cache.
+        Partitioned caches fuse only when they carry the sharded-fused
+        transform (ISSUE 8: shard_map around the lax.map fused body);
+        a partition-only cache still maps single-block operands."""
+        return self.pool.fuse and (
+            self.compiler.partition is None
+            or self.compiler.partition_fused is not None)
 
     def _dispatch_opts(self) -> Dict:
         """The launch-scheduling knobs every dispatch_bucket call takes:
@@ -641,6 +654,11 @@ class _BucketStreamBackend(_StreamBackend):
     def _b_align(self) -> int:
         return 1
 
+    def _plan_axis(self, state: DrainState, bkey, entries) -> None:
+        """Parallelization-axis planning hook (ISSUE 8): single-device
+        streams have nothing to shard, so the default is a no-op; the
+        mesh-owning backends price candidates and log AxisDecisions."""
+
     def _book_harvest(self, state: DrainState, pb: PendingBucket,
                       results: Dict, elapsed: float):
         """Booking callback the queue fires at harvest: ledgers, bills,
@@ -660,6 +678,7 @@ class _BucketStreamBackend(_StreamBackend):
                 return True
             return False
         bkey, entries = next(iter(groups.items()))
+        self._plan_axis(state, bkey, entries)
         running: Dict[int, List[int]] = {}
         for ri, inv in entries:
             running.setdefault(ri, []).append(inv)
@@ -698,11 +717,44 @@ class InlineBackend(_BucketStreamBackend):
 # ---------------------------------------------------------------------------
 # ShardedBackend — the bucket programs SPMD over a device mesh
 # ---------------------------------------------------------------------------
+def make_sharded_compiler(mesh) -> "ProgramCache":
+    """A ProgramCache whose programs SPMD over ``mesh``'s "data" axis.
+
+    Unfused programs shard the single-block specs (the PR 1 path);
+    fused launches go through the shard_map-wrapped ``lax.map`` form
+    (ISSUE 8, ``megabatch_specs(fused=True)``), so a partitioned cache
+    participates in same-shape fusion like an unpartitioned one.  The
+    mesh axes (names + sizes) become the cache's ``partition_axes`` —
+    part of every sharded-fused program's cache key.
+    """
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.policy import megabatch_specs
+    in_specs, out_specs = megabatch_specs("data")
+    fin_specs, fout_specs = megabatch_specs("data", fused=True)
+
+    def partition(fn):
+        return shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs)
+
+    def partition_fused(fn):
+        return shard_map_compat(fn, mesh=mesh, in_specs=fin_specs,
+                                out_specs=fout_specs)
+
+    axes = tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names)
+    return _compile().ProgramCache(partition=partition,
+                                   partition_fused=partition_fused,
+                                   partition_axes=axes)
+
+
 class ShardedBackend(_BucketStreamBackend):
     """The same megabatch programs with the task-batch axis shard_map'd
     over the mesh's "data" axis (pages replicated on every device;
-    sharding/policy.py::megabatch_specs).  Reuses launch/mesh.py meshes;
-    stays warm across requests via the spec-keyed ProgramCache."""
+    sharding/policy.py::megabatch_specs).  Fused launches shard too
+    (ISSUE 8): shard_map wraps the lax.map fused body, so same-shape
+    fusion survives partitioning.  Every bucket's parallelization axis
+    is roofline-priced (compile/buckets.py::plan_bucket_axis) and the
+    decision logged on BackendRunInfo.axis_plans.  Reuses launch/mesh.py
+    meshes; stays warm across requests via the spec-keyed ProgramCache."""
     name = "sharded"
 
     def __init__(self, pool: Optional[PoolConfig] = None, mesh=None):
@@ -725,19 +777,23 @@ class ShardedBackend(_BucketStreamBackend):
     def _b_align(self) -> int:
         return self._n_shards()
 
+    def _plan_axis(self, state: DrainState, bkey, entries) -> None:
+        """Price the bucket's parallelization-axis candidates on this
+        mesh and log the decision (once per bucket per drain)."""
+        memo_key = (bkey, self._n_shards())
+        if memo_key in state.axis_planned:
+            return
+        from repro.compile.buckets import plan_bucket_axis
+        decision = plan_bucket_axis(
+            bkey, n_tasks=len(entries), n_devices=self._n_shards())
+        state.axis_planned[memo_key] = decision
+        if decision is not None:
+            state.info.axis_plans.append(decision)
+
     @property
     def compiler(self) -> ProgramCache:
         if self._compiler is None:
-            from repro.sharding.compat import shard_map_compat
-            from repro.sharding.policy import megabatch_specs
-            in_specs, out_specs = megabatch_specs("data")
-            mesh = self.mesh
-
-            def partition(fn):
-                return shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
-                                        out_specs=out_specs)
-
-            self._compiler = _compile().ProgramCache(partition=partition)
+            self._compiler = make_sharded_compiler(self.mesh)
         return self._compiler
 
     @property
@@ -852,6 +908,53 @@ class WaveBackend(_StreamBackend):
         return pool.simulate or pool.straggler_rate > 0 \
             or pool.failure_rate > 0
 
+    def _fill_bucket_coherent(self, state: DrainState,
+                              pendings: List[np.ndarray],
+                              capacity: int) -> List[_Entry]:
+        """Fill a pipelined wave in whole-bucket units.
+
+        Round-robin admission is fair but fragments a bucket's canonical
+        tail blocks across waves: a 24-lane bucket cut 6/18 by the
+        capacity limit pads to 8 + 24 lanes instead of one 24-lane
+        launch — the steady-state padding waste the asyncdrain bench
+        gates on.  So buckets small enough to ever travel whole are
+        taken whole (in round-robin first-appearance order) or deferred
+        to the next wave; only buckets larger than a full wave are
+        split, and those split round-robin across each other so
+        concurrent oversize requests still share dispatch cycles."""
+        rr: List[_Entry] = []
+        cursors = [0] * len(pendings)
+        while True:
+            progressed = False
+            for ri, p in enumerate(pendings):
+                if cursors[ri] < len(p):
+                    rr.append(_Entry(ri, int(p[cursors[ri]])))
+                    cursors[ri] += 1
+                    progressed = True
+            if not progressed:
+                break
+        groups = state.plan.group_entries([(e.req_idx, e.inv) for e in rr])
+        batch: List[_Entry] = []
+        oversized: List[List[Tuple[int, int]]] = []
+        for ents in groups.values():           # first-appearance order
+            if len(ents) > capacity:
+                oversized.append(ents)         # can never travel whole
+            elif len(ents) <= capacity - len(batch):
+                batch.extend(_Entry(ri, inv) for ri, inv in ents)
+            # else: whole-bucket sized but no room left — defer intact
+        cur = [0] * len(oversized)
+        while len(batch) < capacity:
+            progressed = False
+            for gi, ents in enumerate(oversized):
+                if cur[gi] < len(ents) and len(batch) < capacity:
+                    ri, inv = ents[cur[gi]]
+                    batch.append(_Entry(ri, inv))
+                    cur[gi] += 1
+                    progressed = True
+            if not progressed:
+                break
+        return batch
+
     def step(self, state: DrainState) -> bool:
         """Dispatch one wave — and, fault-free, pipeline it: the wave's
         buckets stay in flight while the next step fills and stacks
@@ -888,18 +991,23 @@ class WaveBackend(_StreamBackend):
         n_workers = self._wave_workers(state, pendings)
         capacity = max(1, n_workers * pool.lanes_per_worker())
 
-        # ---- fill the wave: round-robin across requests -----------------
-        batch: List[_Entry] = []
-        cursors = [0] * len(requests)
-        while len(batch) < capacity:
-            progressed = False
-            for ri, p in enumerate(pendings):
-                if cursors[ri] < len(p) and len(batch) < capacity:
-                    batch.append(_Entry(ri, int(p[cursors[ri]])))
-                    cursors[ri] += 1
-                    progressed = True
-            if not progressed:
-                break
+        # ---- fill the wave ----------------------------------------------
+        if pipelined:
+            batch = self._fill_bucket_coherent(state, pendings, capacity)
+        else:
+            # legacy round-robin fill: chaos pools pin the per-slot
+            # Philox draw order, so the pre-pipelined order must not move
+            batch = []
+            cursors = [0] * len(requests)
+            while len(batch) < capacity:
+                progressed = False
+                for ri, p in enumerate(pendings):
+                    if cursors[ri] < len(p) and len(batch) < capacity:
+                        batch.append(_Entry(ri, int(p[cursors[ri]])))
+                        cursors[ri] += 1
+                        progressed = True
+                if not progressed:
+                    break
         spare = capacity - len(batch)
         dispatch = list(batch)
         if spare > 0 and pool.straggler_rate > 0 and batch:

@@ -32,12 +32,24 @@ and one drain stream.  ``TopologyBackend`` is the scheduler over them:
     per-bucket roofline FLOP estimates
     (``launch/roofline.py::invocation_roofline_s``) until measured
     durations take over.
+  * **axis planning** (ISSUE 8) — every bucket's parallelization axis
+    is roofline-priced on its host's own mesh
+    (``compile/buckets.py::plan_bucket_axis``): compute-heavy buckets
+    dispatch as sharded-fused launches (shard_map around the lax.map
+    fused body) through a per-host program cache built on that host's
+    mesh, small serving buckets stay single-device, and data/feature
+    decisions are logged for the standalone in-mesh executors
+    (sharding/gram.py).  Decisions land on
+    ``BackendRunInfo.axis_plans`` like autoscale decisions.
 
 Determinism: placement and stealing only decide *where* a bucket's
 fixed-shape program runs; per-task PRNG streams are fixed at compile
-time, so the topology drain is bitwise-identical to the single-host
-inline path for every learner family (tests/test_topology.py, gated in
-CI by BENCH_topology.json).
+time, so buckets the planner keeps on the task@1 layout (the whole
+serving mix) are bitwise-identical to the single-host inline path
+(tests/test_topology.py, gated in CI by BENCH_topology.json).  Buckets
+routed to a host's sharded-fused cache inherit that path's parity
+tier: bitwise on 1-device hosts, ~1e-6 float tolerance on multi-device
+hosts (see the B_BLOCK caveat in compile/program.py).
 """
 from __future__ import annotations
 
@@ -50,7 +62,7 @@ from repro.compile.pages import PageDirectory, PagePool, PageStats
 from repro.serverless.autoscale import TopologyAutoscaler
 from repro.serverless.backends import (
     BackendRunInfo, DrainState, PoolConfig, _compile, _StreamBackend,
-    roofline_pending_inv_s,
+    make_sharded_compiler, roofline_pending_inv_s,
 )
 from repro.serverless.dispatch import (
     DispatchQueue, DispatchStats, PendingBucket,
@@ -193,6 +205,12 @@ class TopologyBackend(_StreamBackend):
                 self.pool.page_pool_bytes or 0)
         self.topology = topology
         self.compiler = _compile().ProgramCache()
+        # per-host sharded program caches (ISSUE 8): lazily built on each
+        # host's own mesh so a bucket the axis planner prices as
+        # task-parallel-over-the-mesh dispatches as a sharded-fused
+        # launch on that mesh.  All host caches feed the shared
+        # CompileStats so session telemetry stays one block.
+        self._host_compilers: Dict[int, object] = {}
         self.autoscaler = TopologyAutoscaler(self.pool, len(topology)) \
             if self.pool.autoscale else None
         self.pages = None               # per-host pools live on the topology
@@ -283,6 +301,46 @@ class TopologyBackend(_StreamBackend):
         info.hosts[thief].steals += 1
         return [key]
 
+    # ---- per-bucket axis planning (ISSUE 8) ---------------------------
+    def _host_compiler(self, host_id: int):
+        """This host's sharded-fused program cache, lazily built on its
+        own mesh.  Shares the backend-wide CompileStats so per-host
+        caches don't fragment session telemetry."""
+        cache = self._host_compilers.get(host_id)
+        if cache is None:
+            cache = make_sharded_compiler(self.topology.hosts[host_id].mesh)
+            cache.stats = self.compiler.stats
+            self._host_compilers[host_id] = cache
+        return cache
+
+    def _plan_host_axis(self, state, key, entries, host_id: int):
+        """Price the bucket's axis candidates on the owning host's mesh
+        (once per (bucket, mesh size) per drain) and log the decision."""
+        host = self.topology.hosts[host_id]
+        memo_key = (key, host.n_devices)
+        if memo_key in state.axis_planned:
+            return state.axis_planned[memo_key]
+        from repro.compile.buckets import plan_bucket_axis
+        decision = plan_bucket_axis(key, n_tasks=len(entries),
+                                    n_devices=host.n_devices)
+        state.axis_planned[memo_key] = decision
+        if decision is not None:
+            state.info.axis_plans.append(decision)
+        return decision
+
+    def _bucket_compiler(self, host_id: int, decision):
+        """(program cache, b_align) one bucket dispatches through on
+        this host: the host-mesh sharded-fused cache when the planner
+        picked an m-way task layout, else the shared single-device
+        cache.  Data/feature decisions also dispatch single-device here
+        — those layouts run through the standalone in-mesh executors
+        (sharding/gram.py), the drain prices and logs them."""
+        if decision is not None and decision.axis == "task" \
+                and decision.shards > 1 \
+                and self.topology.hosts[host_id].n_devices > 1:
+            return self._host_compiler(host_id), decision.shards
+        return self.compiler, 1
+
     # ---- the per-host wave --------------------------------------------
     def _wave_capacity(self, state, host_id: int, mine, groups) -> int:
         pool = self.pool
@@ -353,9 +411,18 @@ class TopologyBackend(_StreamBackend):
                 running.setdefault(ri, []).append(inv)
             for ri, invs in running.items():
                 state.requests[ri].ledger.mark_running(invs)
+            decision = self._plan_host_axis(state, key, ents, host_id)
+            compiler, b_align = self._bucket_compiler(host_id, decision)
+            opts = dict(self._dispatch_opts())
+            # fusion follows the *chosen* cache, not the shared one: a
+            # host's sharded-fused cache fuses, a partition-only cache
+            # would not (compile/program.py gate)
+            opts["fuse"] = self.pool.fuse and (
+                compiler.partition is None
+                or compiler.partition_fused is not None)
             bd = _compile().dispatch_bucket(
-                state.plan, self.compiler, key, ents, pages=host_pages,
-                **self._dispatch_opts())
+                state.plan, compiler, key, ents, pages=host_pages,
+                b_align=b_align, **opts)
             q.push(PendingBucket(dispatch=bd, host=host_id), book)
             state.seen_buckets.add(key)
         lane.waves += 1

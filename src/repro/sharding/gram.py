@@ -1,0 +1,122 @@
+"""In-mesh executors for the non-task parallelization axes (ISSUE 8).
+
+The axis planner (compile/buckets.py::plan_bucket_axis) prices three
+layouts per bucket; this module supplies the two that split *inside* a
+task, for the Gram-based families whose fit is a pure function of the
+(X'X, X'y) statistics:
+
+``data_parallel_gram``     shards the N axis over the mesh: every
+                           device accumulates a partial Gram over its
+                           N/m rows (the same masked-moment math as the
+                           streaming blocked kernel) and a psum
+                           reassembles the exact statistics.  The only
+                           layout that can run a bucket whose N exceeds
+                           one device page — pair with
+                           ``kernels/ops.py::chunk_tall_n`` +
+                           ``batched_gram_blocked`` to stream arbitrarily
+                           tall N through fixed-size chunks.
+``feature_parallel_gram``  shards the P axis (LightGBM's
+                           feature-parallel analogue): each device owns
+                           P/m columns, gathers the row dimension it
+                           needs, and emits its column block of the
+                           Gram; the blocks concatenate into the full
+                           (P, P) statistics.
+
+Both agree with the single-device statistics to float tolerance, never
+bitwise: the data split changes the N-axis reduction tree, and the
+feature split's narrower column blocks let XLA retile the N
+contraction — the same explicit tolerance tier as the blocked kernel's
+ragged-tail case (kernels/ops.py::BLOCKED_GRAM_TOLERANCE_FAMILIES
+documents the bitwise/tolerance split).  The unsharded task-parallel
+axis remains the bitwise reference path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.compat import shard_map_compat
+
+F32 = jnp.float32
+
+
+@functools.lru_cache(maxsize=None)
+def _data_gram_fn(mesh, axis: str):
+    """Jitted N-sharded Gram executor, cached per (mesh, axis) so a
+    drain's repeated calls hit the warm compiled program instead of
+    re-tracing a fresh shard_map closure every launch."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(xs, w, y):
+        xf, wf, yf = xs.astype(F32), w.astype(F32), y.astype(F32)
+        g = jnp.einsum("bnp,bn,bnq->bpq", xf, wf, xf)
+        b = jnp.einsum("bn,bnp->bp", wf * yf, xf)
+        g = jax.lax.psum(g, axis)
+        b = jax.lax.psum(b, axis)
+        return g, b
+
+    return jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis), P(None, axis)),
+        out_specs=(P(), P())))
+
+
+def data_parallel_gram(mesh, xs, w, y, reg: float = 0.0,
+                       axis: str = "data"):
+    """Per-task normal equations with the N axis sharded over ``mesh``.
+
+    xs: (B, N, P); w/y: (B, N).  N must be a multiple of the axis size
+    (callers pad with w == 0 rows, which are arithmetically inert).
+    Each device reduces its local rows — exactly one chunk of the
+    streaming blocked Gram — and a psum sums the partials into the full
+    (G (B,P,P), b (B,P)) on every device.
+    """
+    g, b = _data_gram_fn(mesh, axis)(xs, w, y)
+    if reg:
+        g = g + reg * jnp.eye(xs.shape[-1], dtype=g.dtype)
+    return g, b
+
+
+@functools.lru_cache(maxsize=None)
+def _feature_gram_fn(mesh, axis: str):
+    """Jitted P-sharded Gram executor, cached per (mesh, axis) — same
+    warm-call economics as ``_data_gram_fn``."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(xs, w, y):
+        xf, wf, yf = xs.astype(F32), w.astype(F32), y.astype(F32)
+        # full row matrix on every device: the priced all-gather
+        x_full = jax.lax.all_gather(xf, axis, axis=2, tiled=True)
+        g_blk = jnp.einsum("bnp,bn,bnq->bpq", x_full, wf, xf)
+        b_blk = jnp.einsum("bn,bnp->bp", wf * yf, xf)
+        return g_blk, b_blk
+
+    return jax.jit(shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, None, axis), P(None, None), P(None, None)),
+        out_specs=(P(None, None, axis), P(None, axis))))
+
+
+def feature_parallel_gram(mesh, xs, w, y, reg: float = 0.0,
+                          axis: str = "data"):
+    """Per-task normal equations with the P axis sharded over ``mesh``.
+
+    xs: (B, N, P); w/y: (B, N).  P must be a multiple of the axis size.
+    Each device holds its P/m columns, all-gathers the full row matrix
+    (the wire term the planner prices), computes its (P, P/m) column
+    block of the Gram and its slice of X'(w*y), and the blocks
+    concatenate back into the full statistics.
+    """
+    g, b = _feature_gram_fn(mesh, axis)(xs, w, y)
+    if reg:
+        g = g + reg * jnp.eye(xs.shape[-1], dtype=g.dtype)
+    return g, b
+
+
+def gram_solve(g, b):
+    """The shared ridge/OLS epilogue on reassembled statistics: solve
+    G beta = b per task.  Runs replicated — the planner prices the
+    solve as unsplittable (launch/roofline.py::_solve_flops)."""
+    return jnp.linalg.solve(g, b[..., None])[..., 0]

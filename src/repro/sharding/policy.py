@@ -57,7 +57,8 @@ VARIANTS: Dict[str, Variant] = {v.name: v for v in [
 
 
 def megabatch_specs(batch_axis: str = "data",
-                    pages_axis: Optional[str] = None):
+                    pages_axis: Optional[str] = None, *,
+                    fused: bool = False):
     """PartitionSpecs for a megabatch bucket program (repro/compile).
 
     The program signature is (pages, data_idx, y, w, valid, key_data) ->
@@ -71,11 +72,19 @@ def megabatch_specs(batch_axis: str = "data",
     buckets' pages; callers must then also route each bucket's task
     slices to the shard holding its pages (ROADMAP "multi-host
     megabatch").
+
+    ``fused=True`` (ISSUE 8) returns specs for the *fused* calling
+    convention, where every per-task operand carries a leading canonical
+    block axis G: the G axis is replicated (each shard runs all blocks)
+    and the task-batch axis — now axis 1 — is sharded.  A PartitionSpec
+    shorter than the operand rank leaves the trailing dims (N_pad, key
+    tail) unsharded, so one spec covers all fused operand ranks.
     """
     from jax.sharding import PartitionSpec as P
-    in_specs = (P(pages_axis) if pages_axis else P(), P(batch_axis),
-                P(batch_axis), P(batch_axis), P(batch_axis), P(batch_axis))
-    out_specs = P(batch_axis)
+    pages = P(pages_axis) if pages_axis else P()
+    task = P(None, batch_axis) if fused else P(batch_axis)
+    in_specs = (pages, task, task, task, task, task)
+    out_specs = task
     return in_specs, out_specs
 
 

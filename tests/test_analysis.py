@@ -133,6 +133,43 @@ def test_vmap_fused_program_fails_jaxpr_audit():
     assert ja.audit_fused_pair(single, good, "ols/fused") == []
 
 
+def test_vmap_sharded_fused_fails_jaxpr_audit():
+    """The ISSUE 8 sharded-fused contract: shard_map(lax.map body) is
+    bitwise because each device runs the per-block program unchanged —
+    a vmap-built body inside the shard must still be rejected."""
+    from repro.analysis import jaxpr_audit as ja
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.policy import megabatch_specs
+
+    run, run_fused = ja._program_pair("ols")
+    single = jax.make_jaxpr(run)(*ja._probe_avals(fused=False))
+    in_specs, out_specs = megabatch_specs("data", fused=True)
+    mesh = make_host_mesh()
+
+    def run_vmapped(pages, data_idx, y, w, valid, key_data):
+        return jax.vmap(lambda *t: run(pages, *t))(
+            data_idx, y, w, valid, key_data)
+
+    bad_fn = shard_map_compat(run_vmapped, mesh=mesh,
+                              in_specs=in_specs, out_specs=out_specs)
+    bad = jax.make_jaxpr(bad_fn)(*ja._probe_avals(fused=True))
+    rules = {f.rule for f in ja.audit_sharded_fused(single, bad,
+                                                    "ols/mut")}
+    assert "sharded-fused-wraps-scan" in rules
+    # and the real shard_map(lax.map) build passes the same check
+    good_fn = shard_map_compat(run_fused, mesh=mesh,
+                               in_specs=in_specs, out_specs=out_specs)
+    good = jax.make_jaxpr(good_fn)(*ja._probe_avals(fused=True))
+    assert ja.audit_sharded_fused(single, good, "ols/sf") == []
+    # a bare (unsharded) fused program must also be rejected: the
+    # sharded-fused cache's contract is shard_map at the top
+    bare = jax.make_jaxpr(run_fused)(*ja._probe_avals(fused=True))
+    assert {f.rule for f in ja.audit_sharded_fused(single, bare,
+                                                   "ols/bare")} \
+        == {"sharded-fused-wraps-scan"}
+
+
 def test_data_derived_prng_fails_taint_analysis():
     from repro.analysis import jaxpr_audit as ja
     run, _ = ja._program_pair("ols")

@@ -399,6 +399,132 @@ def test_morph_tolerance_gate():
     assert morph_allowed(ridge, 0.0)       # bitwise tier needs no opt-in
 
 
+@pytest.mark.parametrize("name,params", FUSION_FAMILIES)
+def test_sharded_fused_launch_bitwise_parity(name, params):
+    """The ISSUE 8 sharded-fusion contract (the B_BLOCK caveat in
+    compile/program.py points here): a partitioned cache with a fused
+    partition hook launches shard_map(lax.map body) and reproduces the
+    unsharded fused launch — BITWISE on a 1-device mesh, and to the
+    established sharded float tier (1e-6, same as the unfused sharded
+    path) on an m-way mesh, where each shard compiles the body at B/m
+    lanes and XLA may retile small-B reductions.  The multihost-smoke
+    job runs this 8-way where the shard really splits."""
+    from repro.compile import ProgramCache
+    from repro.launch.mesh import make_host_mesh
+    from repro.serverless.backends import make_sharded_compiler
+    cases = [_plr(97 + i, seed=30 + i, learner=name, learner_params=params)
+             for i in range(2)]                    # all align to N=104
+    reqs = [compile_request(p, d) for p, d in cases]
+    bplan = plan_buckets(reqs)
+    (bkey,) = bplan.buckets
+    entries = [(ri, int(i)) for ri, req in enumerate(reqs)
+               for i in req.ledger.pending()]
+
+    base, _ = run_bucket(bplan, ProgramCache(), bkey, entries, fuse=True)
+
+    mesh = make_host_mesh()
+    sharded = make_sharded_compiler(mesh)
+    assert sharded.partition_fused is not None
+    res, _ = run_bucket(bplan, sharded, bkey, entries, fuse=True,
+                        b_align=mesh.shape["data"])
+    assert sharded.stats.fused_launches >= 1       # really took the path
+    for e in entries:
+        if mesh.shape["data"] == 1:
+            np.testing.assert_array_equal(res[e], base[e])
+        else:
+            np.testing.assert_allclose(res[e], base[e], rtol=1e-6,
+                                       atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-bucket parallelization-axis planner (ISSUE 8)
+# ---------------------------------------------------------------------------
+def test_axis_planner_pinned_decisions():
+    """The roofline planner's choices on the canonical shapes, pinned so
+    a pricing-model edit that flips a layout is a visible diff:
+
+      * tall-N Gram bucket (N_pad exceeds one device page): only the
+        data-parallel blocked-Gram layout is executable — data@8;
+      * wide-P lasso (huge P, many sweeps, one task): the column split
+        amortizes its all-gather — feature@8;
+      * many small tasks: per-task work is below the shard tax —
+        task@1 (classic serverless task parallelism);
+      * compute-heavy mlp bucket (non-Gram): only the task axis exists,
+        and the per-task work amortizes the multi-shard launch —
+        task@8."""
+    from repro.compile.buckets import BucketKey, plan_bucket_axis
+
+    def decide(learner, ptuple, n_pad, p_pad, b):
+        key = BucketKey(learner=(learner, ptuple), n_pad=n_pad, p_pad=p_pad)
+        return plan_bucket_axis(key, n_tasks=b, n_devices=8)
+
+    tall = decide("ridge", (("reg", 1.0),), 1 << 17, 8, 4)
+    assert (tall.axis, tall.shards) == ("data", 8)
+    # the task candidates really were inexecutable, not merely pricier
+    assert all(not ok for ax, _, _, ok in tall.candidate_costs
+               if ax == "task")
+
+    wide = decide("lasso", (("reg", 0.01), ("n_iter", 500)), 4096, 16384, 1)
+    assert (wide.axis, wide.shards) == ("feature", 8)
+
+    small = decide("ols", (), 256, 16, 64)
+    assert (small.axis, small.shards) == ("task", 1)
+
+    mlp = decide("mlp", (("hidden", (32,)), ("n_steps", 300)), 2048, 32, 32)
+    assert (mlp.axis, mlp.shards) == ("task", 8)
+
+
+def test_axis_planner_never_picks_strictly_worse():
+    """By construction the decision is the argmin over executable
+    candidates — sweep a shape grid and verify no executable candidate
+    is priced strictly cheaper than the chosen one."""
+    from repro.compile.buckets import BucketKey, plan_bucket_axis
+    shapes = [("ridge", (("reg", 1.0),)), ("ols", ()),
+              ("lasso", (("reg", 0.01), ("n_iter", 200))),
+              ("logistic", (("reg", 1.0), ("n_iter", 100))),
+              ("mlp", (("hidden", (8,)), ("n_steps", 100)))]
+    for learner, ptuple in shapes:
+        for n_pad in (256, 4096, 1 << 17):
+            for b in (1, 16, 64):
+                key = BucketKey((learner, ptuple), n_pad, 32)
+                d = plan_bucket_axis(key, n_tasks=b, n_devices=8)
+                best = d.est_s
+                for ax, sh, est, ok in d.candidate_costs:
+                    if ok:
+                        assert est >= best or (ax, sh) == (d.axis, d.shards)
+
+
+def test_axis_planner_opaque_and_nongram_fallbacks():
+    """Opaque buckets get no decision (they always run task-parallel
+    unsharded); a tall-N non-Gram family has NO executable candidate and
+    falls back to the task axis rather than crashing."""
+    from repro.compile.buckets import BucketKey, plan_bucket_axis
+    assert plan_bucket_axis(BucketKey(("opaque", 123), 256, 8),
+                            n_tasks=4, n_devices=8) is None
+    tallmlp = plan_bucket_axis(
+        BucketKey(("mlp", (("hidden", (8,)), ("n_steps", 100))),
+                  1 << 17, 8), n_tasks=4, n_devices=8)
+    assert tallmlp.axis == "task"
+    assert all(not ok for _, _, _, ok in tallmlp.candidate_costs)
+
+
+def test_sharded_backend_logs_axis_plans():
+    """The drain engine prices each spec-identified bucket once per mesh
+    and logs the decision on BackendRunInfo.axis_plans, autoscale-style."""
+    from repro.serverless.backends import ShardedBackend
+    plan, data = _plr(100, seed=40)
+    req = compile_request(plan, data)
+    info = ShardedBackend(PoolConfig(n_workers=3, memory_mb=512)) \
+        .run_requests([req])
+    assert len(info.axis_plans) >= 1
+    d = info.axis_plans[0]
+    assert d.axis in ("task", "data", "feature")
+    assert d.priced_by == "roofline"
+    assert d.candidate_costs                     # full table logged
+    # serving-size ridge buckets stay classic task-parallel
+    assert d.axis == "task"
+
+
 def test_out_of_order_harvest_parity():
     """Non-blocking dispatch: buckets harvested in reverse dispatch
     order return exactly what the synchronous path returns."""

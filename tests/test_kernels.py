@@ -9,7 +9,8 @@ from repro.kernels import ref
 from repro.kernels.crossfit_gram import crossfit_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.megabatch import (
-    batched_gram_pallas, batched_predict_pallas,
+    batched_gram_blocked_pallas, batched_gram_pallas,
+    batched_predict_pallas,
 )
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -127,6 +128,117 @@ def test_batched_predict_masks_padding(b, n, p, bn):
     np.testing.assert_allclose(np.asarray(o), np.asarray(o0), rtol=1e-4,
                                atol=1e-4)
     assert float(jnp.max(jnp.abs(jnp.where(valid == 0, o, 0.0)))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# streaming blocked Gram (ISSUE 8 tall-N path)
+# ---------------------------------------------------------------------------
+def _tall_case(b, n, p, seed=0):
+    k = jax.random.key(seed)
+    xs = jax.random.normal(k, (b, n, p), jnp.float32)
+    w = (jax.random.uniform(jax.random.fold_in(k, 1), (b, n)) > 0.3) \
+        .astype(jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(k, 2), (b, n), jnp.float32)
+    return xs, w, y
+
+
+@pytest.mark.parametrize("chunk", [256, 512])
+def test_blocked_gram_pallas_bitwise_on_exact_tiling(chunk):
+    """Exact tiling (chunk divides N at kernel-block boundaries) keeps
+    the blocked kernel's partial-sum order identical to the unblocked
+    kernel's n-block loop: BITWISE equality, the contract the Gram
+    families (BLOCKED_GRAM_BITWISE_FAMILIES) rely on.  chunk == N is
+    the single-chunk degenerate case."""
+    from repro.kernels import ops
+    b, n, p = 8, 512, 16
+    xs, w, y = _tall_case(b, n, p, seed=chunk)
+    xs_pad = jnp.pad(xs, ((0, 0), (0, 0), (0, 128 - p)))
+    g0, b0 = batched_gram_pallas(xs_pad, w, y, block_b=8, block_n=256,
+                                 interpret=True)
+    xc, wc, yc = ops.chunk_tall_n(xs_pad, w, y, chunk)
+    g, bv = batched_gram_blocked_pallas(xc, wc, yc, block_b=8,
+                                        block_n=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g0))
+    np.testing.assert_array_equal(np.asarray(bv), np.asarray(b0))
+
+
+@pytest.mark.parametrize("n,chunk", [(1024, 256), (512, 512), (768, 128)])
+def test_blocked_gram_ops_bitwise_exact_tiling(n, chunk):
+    """The ops-level wrapper pair: chunk_tall_n + batched_gram_blocked
+    reproduces batched_gram bitwise whenever the chunk grid tiles N
+    exactly (including the reg epilogue)."""
+    from repro.kernels import ops
+    xs, w, y = _tall_case(4, n, 12, seed=n)
+    g0, b0 = ops.batched_gram(xs, w, y, reg=0.5)
+    xc, wc, yc = ops.chunk_tall_n(xs, w, y, chunk)
+    g, bv = ops.batched_gram_blocked(xc, wc, yc, reg=0.5)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g0))
+    np.testing.assert_array_equal(np.asarray(bv), np.asarray(b0))
+
+
+@pytest.mark.parametrize("n,chunk", [(1000, 384), (700, 256)])
+def test_blocked_gram_ragged_tail_tolerance(n, chunk):
+    """A ragged tail (chunk does not divide N) re-chunks the N-axis
+    reduction tree, so equality is the explicit ~1e-4 tolerance tier —
+    never bitwise, and tests must not pretend otherwise."""
+    from repro.kernels import ops
+    xs, w, y = _tall_case(4, n, 12, seed=n)
+    g0, b0 = ops.batched_gram(xs, w, y)
+    xc, wc, yc = ops.chunk_tall_n(xs, w, y, chunk)
+    assert xc.shape[1] * xc.shape[2] > n          # really padded
+    g, bv = ops.batched_gram_blocked(xc, wc, yc)
+    scale = max(float(jnp.max(jnp.abs(g0))), 1.0)
+    assert float(jnp.max(jnp.abs(g - g0))) / scale < 1e-3
+    bscale = max(float(jnp.max(jnp.abs(b0))), 1.0)
+    assert float(jnp.max(jnp.abs(bv - b0))) / bscale < 1e-3
+
+
+def test_blocked_gram_masked_padding_rows_inert():
+    """Zero-weight padded rows are exact no-ops: garbage feature values
+    in w == 0 rows produce bitwise the same statistics as zero rows —
+    the proof obligation for chunk_tall_n's tail padding."""
+    from repro.kernels import ops
+    xs, w, y = _tall_case(4, 512, 12, seed=7)
+    xc, wc, yc = ops.chunk_tall_n(xs, w, y, 256)
+    # poison the last 100 rows of the final chunk and zero their weight
+    wc = wc.at[:, -1, -100:].set(0.0)
+    poisoned = xc.at[:, -1, -100:, :].set(1e6)
+    zeroed = xc.at[:, -1, -100:, :].set(0.0)
+    yp = yc.at[:, -1, -100:].set(1e6)
+    g1, b1 = ops.batched_gram_blocked(poisoned, wc, yp)
+    g2, b2 = ops.batched_gram_blocked(zeroed, wc, yc)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_data_and_feature_parallel_gram_executors():
+    """The in-mesh executors for the planner's non-task axes agree with
+    the single-device statistics to the documented tolerance tier:
+    data-parallel psums row-shard partials (reduction tree changes) and
+    feature-parallel's narrower column blocks let XLA retile the N
+    contraction — neither is a bitwise path (task-parallel is)."""
+    from jax.sharding import Mesh
+    from repro.kernels import ref
+    from repro.sharding.gram import (
+        data_parallel_gram, feature_parallel_gram, gram_solve,
+    )
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    m = mesh.shape["data"]
+    b, n, p = 4, 64 * max(m, 2), 8 * max(m, 2)
+    xs, w, y = _tall_case(b, n, p, seed=5)
+    g0, b0 = ref.batched_gram_ref(xs, w, y)
+    gd, bd = data_parallel_gram(mesh, xs, w, y)
+    scale = max(float(jnp.max(jnp.abs(g0))), 1.0)
+    assert float(jnp.max(jnp.abs(gd - g0))) / scale < 1e-3
+    gf, bf = feature_parallel_gram(mesh, xs, w, y)
+    assert float(jnp.max(jnp.abs(gf - g0))) / scale < 1e-3
+    bscale = max(float(jnp.max(jnp.abs(b0))), 1.0)
+    assert float(jnp.max(jnp.abs(bf - b0))) / bscale < 1e-3
+    # reassembled statistics solve to the same coefficients
+    beta = gram_solve(gd + 0.1 * jnp.eye(p), bd)
+    beta0 = gram_solve(g0 + 0.1 * jnp.eye(p), b0)
+    np.testing.assert_allclose(np.asarray(beta), np.asarray(beta0),
+                               rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
