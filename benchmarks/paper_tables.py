@@ -661,10 +661,18 @@ def axis_planner(fast: bool = True, repeats: int = 3) -> Dict:
         launch on a ridge bucket, unsharded cache vs
         ``make_sharded_compiler(mesh)``, plus a measured
         parallel-headroom probe (m sequential matmuls vs one shard_map
-        over the mesh) so the CI gate only demands speedup > 1 where the
-        host really has spare cores — a 1-vCPU runner cannot win by
-        sharding, and there the gate keeps only a sanity floor against
-        catastrophic regressions (e.g. per-call retracing).
+        over the mesh).  The probe calibrates ``speedup_floor``
+        (ISSUE 9): the CI gate demands parity-or-better where the host
+        really has spare cores and decays to a catastrophic-overhead
+        sanity floor on saturated or 1-device runners — a 1-vCPU
+        runner cannot win by sharding;
+      * end-to-end tall-N drain (ISSUE 9) — a ridge bucket made tall
+        relative to an overridden page ceiling drains twice through
+        ``ShardedBackend``: once executing the planner's chunk-paged
+        data layout, once with the axis mesh withheld (HEAD's
+        price-then-ignore behavior).  Reports tasks/s for both, the
+        decision->executed mix from ``BackendRunInfo.axis_plans``, and
+        feeds the planner-executed-never-strictly-worse CI gate.
     """
     import os
 
@@ -779,6 +787,75 @@ def axis_planner(fast: bool = True, repeats: int = 3) -> Dict:
                            b_align=m))
     assert sharded.stats.fused_launches >= 1
 
+    # the headroom-calibrated speedup floor (ISSUE 9): on a host with
+    # real parallel headroom the gate demands parity-or-better (1.0);
+    # on a saturated 1-vCPU runner it decays toward the catastrophic-
+    # overhead floor (0.35 — below that the sharded path is retracing).
+    # A 1-device mesh can never win by sharding (only the wrapper tax
+    # shows), so it keeps just the catastrophic floor.
+    speedup_floor = 0.35 if m == 1 \
+        else min(max(0.6 * headroom, 0.35), 1.0)
+
+    # ---- end-to-end tall-N drain: executed data axis vs forced task --
+    # A bucket made tall relative to an overridden device-page ceiling
+    # so the chunk-paged data layout engages at bench size: the planner
+    # arm drains through ShardedBackend (decision executed in-mesh);
+    # the task arm is the same backend with its axis mesh withheld —
+    # exactly HEAD's behavior of pricing-then-ignoring the plan.
+    from repro.launch import roofline
+    from repro.serverless import ShardedBackend
+
+    e2e_n = 2048 if fast else 8192
+    e2e_page = 256 if fast else 1024
+    e2e_data = DMLData.from_dict(make_plr_data(
+        n_obs=e2e_n, dim_x=8, theta=0.5, seed=90))
+    e2e_plan = DMLPlan.for_model("plr", learner="ridge",
+                                 learner_params={"reg": 1.0}, n_folds=3,
+                                 n_rep=2, seed=91)
+    saved_page = roofline.DEVICE_PAGE_ROWS
+    roofline.DEVICE_PAGE_ROWS = e2e_page
+    try:
+        arms = {}
+        plans_seen = []
+        for arm in ("task", "data"):
+            backend = ShardedBackend()
+            if arm == "task":
+                backend._axis_mesh = lambda: None
+            n_inv = None
+
+            def drain():
+                nonlocal n_inv
+                req = compile_request(e2e_plan, e2e_data)
+                n_inv = len(req.ledger.pending())
+                info = backend.run_requests([req])
+                plans_seen[:] = info.axis_plans
+                return []              # timeit blocks on the drain
+
+            arms[arm] = n_inv_s = timeit(drain)
+            arms[arm] = {"s": n_inv_s, "tasks_per_sec": n_inv / n_inv_s}
+            if arm == "data":
+                executed_mix = {}
+                for d in plans_seen:
+                    k = f"{d.axis}->{d.executed}"
+                    executed_mix[k] = executed_mix.get(k, 0) + 1
+    finally:
+        roofline.DEVICE_PAGE_ROWS = saved_page
+    e2e = {
+        "n_obs": e2e_n,
+        "page_rows_override": e2e_page,
+        "task_axis_tasks_per_sec": arms["task"]["tasks_per_sec"],
+        "executed_data_tasks_per_sec": arms["data"]["tasks_per_sec"],
+        "speedup_data_vs_task": (arms["data"]["tasks_per_sec"]
+                                 / max(arms["task"]["tasks_per_sec"],
+                                       1e-12)),
+        # planner axis -> executed axis counts from the drained
+        # decisions (BackendRunInfo.axis_plans): the drain must have
+        # *run* the chunk-paged data layout, not fallen back
+        "decision_vs_executed": executed_mix,
+        "planned_executed": all(d.executed == d.axis
+                                for d in plans_seen),
+    }
+
     return {
         "mesh_devices": m,
         "host_cores": os.cpu_count() or 1,
@@ -787,12 +864,14 @@ def axis_planner(fast: bool = True, repeats: int = 3) -> Dict:
         "wide_p": wide,
         "decision_mix_8dev": mix,
         "planner_never_worse": never_worse,
+        "e2e_tall_drain": e2e,
         "sharded_fused": {
             "n_entries": len(entries),
             "n_obs": n_obs,
             "warm_unsharded_s": t_unsharded,
             "warm_sharded_s": t_sharded,
             "warm_speedup_sharded_vs_unsharded": t_unsharded / t_sharded,
-            "speedup_gate_enforced": headroom >= 1.5,
+            "speedup_floor": speedup_floor,
+            "speedup_gate_enforced": True,
         },
     }

@@ -55,6 +55,12 @@ EXPECTED_CACHES: Tuple[str, ...] = (
     # its single insert site (PersistentProgramCache._process_put) is
     # what lookup() and store() both remember through
     "persistent_program_cache_process_tier",
+    # the in-mesh axis-executor programs (ISSUE 9): one jitted
+    # shard_map program per (mesh, mesh_axis, family, params) —
+    # standalone Gram form and the drain's bucket fit-predict form
+    # share each cache
+    "data_gram_programs",       # sharding/gram.py::_data_gram_fn
+    "feature_gram_programs",    # sharding/gram.py::_feature_gram_fn
 )
 
 #: the persistent program cache outlives the process, so its key must

@@ -30,6 +30,17 @@ family and program form the ``ProgramCache`` can build:
     1-device mesh and the ~1e-6 sharded float tier on m-way meshes
     (compiled-B retiling below 16 lanes — see the B_BLOCK caveat in
     compile/program.py).
+  * **data-axis-wraps-shard-map / data-axis-psums-moments** — the
+    in-mesh data@m drain program (ISSUE 9, sharding/gram.py) must be
+    one ``shard_map`` whose body reassembles the per-shard partial
+    (G, b, nw) moments by ``psum`` and never ``all_gather``s: the N
+    split exists to keep rows local, so only O(P^2) statistics may
+    cross the wire.
+  * **feature-axis-wraps-shard-map / feature-axis-gathers-rows** — the
+    in-mesh feature@m program must be one ``shard_map`` whose body
+    ``all_gather``s the row matrix (the wire term the axis planner
+    prices): a gather-free body means each shard contracted only its
+    own columns and the cross-column Gram blocks are wrong.
   * **prng-key-from-runtime-data** — taint analysis over the jaxpr:
     primitives that consume PRNG keys may only be reached from the
     ``key_data`` input (the compile-time ``fold_in`` tables), never
@@ -259,6 +270,123 @@ def audit_sharded_fused(single_jaxpr, sharded_fused_jaxpr, where: str,
     return findings
 
 
+def _sub_jaxprs(eqn):
+    """Every sub-jaxpr an equation's params reference (pjit/scan bodies,
+    cond branches, ...), unwrapped."""
+    for v in eqn.params.values():
+        for s in (v if isinstance(v, (tuple, list)) else (v,)):
+            s = _unwrap(s)
+            if hasattr(s, "eqns"):
+                yield s
+
+
+def _all_prims(jaxpr, depth: int = 0) -> List[str]:
+    """Every primitive name in a jaxpr, recursing through sub-jaxprs."""
+    if depth > 32:
+        return []
+    out: List[str] = []
+    for eqn in jaxpr.eqns:
+        out.append(eqn.primitive.name)
+        for sub in _sub_jaxprs(eqn):
+            out.extend(_all_prims(sub, depth + 1))
+    return out
+
+
+def audit_data_axis(fit_jaxpr, where: str) -> List[Finding]:
+    """Structural checks for the data@m in-mesh fit program (ISSUE 9):
+    one shard_map whose body reassembles the per-shard partial moments
+    by ``psum`` — never by gathering rows.  Factored out so the mutation
+    tests can feed a deliberately broken lowering."""
+    findings: List[Finding] = []
+    top = _prim_seq(fit_jaxpr.jaxpr)
+    if top != ["shard_map"]:
+        findings.append(Finding(
+            "jaxpr", "data-axis-wraps-shard-map", where,
+            f"data-axis fit program's top-level jaxpr is {top} — must "
+            "be exactly one shard_map so the layout only splits the N "
+            "axis"))
+        return findings
+    prims = _all_prims(_unwrap(fit_jaxpr.jaxpr.eqns[0].params["jaxpr"]))
+    if "psum" not in prims:
+        findings.append(Finding(
+            "jaxpr", "data-axis-psums-moments", where,
+            "data-axis fit body contains no psum — each shard's partial "
+            "(G, b, nw) moments are never reassembled into the full-N "
+            "statistics, so every device would solve on its rows only"))
+    if "all_gather" in prims:
+        findings.append(Finding(
+            "jaxpr", "data-axis-psums-moments", where,
+            "data-axis fit body all-gathers — the N split must move "
+            "only O(P^2) moments (psum), never replicate the rows it "
+            "exists to shard"))
+    return findings
+
+
+def audit_feature_axis(fit_jaxpr, where: str) -> List[Finding]:
+    """Structural checks for the feature@m in-mesh fit program
+    (ISSUE 9): one shard_map whose body all-gathers — the row-matrix
+    wire term the axis planner prices; a gather-free body means each
+    shard contracted only its own columns and the cross-column Gram
+    blocks are wrong."""
+    findings: List[Finding] = []
+    top = _prim_seq(fit_jaxpr.jaxpr)
+    if top != ["shard_map"]:
+        findings.append(Finding(
+            "jaxpr", "feature-axis-wraps-shard-map", where,
+            f"feature-axis fit program's top-level jaxpr is {top} — "
+            "must be exactly one shard_map so the layout only splits "
+            "the P axis"))
+        return findings
+    prims = _all_prims(_unwrap(fit_jaxpr.jaxpr.eqns[0].params["jaxpr"]))
+    if "all_gather" not in prims:
+        findings.append(Finding(
+            "jaxpr", "feature-axis-gathers-rows", where,
+            "feature-axis fit body contains no all_gather — the column "
+            "split needs the full row matrix (the priced wire term) to "
+            "form its (P, P/m) Gram block; without it the cross-column "
+            "blocks are computed from the wrong operand"))
+    return findings
+
+
+def audit_axis_programs() -> List[Finding]:
+    """Trace the two in-mesh drain forms (sharding/gram.py fit bodies
+    under shard_map, ISSUE 9) for every Gram family and run the
+    structural axis pins plus the PRNG/shape audit on each."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.roofline import GRAM_FAMILIES
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.gram import _data_fit_body, _feature_fit_body
+    from jax.sharding import PartitionSpec as P
+
+    findings: List[Finding] = []
+    mesh = make_host_mesh()
+    avals = _probe_avals(fused=False)
+    for family in GRAM_FAMILIES:
+        params = tuple(sorted(resolve_params(
+            family, None, n_obs=_N, dim_x=_P).items()))
+        data_fn = shard_map_compat(
+            _data_fit_body("data", family, params), mesh=mesh,
+            in_specs=(P(None, "data", None), P(None), P(None, "data"),
+                      P(None, "data"), P(None, "data"), P(None, None)),
+            out_specs=P(None, "data"))
+        data = jax.make_jaxpr(data_fn)(*avals)
+        findings.extend(audit_data_axis(data, f"{family}/data-axis"))
+        _taint_jaxpr(data.jaxpr, _data_key_marks(data.jaxpr),
+                     f"{family}/data-axis", findings)
+
+        feat_fn = shard_map_compat(
+            _feature_fit_body("data", family, params), mesh=mesh,
+            in_specs=(P(None, None, "data"), P(None), P(None, None),
+                      P(None, None), P(None, None), P(None, None)),
+            out_specs=P(None, None))
+        feat = jax.make_jaxpr(feat_fn)(*avals)
+        findings.extend(audit_feature_axis(feat,
+                                           f"{family}/feature-axis"))
+        _taint_jaxpr(feat.jaxpr, _data_key_marks(feat.jaxpr),
+                     f"{family}/feature-axis", findings)
+    return findings
+
+
 def _data_key_marks(jaxpr) -> List[Set[str]]:
     """Input marks for the program signature: everything but the
     trailing key_data operand is runtime data."""
@@ -359,4 +487,5 @@ def run(root=None) -> List[Finding]:
     findings.extend(audit_morph_classification())
     for family in FAMILIES:
         findings.extend(audit_family(family))
+    findings.extend(audit_axis_programs())
     return findings

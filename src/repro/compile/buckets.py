@@ -34,7 +34,7 @@ program cache live in program.py.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -212,12 +212,15 @@ def plan_buckets(requests: Sequence, *, min_n: int = 8,
 # ---------------------------------------------------------------------------
 # Per-bucket parallelization-axis planning (ISSUE 8)
 # ---------------------------------------------------------------------------
-@dataclass(frozen=True)
+@dataclass
 class AxisDecision:
     """One bucket's parallelization-axis choice plus the full roofline
     candidate table it was picked from — logged on
     ``BackendRunInfo.axis_plans`` exactly like autoscale decisions, so a
-    drain's layout choices are auditable after the fact."""
+    drain's layout choices are auditable after the fact.  The planner
+    fields are written once; ``executed`` is the one mutable slot —
+    ``dispatch_bucket`` stamps the axis the drain actually lowered
+    (ISSUE 9), so decision-vs-executed mixes are auditable too."""
     bucket: BucketKey
     axis: str                           # task | data | feature
     shards: int                         # mesh devices the layout spans
@@ -228,6 +231,10 @@ class AxisDecision:
     priced_by: str = "roofline"
     # (axis, shards, est_s, executable) per candidate, planner input
     candidate_costs: Tuple[Tuple[str, int, float, bool], ...] = ()
+    # axis dispatch_bucket actually executed: None until the bucket's
+    # first dispatch; "task" when a data/feature plan fell back (e.g.
+    # no mesh, a non-Gram family, or a non-divisible shard count)
+    executed: Optional[str] = None
 
     @property
     def est_s(self) -> float:

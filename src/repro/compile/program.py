@@ -791,11 +791,109 @@ def _launch_didx(plan: MegabatchPlan, pages: Optional[PagePool],
     return didx
 
 
+def _axis_to_execute(key: BucketKey, axis_decision, mesh
+                     ) -> Optional[Tuple[str, int]]:
+    """(axis, shards) the drain can actually lower for this bucket, or
+    None for the task path.  A data/feature ``AxisDecision`` executes
+    only when the in-mesh executors apply: a Gram family, a mesh with a
+    "data" device axis, and the sharded dimension divisible by the
+    axis size (N_pad is 8-aligned, P_pad pow2 — so power-of-two meshes
+    always divide; anything else falls back to task, which
+    ``dispatch_bucket`` stamps on the decision)."""
+    from repro.launch.roofline import GRAM_FAMILIES
+    if axis_decision is None or mesh is None:
+        return None
+    axis = axis_decision.axis
+    if axis not in ("data", "feature"):
+        return None
+    if bucket_family(key) not in GRAM_FAMILIES:
+        return None
+    if "data" not in mesh.axis_names:
+        return None
+    m = int(mesh.shape["data"])
+    if axis == "data" and key.n_pad % m != 0:
+        return None
+    if axis == "feature" and key.p_pad % m != 0:
+        return None
+    return axis, m
+
+
+def _dispatch_axis_bucket(plan: MegabatchPlan, cache: ProgramCache,
+                          key: BucketKey, entries: Sequence[Entry],
+                          blocks: List[_Block], axis: str, mesh,
+                          *, b_align: int, pages: Optional[PagePool],
+                          b_block: int, coalesce: bool,
+                          morph_tolerance: float) -> BucketDispatch:
+    """Lower a bucket slice through the planner's data@m/feature@m
+    layout (ISSUE 9): every launch block dispatches through the in-mesh
+    fit-predict program (sharding/gram.py::axis_fit_program) instead of
+    the ProgramCache's task program — the data form streams each
+    shard's N/m rows as chunks through the blocked Gram kernel with
+    psum reassembly, the feature form shards P with the all-gather row
+    term, and the solve epilogue runs replicated.  Page stacking, task
+    tensors, coalescing, harvest booking, and DispatchStats/
+    PaddingStats attribution are identical to the task path; results
+    sit in the explicit tolerance tier (the task axis stays the bitwise
+    reference), so axis launches never fuse across blocks or morph into
+    foreign shapes beyond the same tail packing the task path does."""
+    from repro.sharding.gram import (axis_fit_program,
+                                     axis_fit_program_cached)
+    requests = plan.requests
+    n_pad, p_pad = key.n_pad, key.p_pad
+    family = bucket_family(key)
+    params = tuple(key.learner[1])
+    can_morph = morph_allowed(key, morph_tolerance)
+    morph = coalesce and can_morph
+    lblocks = _coalesce(blocks, b_block, b_align, morph, False)
+    morphed_tasks = sum(lb.b_pad for lb in lblocks) if morph == can_morph \
+        else sum(lb.b_pad for lb in
+                 _coalesce(blocks, b_block, b_align, can_morph, False))
+
+    pad_acc = _PaddingAcc()
+    launches: List[Launch] = []
+    # operands may be committed to a single device (the host PagePool
+    # pins pages to its lead device); re-place them replicated on the
+    # mesh so the jitted shard_map accepts and partitions them
+    from jax.sharding import NamedSharding, PartitionSpec
+    repl = NamedSharding(mesh, PartitionSpec())
+    for lb in lblocks:
+        pages_arr, lane_of = _launch_pages(plan, pages, key, [lb],
+                                           n_pad, p_pad)
+        y, w, valid, kd = _launch_tensors(plan, lb, n_pad)
+        didx = _launch_didx(plan, pages, lb, lane_of, n_pad, p_pad)
+        pages_arr, didx, y, w, valid, kd = jax.device_put(
+            (pages_arr, didx, y, w, valid, kd), repl)
+        if axis_fit_program_cached(mesh, axis, family, params):
+            cache.stats.hits += 1
+        else:
+            cache.stats.misses += 1
+        prog = axis_fit_program(mesh, axis, family, params)
+        out = prog(pages_arr, didx, y, w, valid, kd)
+        launches.append(Launch(out=out, blocks=[lb], fused=False))
+        cache.stats.launches += 1
+        cache.stats.blocks += len(lb.parts)
+        if len(lb.parts) > 1:
+            cache.stats.coalesced_blocks += len(lb.parts)
+            cache.stats.fused_launches += 1
+        for blk in lb.parts:
+            pad_acc.book_part(
+                key, blk,
+                requests[blk.ri].segments[blk.si].learner is None)
+        pad_acc.book_launch(key, lb)
+
+    total_tasks = sum(blk.k for blk in blocks)
+    cache.stats.padding = cache.stats.padding.merge(
+        pad_acc.stats(pow2_bucket(total_tasks, 8), morphed_tasks))
+    return BucketDispatch(key=key, launches=launches,
+                          entries=list(entries), n_tasks=total_tasks)
+
+
 def dispatch_bucket(plan: MegabatchPlan, cache: ProgramCache,
                     key: BucketKey, entries: Sequence[Entry], *,
                     b_align: int = 1, pages: Optional[PagePool] = None,
                     b_block: int = B_BLOCK, fuse: bool = True,
                     coalesce: bool = True, morph_tolerance: float = 0.0,
+                    axis_decision=None, mesh=None,
                     ) -> BucketDispatch:
     """Launch one bucket slice WITHOUT waiting for the device.
 
@@ -809,10 +907,29 @@ def dispatch_bucket(plan: MegabatchPlan, cache: ProgramCache,
     the cache is partitioned).  Returns the in-flight
     ``BucketDispatch``; call ``.harvest()`` (or go through
     ``run_bucket``) for the results.
+
+    ``axis_decision``/``mesh`` (ISSUE 9): a planner ``AxisDecision``
+    whose axis is data/feature lowers through the in-mesh Gram
+    executors on ``mesh`` (``_dispatch_axis_bucket``) when the
+    executability guards pass; the decision's ``executed`` field is
+    stamped with the axis that actually ran either way.
     """
     requests = plan.requests
     n_pad, p_pad = key.n_pad, key.p_pad
     blocks = _plan_blocks(plan, key, entries, b_block, b_align)
+    # execute the axis plan (ISSUE 9): a data/feature decision lowers
+    # through the in-mesh Gram executors; anything else (including a
+    # data/feature plan the guards reject) runs the task path, and the
+    # decision records which axis actually ran
+    axis_m = _axis_to_execute(key, axis_decision, mesh)
+    if axis_m is not None:
+        axis_decision.executed = axis_m[0]
+        return _dispatch_axis_bucket(
+            plan, cache, key, entries, blocks, axis_m[0], mesh,
+            b_align=b_align, pages=pages, b_block=b_block,
+            coalesce=coalesce, morph_tolerance=morph_tolerance)
+    if axis_decision is not None:
+        axis_decision.executed = "task"
     # a partitioned cache fuses again when it carries the sharded-fused
     # transform (ISSUE 8) — shard_map wraps the lax.map body, so the
     # PR 5 "sharded caches never fuse" restriction is lifted
@@ -913,6 +1030,7 @@ def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
                pages: Optional[PagePool] = None, b_block: int = B_BLOCK,
                fuse: bool = True, coalesce: bool = True,
                morph_tolerance: float = 0.0,
+               axis_decision=None, mesh=None,
                ) -> Tuple[Dict[Entry, np.ndarray], float]:
     """Synchronous wrapper: dispatch one bucket slice and block for its
     results.  Returns ({(req_idx, inv): preds (tpi, n_obs)}, wall_s).
@@ -925,6 +1043,7 @@ def run_bucket(plan: MegabatchPlan, cache: ProgramCache, key: BucketKey,
     t0 = time.perf_counter()
     bd = dispatch_bucket(plan, cache, key, entries, b_align=b_align,
                          pages=pages, b_block=b_block, fuse=fuse,
-                         coalesce=coalesce, morph_tolerance=morph_tolerance)
+                         coalesce=coalesce, morph_tolerance=morph_tolerance,
+                         axis_decision=axis_decision, mesh=mesh)
     results = bd.harvest()
     return results, time.perf_counter() - t0

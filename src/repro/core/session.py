@@ -258,11 +258,16 @@ class DMLSession:
 
     def __init__(self, backend: Union[str, ExecutionBackend] = "wave",
                  pool: Optional[PoolConfig] = None):
-        # calibrate roofline launch-overhead pricing on THIS runtime
-        # (memoized no-op dispatch probe; constant fallback on failure)
+        # calibrate roofline launch-overhead and shard-overhead pricing
+        # on THIS runtime (memoized no-op dispatch probes; constant
+        # fallbacks on failure) — the analytic SHARD_OVERHEAD_FRAC
+        # mispriced 1-device meshes (ISSUE 9)
         try:
-            from repro.launch.roofline import measure_launch_overhead_s
+            from repro.launch.roofline import (
+                measure_launch_overhead_s, measure_shard_overhead_frac,
+            )
             measure_launch_overhead_s()
+            measure_shard_overhead_frac()
         except Exception:
             pass
         self.backend = make_backend(backend, pool)

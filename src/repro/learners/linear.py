@@ -99,8 +99,20 @@ def _fista_beta(g, b, w, *, reg: float, intercept: bool, n_iter: int):
     (used only for the per-observation normalization).  Fixed iteration
     count so the whole solve stays vmappable/jittable.
     """
-    p = g.shape[-1]
     nw = jnp.maximum(jnp.sum(w, axis=1), 1.0)                 # (T,)
+    return _fista_beta_moments(g, b, nw, reg=reg, intercept=intercept,
+                               n_iter=n_iter)
+
+
+def _fista_beta_moments(g, b, nw, *, reg: float, intercept: bool,
+                        n_iter: int):
+    """The moments form of the FISTA solve: identical math to
+    ``_fista_beta`` but with the weight normalizer ``nw`` (T,)
+    precomputed by the caller — the in-mesh data-parallel executor
+    (sharding/gram.py) psums per-shard weight sums into ``nw`` because
+    no single device holds the full w row to reduce locally.
+    """
+    p = g.shape[-1]
     g = g / nw[:, None, None]
     b = b / nw[:, None]
     # Lipschitz constant via a few power iterations on each G_t.

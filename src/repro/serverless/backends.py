@@ -654,10 +654,19 @@ class _BucketStreamBackend(_StreamBackend):
     def _b_align(self) -> int:
         return 1
 
-    def _plan_axis(self, state: DrainState, bkey, entries) -> None:
+    def _plan_axis(self, state: DrainState, bkey, entries):
         """Parallelization-axis planning hook (ISSUE 8): single-device
-        streams have nothing to shard, so the default is a no-op; the
-        mesh-owning backends price candidates and log AxisDecisions."""
+        streams have nothing to shard, so the default plans nothing; the
+        mesh-owning backends price candidates, log AxisDecisions, and
+        return the (memoized) decision so ``step`` can hand it to
+        ``dispatch_bucket`` for in-mesh execution (ISSUE 9)."""
+        return None
+
+    def _axis_mesh(self):
+        """The mesh ``dispatch_bucket`` lowers data/feature AxisDecisions
+        onto.  None (the default) keeps every bucket on the task axis —
+        the bitwise reference path."""
+        return None
 
     def _book_harvest(self, state: DrainState, pb: PendingBucket,
                       results: Dict, elapsed: float):
@@ -678,7 +687,7 @@ class _BucketStreamBackend(_StreamBackend):
                 return True
             return False
         bkey, entries = next(iter(groups.items()))
-        self._plan_axis(state, bkey, entries)
+        decision = self._plan_axis(state, bkey, entries)
         running: Dict[int, List[int]] = {}
         for ri, inv in entries:
             running.setdefault(ri, []).append(inv)
@@ -687,6 +696,7 @@ class _BucketStreamBackend(_StreamBackend):
         bd = _compile().dispatch_bucket(
             state.plan, self.compiler, bkey, entries,
             b_align=self._b_align(), pages=self.pages,
+            axis_decision=decision, mesh=self._axis_mesh(),
             **self._dispatch_opts())
         q.push(PendingBucket(dispatch=bd), book)
         state.seen_buckets.add(bkey)
@@ -777,18 +787,23 @@ class ShardedBackend(_BucketStreamBackend):
     def _b_align(self) -> int:
         return self._n_shards()
 
-    def _plan_axis(self, state: DrainState, bkey, entries) -> None:
+    def _plan_axis(self, state: DrainState, bkey, entries):
         """Price the bucket's parallelization-axis candidates on this
-        mesh and log the decision (once per bucket per drain)."""
+        mesh, log the decision (once per bucket per drain), and return
+        it so the drain executes the planned layout (ISSUE 9)."""
         memo_key = (bkey, self._n_shards())
-        if memo_key in state.axis_planned:
-            return
-        from repro.compile.buckets import plan_bucket_axis
-        decision = plan_bucket_axis(
-            bkey, n_tasks=len(entries), n_devices=self._n_shards())
-        state.axis_planned[memo_key] = decision
-        if decision is not None:
-            state.info.axis_plans.append(decision)
+        if memo_key not in state.axis_planned:
+            from repro.compile.buckets import plan_bucket_axis
+            decision = plan_bucket_axis(
+                bkey, n_tasks=len(entries), n_devices=self._n_shards())
+            state.axis_planned[memo_key] = decision
+            if decision is not None:
+                state.info.axis_plans.append(decision)
+        return state.axis_planned[memo_key]
+
+    def _axis_mesh(self):
+        """Data/feature AxisDecisions lower onto this backend's mesh."""
+        return self.mesh
 
     @property
     def compiler(self) -> ProgramCache:

@@ -38,8 +38,12 @@ and one drain stream.  ``TopologyBackend`` is the scheduler over them:
     dispatch as sharded-fused launches (shard_map around the lax.map
     fused body) through a per-host program cache built on that host's
     mesh, small serving buckets stay single-device, and data/feature
-    decisions are logged for the standalone in-mesh executors
-    (sharding/gram.py).  Decisions land on
+    decisions are *executed* in-mesh (ISSUE 9): ``dispatch_bucket``
+    lowers them through the sharded Gram executors
+    (sharding/gram.py), chunk-paging tall N, and stamps the
+    ``executed`` axis back on the decision.  Tall-N Gram buckets
+    (``n_pad > DEVICE_PAGE_ROWS``) are routed — and stolen — only by
+    hosts whose data axis can stream them.  Decisions land on
     ``BackendRunInfo.axis_plans`` like autoscale decisions.
 
 Determinism: placement and stealing only decide *where* a bucket's
@@ -262,21 +266,48 @@ class TopologyBackend(_StreamBackend):
                 loads[h] += len(entries)
         return loads
 
+    def _eligible_hosts(self, key) -> List[int]:
+        """The hosts a bucket may be routed to.  Tall-N Gram buckets
+        (``n_pad > DEVICE_PAGE_ROWS``: no single device holds the page,
+        so the drain must chunk-stream them data-parallel, ISSUE 9) go
+        only to hosts whose mesh can stream them — the largest data-axis
+        size that divides ``n_pad``; every other bucket runs anywhere."""
+        hosts = list(range(len(self.topology)))
+        from repro.compile.program import bucket_family
+        from repro.launch.roofline import DEVICE_PAGE_ROWS, GRAM_FAMILIES
+        if key.n_pad <= DEVICE_PAGE_ROWS \
+                or bucket_family(key) not in GRAM_FAMILIES:
+            return hosts
+
+        def axis_m(h: int) -> int:
+            mesh = self.topology.hosts[h].mesh
+            return int(mesh.shape["data"]) \
+                if "data" in mesh.axis_names else 1
+
+        ok = [h for h in hosts if key.n_pad % axis_m(h) == 0]
+        if not ok:                      # nothing divides: route anywhere,
+            return hosts                # dispatch falls back to task axis
+        best = max(axis_m(h) for h in ok)
+        return [h for h in ok if axis_m(h) == best]
+
     def _route(self, state: TopologyDrainState, groups) -> None:
-        """Assign every not-yet-routed bucket to its best host (loads
-        maintained incrementally across the pass)."""
+        """Assign every not-yet-routed bucket to its best host among the
+        bucket's eligible set (loads maintained incrementally)."""
         pools = [h.pool for h in self.topology.hosts]
         loads = self._loads(state, groups)
         for key, entries in groups.items():
             if key in state.assignment:
                 continue
+            elig = self._eligible_hosts(key)
             placed = place_bucket(self._bucket_pkeys(state, key, entries),
-                                  pools, loads)
-            state.assignment[key] = placed.host
-            loads[placed.host] += len(entries)
+                                  [pools[h] for h in elig],
+                                  [loads[h] for h in elig])
+            host = elig[placed.host]
+            state.assignment[key] = host
+            loads[host] += len(entries)
             info = state.info.topology
-            info.hosts[placed.host].buckets_placed += 1
-            info.placements.append((key, placed.host, placed.score))
+            info.hosts[host].buckets_placed += 1
+            info.placements.append((key, host, placed.score))
 
     def _try_steal(self, state: TopologyDrainState, groups,
                    thief: int) -> List:
@@ -286,7 +317,9 @@ class TopologyBackend(_StreamBackend):
         queues: Dict[int, List] = {}
         for key in groups:
             h = state.assignment[key]
-            if h != thief:
+            # a host can only steal buckets it is eligible to stream
+            # (tall-N Gram buckets stay on streaming-capable meshes)
+            if h != thief and thief in self._eligible_hosts(key):
                 queues.setdefault(h, []).append(key)
         pools = [h.pool for h in self.topology.hosts]
         pick = steal_choice(
@@ -329,17 +362,20 @@ class TopologyBackend(_StreamBackend):
         return decision
 
     def _bucket_compiler(self, host_id: int, decision):
-        """(program cache, b_align) one bucket dispatches through on
-        this host: the host-mesh sharded-fused cache when the planner
-        picked an m-way task layout, else the shared single-device
-        cache.  Data/feature decisions also dispatch single-device here
-        — those layouts run through the standalone in-mesh executors
-        (sharding/gram.py), the drain prices and logs them."""
+        """(program cache, b_align, axis mesh) one bucket dispatches
+        through on this host: the host-mesh sharded-fused cache when
+        the planner picked an m-way task layout; the shared
+        single-device cache *plus the host's mesh* when it picked a
+        data/feature layout — ``dispatch_bucket`` lowers those through
+        the in-mesh Gram executors (sharding/gram.py, ISSUE 9),
+        chunk-paging tall N; the shared cache alone otherwise."""
         if decision is not None and decision.axis == "task" \
                 and decision.shards > 1 \
                 and self.topology.hosts[host_id].n_devices > 1:
-            return self._host_compiler(host_id), decision.shards
-        return self.compiler, 1
+            return self._host_compiler(host_id), decision.shards, None
+        if decision is not None and decision.axis in ("data", "feature"):
+            return self.compiler, 1, self.topology.hosts[host_id].mesh
+        return self.compiler, 1, None
 
     # ---- the per-host wave --------------------------------------------
     def _wave_capacity(self, state, host_id: int, mine, groups) -> int:
@@ -412,7 +448,8 @@ class TopologyBackend(_StreamBackend):
             for ri, invs in running.items():
                 state.requests[ri].ledger.mark_running(invs)
             decision = self._plan_host_axis(state, key, ents, host_id)
-            compiler, b_align = self._bucket_compiler(host_id, decision)
+            compiler, b_align, axis_mesh = self._bucket_compiler(
+                host_id, decision)
             opts = dict(self._dispatch_opts())
             # fusion follows the *chosen* cache, not the shared one: a
             # host's sharded-fused cache fuses, a partition-only cache
@@ -422,7 +459,8 @@ class TopologyBackend(_StreamBackend):
                 or compiler.partition_fused is not None)
             bd = _compile().dispatch_bucket(
                 state.plan, compiler, key, ents, pages=host_pages,
-                b_align=b_align, **opts)
+                b_align=b_align, axis_decision=decision, mesh=axis_mesh,
+                **opts)
             q.push(PendingBucket(dispatch=bd, host=host_id), book)
             state.seen_buckets.add(key)
         lane.waves += 1

@@ -38,6 +38,7 @@ def test_registry_covers_expected_caches():
     import repro.compile.pages       # noqa: F401   on import)
     import repro.compile.program     # noqa: F401
     import repro.serverless.backends  # noqa: F401
+    import repro.sharding.gram       # noqa: F401
     assert set(cache_keys.EXPECTED_CACHES) <= set(REGISTRY)
     spec = REGISTRY["block_tensors"]
     assert "req.work_key" in spec.key
@@ -186,6 +187,71 @@ def test_data_derived_prng_fails_taint_analysis():
     ja._taint_jaxpr(bad.jaxpr, ja._data_key_marks(bad.jaxpr),
                     "ols/leak", findings)
     assert any(f.rule == "prng-key-from-runtime-data" for f in findings)
+
+
+def test_mutated_axis_programs_fail_jaxpr_audit():
+    """The ISSUE 9 in-mesh drain-form pins: a data-axis body whose psum
+    was dropped (each shard would solve on its local rows only) and a
+    feature-axis body whose row all-gather was dropped (cross-column
+    Gram blocks from the wrong operand) must be rejected; the real
+    lowered forms pass."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import jaxpr_audit as ja
+    from repro.kernels import ops
+    from repro.launch.mesh import make_host_mesh
+    from repro.learners.linear import _augment_b
+    from repro.sharding.compat import shard_map_compat
+    from repro.sharding.gram import (
+        _data_fit_body, _feature_fit_body, gram_solve,
+    )
+
+    mesh = make_host_mesh()
+    avals = ja._probe_avals(fused=False)
+    params = (("intercept", True), ("reg", 1.0))
+    data_specs = dict(
+        in_specs=(P(None, "data", None), P(None), P(None, "data"),
+                  P(None, "data"), P(None, "data"), P(None, None)),
+        out_specs=P(None, "data"))
+    feat_specs = dict(
+        in_specs=(P(None, None, "data"), P(None), P(None, None),
+                  P(None, None), P(None, None), P(None, None)),
+        out_specs=P(None, None))
+
+    # the real lowered forms pass their pins
+    good_d = jax.make_jaxpr(shard_map_compat(
+        _data_fit_body("data", "ridge", params), mesh=mesh,
+        **data_specs))(*avals)
+    assert ja.audit_data_axis(good_d, "ridge/data") == []
+    good_f = jax.make_jaxpr(shard_map_compat(
+        _feature_fit_body("data", "ridge", params), mesh=mesh,
+        **feat_specs))(*avals)
+    assert ja.audit_feature_axis(good_f, "ridge/feature") == []
+
+    # mutation: shard-local statistics, no psum reassembly
+    def local_fit(pages, data_idx, y, w, valid, key_data):
+        xa = _augment_b(pages[data_idx].astype(jnp.float32))
+        g, b = ops.batched_gram(xa, w, y, 1.0)
+        return ops.batched_predict(xa, gram_solve(g, b), valid)
+
+    bad_d = jax.make_jaxpr(shard_map_compat(
+        local_fit, mesh=mesh, **data_specs))(*avals)
+    assert {f.rule for f in ja.audit_data_axis(bad_d, "ridge/mut")} \
+        == {"data-axis-psums-moments"}
+
+    # mutation: column-local Gram, no row all-gather
+    bad_f = jax.make_jaxpr(shard_map_compat(
+        local_fit, mesh=mesh, **feat_specs))(*avals)
+    assert {f.rule for f in ja.audit_feature_axis(bad_f, "ridge/mut")} \
+        == {"feature-axis-gathers-rows"}
+
+    # mutation: the shard_map wrapper itself dropped
+    bare = jax.make_jaxpr(local_fit)(*avals)
+    assert {f.rule for f in ja.audit_data_axis(bare, "ridge/bare")} \
+        == {"data-axis-wraps-shard-map"}
+    assert {f.rule for f in ja.audit_feature_axis(bare, "ridge/bare")} \
+        == {"feature-axis-wraps-shard-map"}
 
 
 # ---------------------------------------------------------------------------
