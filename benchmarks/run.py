@@ -24,10 +24,13 @@ cross-host transfer convergence, roofline-priced autoscale candidates),
 and the ``axisplan`` benchmark writes ``BENCH_axisplan.json`` (per-axis
 tasks/s on tall-N and wide-P Gram shapes, the planner's decision mix
 over the canonical shape grid, the sharded-fused vs unsharded warm
-launch speedup, and a measured parallel-headroom probe) so the perf
+launch speedup, and a measured parallel-headroom probe), and the ``chaos`` benchmark
+writes ``BENCH_chaos.json`` (goodput vs injected fault rate against the
+fault-free baseline, hedge hit rate under held stragglers, host-kill
+recovery latency, and a zero-lost-invocations flag) so the perf
 trajectory is tracked across PRs; ``--smoke`` runs
-megabatch + asyncdrain + blockfusion + axisplan at CI size and fails
-loudly if the compiler regresses below the per-segment path (cold >= 1x,
+megabatch + asyncdrain + blockfusion + axisplan + chaos at CI size and
+fails loudly if the compiler regresses below the per-segment path (cold >= 1x,
 warm >= 12x), the page pool stops serving steady traffic from device
 residency, morphed B-axis padding waste exceeds 15% (25% raw backstop),
 N-axis waste exceeds 30%, fused drains stop launching strictly fewer
@@ -38,7 +41,10 @@ the launches-per-drain gate carries the structural fusion claim since
 the bucket-coherent wave fill halved the unfused baseline's launch
 count), the pipelined dispatch
 queue's overlap ratio falls below 0.5, async results drift from the
-synchronous path, the axis planner picks a candidate priced strictly
+synchronous path, chaos goodput at the 10% fault rate falls below 0.7x
+the fault-free drain, any invocation is lost under faults/hedges/host
+loss, a fault schedule moves an estimate, the axis planner picks a
+candidate priced strictly
 worse than another executable one, or the sharded-fused warm launch
 regresses (> 1x required only when the headroom probe shows real spare
 cores; a 0.25x sanity floor otherwise — 1-vCPU runners cannot win by
@@ -78,13 +84,15 @@ def main() -> None:
     ap.add_argument("--fusion-json", default="BENCH_fusion.json")
     ap.add_argument("--topology-json", default="BENCH_topology.json")
     ap.add_argument("--axisplan-json", default="BENCH_axisplan.json")
+    ap.add_argument("--chaos-json", default="BENCH_chaos.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.smoke or args.topology_smoke or args.axisplan_smoke:
         only = set()                            # composable gate modes
         args.fast = True
         if args.smoke:
-            only |= {"megabatch", "asyncdrain", "blockfusion", "axisplan"}
+            only |= {"megabatch", "asyncdrain", "blockfusion", "axisplan",
+                     "chaos"}
         if args.topology_smoke:
             only |= {"topology"}
         if args.axisplan_smoke:
@@ -220,6 +228,25 @@ def main() -> None:
         with open(args.axisplan_json, "w") as f:
             json.dump(ax, f, indent=1, default=float)
 
+    if want("chaos"):
+        # 2 replicas per family at n_rep=4: rounds run ~60-90ms, big
+        # enough for the interleaved goodput ratio to measure retry
+        # cost instead of wave-overhead noise
+        ch = T.chaos_drain(n_requests_per_family=2, n_rep=4,
+                           rounds=3 if args.fast else 5)
+        results["chaos"] = ch
+        g10 = ch["goodput"]["0.1"]
+        hl = ch["host_loss"]
+        rows.append(("chaos_goodput_10pct",
+                     1e6 / max(g10["tasks_per_sec"], 1e-12),
+                     f"goodput_ratio={g10['goodput_ratio']:.2f}_"
+                     f"hedge_hit_rate={ch['hedge']['hedge_hit_rate']}_"
+                     f"recovery_s={hl['recovery_latency_s']}_"
+                     f"lost_zero={ch['zero_lost_invocations']}_"
+                     f"parity={ch['bitwise_parity_all']}"))
+        with open(args.chaos_json, "w") as f:
+            json.dump(ch, f, indent=1, default=float)
+
     if want("topology"):
         tp = T.topology_drain(n_hosts=2, n_requests_per_family=1, n_rep=2,
                               rounds=3 if args.fast else 5)
@@ -344,6 +371,39 @@ def main() -> None:
               f"N waste {ad['padding_waste_n_pct']:.0f}% "
               f"(pow2 was {ad['padding_waste_n_pow2_pct']:.0f}%), "
               f"bitwise parity {ad['bitwise_parity_all']}")
+
+    if args.smoke:
+        ch = results["chaos"]
+        g10 = ch["goodput"]["0.1"]
+        hl = ch["host_loss"]
+        fail = None
+        if not ch["zero_lost_invocations"]:
+            fail = ("lost invocations under chaos — an admitted ledger "
+                    "finished incomplete or the dispatch queue dropped a "
+                    "bucket without re-dispatch")
+        elif g10["goodput_ratio"] < 0.7:
+            fail = (f"goodput at 10% fault rate "
+                    f"{g10['goodput_ratio']:.2f}x < 0.7x fault-free "
+                    "(retry path re-executes too much or fell off the "
+                    "fused fast path)")
+        elif not ch["bitwise_parity_all"]:
+            fail = ("chaos vs inline bitwise parity broken — a fault "
+                    "schedule moved an estimate")
+        elif hl["killed_host"] is None or not hl["all_ledgers_complete"]:
+            fail = ("host-loss recovery did not complete every admitted "
+                    "request on the survivors")
+        if fail:
+            print(f"CHAOS SMOKE FAIL: {fail}", file=sys.stderr)
+            sys.exit(1)
+        print(f"CHAOS SMOKE OK: goodput {g10['goodput_ratio']:.2f}x "
+              f"fault-free at 10% faults "
+              f"({ch['goodput'][str(ch['fault_rates'][-1])]['goodput_ratio']:.2f}x "
+              f"at {ch['fault_rates'][-1]:.0%}), "
+              f"hedge hit rate {ch['hedge']['hedge_hit_rate']}, "
+              f"host-kill recovery {hl['recovery_latency_s']:.3f}s "
+              f"({hl['orphaned_buckets']} orphans re-dispatched), "
+              f"zero lost invocations {ch['zero_lost_invocations']}, "
+              f"bitwise parity {ch['bitwise_parity_all']}")
 
     if args.smoke or args.axisplan_smoke:
         ax = results["axisplan"]

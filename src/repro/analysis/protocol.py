@@ -14,6 +14,10 @@ The protocol (one bucket slice's life):
     PLANNED ──mark_running──▶ DISPATCHED ──harvest──▶ HARVESTED
         ──record_success(es)/record_failure──▶ BOOKED
 
+    DISPATCHED ──hedge (overdue)──▶ HEDGED ──harvest──▶ HARVESTED
+    DISPATCHED/HEDGED ──cancel (lost the race)──▶ CANCELLED (discarded)
+    DISPATCHED/HEDGED ──abandon (host died)──▶ LOST (re-dispatched)
+
   * every ``dispatch_bucket`` launch is preceded by ``mark_running`` on
     its invocations (a checkpoint taken mid-flight must re-queue them);
   * a bucket is harvested exactly once, and only the dispatch queue (or
@@ -23,7 +27,14 @@ The protocol (one bucket slice's life):
   * schedulers must view pending work through
     ``pending_by_bucket(exclude=<in-flight>)`` so an invocation whose
     launch is on device is never dispatched twice (the one allowlisted
-    exception is a pricing thunk that runs while the queue is empty).
+    exception is a pricing thunk that runs while the queue is empty);
+  * a hedge race is settled by exactly ONE performer
+    (``HedgePair.settle``): the winning leg books, the loser is
+    cancelled and discarded through the same harvest-once flag, so no
+    fault schedule can ever double-book or double-bill a bucket;
+  * only ``TopologyBackend.kill_host`` may abandon a queue — LOST
+    buckets' invocations stay RUNNING in the ledger and resurface via
+    the pending view once the dead host's queue is gone.
 
 The ROADMAP's multi-process topology item starts from this table: a
 remote host stream must perform exactly these transitions over the wire.
@@ -58,7 +69,23 @@ LEDGER_TRANSITIONS: Dict[str, Tuple[Tuple[str, ...], str]] = {
 
 #: bucket states (PendingBucket's life in a DispatchQueue)
 BUCKET_STATES: Tuple[str, ...] = (
-    "PLANNED", "DISPATCHED", "HARVESTED", "BOOKED")
+    "PLANNED", "DISPATCHED", "HARVESTED", "BOOKED",
+    "HEDGED", "CANCELLED", "LOST")
+
+#: bucket action -> (legal source states, destination state) — drives
+#: the runtime sanitizer's check_hedge / check_cancel /
+#: check_bucket_bookable hooks exactly as LEDGER_TRANSITIONS drives
+#: check_booking, so the fault-tolerance path cannot drift from this
+#: table.  "harvest" from HEDGED is the winning original leg;
+#: CANCELLED/LOST are terminal (no legal outgoing transitions).
+BUCKET_TRANSITIONS: Dict[str, Tuple[Tuple[str, ...], str]] = {
+    "dispatch": (("PLANNED",), "DISPATCHED"),
+    "harvest": (("DISPATCHED", "HEDGED"), "HARVESTED"),
+    "book": (("HARVESTED",), "BOOKED"),
+    "hedge": (("DISPATCHED",), "HEDGED"),
+    "cancel": (("DISPATCHED", "HEDGED"), "CANCELLED"),
+    "abandon": (("DISPATCHED", "HEDGED"), "LOST"),
+}
 
 # ---------------------------------------------------------------------------
 # performer allowlists: (file relative to src/repro, function qualname)
@@ -67,6 +94,7 @@ BUCKET_STATES: Tuple[str, ...] = (
 AUDITED_FILES: Tuple[str, ...] = (
     "serverless/backends.py", "serverless/dispatch.py",
     "serverless/topology.py", "serverless/ledger.py",
+    "serverless/chaos.py",
     "core/session.py", "compile/program.py", "compile/buckets.py",
 )
 
@@ -90,7 +118,21 @@ HARVEST_PERFORMERS: FrozenSet[Tuple[str, str]] = frozenset({
     ("compile/program.py", "run_bucket"),
 })
 _HARVEST_METHODS = ("harvest", "harvest_ready", "harvest_next",
-                    "harvest_all")
+                    "harvest_all", "discard")
+
+#: the ONLY call site allowed to cancel a hedge leg — the race's single
+#: settle point.  A rogue ``.cancel()`` elsewhere could cancel BOTH legs
+#: (bucket never booked) or cancel after booking (double accounting).
+CANCEL_PERFORMERS: FrozenSet[Tuple[str, str]] = frozenset({
+    ("serverless/dispatch.py", "HedgePair.settle"),
+})
+
+#: the ONLY call site allowed to abandon a queue — host-death recovery.
+#: Abandoning anywhere else silently drops in-flight work without the
+#: ledger/pending-view bookkeeping that re-dispatches it.
+ABANDON_PERFORMERS: FrozenSet[Tuple[str, str]] = frozenset({
+    ("serverless/topology.py", "TopologyBackend.kill_host"),
+})
 
 #: call sites allowed to view pending work WITHOUT excluding in-flight
 #: entries — only the wave autoscaler's roofline pricing thunk, which
@@ -137,6 +179,20 @@ def _check_file(rel: str, tree: ast.Module) -> List[Finding]:
                     "protocol", "harvest-performer", f"{rel}:{lineno}",
                     f"{callee}() in {qual} — only the dispatch queue and "
                     "the declared scheduler steps may harvest"))
+        if leaf == "cancel" and "." in callee:
+            if (rel, qual) not in CANCEL_PERFORMERS:
+                findings.append(Finding(
+                    "protocol", "cancel-performer", f"{rel}:{lineno}",
+                    f"{callee}() in {qual} — only HedgePair.settle may "
+                    "cancel a hedge leg; a rogue cancel site can cancel "
+                    "both legs (never booked) or cancel after booking"))
+        if leaf == "abandon" and "." in callee:
+            if (rel, qual) not in ABANDON_PERFORMERS:
+                findings.append(Finding(
+                    "protocol", "abandon-performer", f"{rel}:{lineno}",
+                    f"{callee}() in {qual} — only TopologyBackend."
+                    "kill_host may abandon a queue; anywhere else drops "
+                    "in-flight work without re-dispatch bookkeeping"))
 
     # pending_by_bucket(exclude=...) — never re-dispatch in-flight work
     for qual, fn in astutil.iter_functions(tree):
@@ -223,6 +279,15 @@ def run(root: Optional[Path] = None) -> List[Finding]:
     """Statically check every audited file against the protocol table."""
     root = root or astutil.default_root()
     findings: List[Finding] = []
+    for action, (srcs, dst) in BUCKET_TRANSITIONS.items():
+        for s in srcs + (dst,):
+            if s not in BUCKET_STATES:
+                findings.append(Finding(
+                    "protocol", "transition-table-drift",
+                    "analysis/protocol.py",
+                    f"BUCKET_TRANSITIONS[{action!r}] names state {s!r} "
+                    "missing from BUCKET_STATES — update the table with "
+                    "the rename"))
     for rel in AUDITED_FILES:
         path = root / rel
         if not path.exists():

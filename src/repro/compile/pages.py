@@ -134,6 +134,14 @@ class PageDirectory:
     def attach(self, pool: "PagePool") -> None:
         self._pools[pool.host_id] = pool
 
+    def detach(self, pool: "PagePool") -> None:
+        """Withdraw a dead host: drop it from the pool map and purge it
+        from every holder set so no d2d fetch is ever brokered against
+        unreachable device memory (host-loss recovery)."""
+        self._pools.pop(pool.host_id, None)
+        for pkey in list(self._holders):
+            self.unregister(pkey, pool.host_id)
+
     def register(self, pkey: PageKey, host_id: int) -> None:
         self._holders.setdefault(pkey, set()).add(host_id)
 
@@ -293,6 +301,21 @@ class PagePool:
                 self.directory.unregister(pkey, self.host_id)
             for skey in list(self._stacks_of.pop(pkey, ())):
                 self._drop_stack(skey)
+
+    def invalidate(self) -> None:
+        """Host loss: drop every resident page and stack and withdraw
+        from the cluster directory.  Surviving hosts re-materialize any
+        page they need from host memory (``_page`` falls through to the
+        h2d path once no peer holds the key) — the orphaned work itself
+        is re-placed by the topology backend, not by the pool."""
+        if self.directory is not None:
+            self.directory.detach(self)
+        self._pages.clear()
+        self._nbytes.clear()
+        self._page_bytes = 0
+        self._stacks.clear()
+        self._stacks_of.clear()
+        self._stack_bytes = 0
 
     # ------------------------------------------------------------------
     # page contents are pinned by the PageKeys inside ``needs`` (a

@@ -71,6 +71,55 @@ def _key_tail() -> Tuple[int, ...]:
     return tuple(jax.random.key_data(jax.random.key(0)).shape)
 
 
+class _PinnedExecutable:
+    """Operand-lifetime guard for direct AOT executable calls.
+
+    ``jit`` dispatch retains the caller's host operands while the
+    asynchronous transfer/execution reads them; a ``lower().compile()``
+    executable — fresh or deserialized — does NOT.  The dispatch path
+    hands these executables temporary numpy operands (morphed batch
+    tensors, per-launch ``didx`` lane maps) and drops every reference
+    the moment the call returns, so the async read races Python's
+    allocator: a freed-and-reused buffer reaches the device as garbage
+    inputs and books garbage predictions (observed as nondeterministic
+    thetas on disk-warm resumed drains).
+
+    The wrapper pins each call's operand tuple until that call's
+    outputs land, releasing landed calls lazily on the next dispatch —
+    steady state holds at most the pipeline depth.  Calls happen on
+    one drain thread, so no locking.
+    """
+
+    __slots__ = ("_prog", "_inflight")
+
+    def __init__(self, prog):
+        self._prog = prog
+        self._inflight: list = []
+
+    def _release_landed(self) -> None:
+        self._inflight[:] = [
+            (out, args) for out, args in self._inflight
+            if not all(getattr(o, "is_ready", lambda: True)()
+                       for o in jax.tree_util.tree_leaves(out))]
+        # backstop: a caller that never drains still can't pin
+        # unbounded host memory behind un-landed launches
+        while len(self._inflight) > 64:
+            out, _ = self._inflight.pop(0)
+            jax.block_until_ready(out)
+
+    def __call__(self, *args):
+        self._release_landed()
+        out = self._prog(*args)
+        self._inflight.append((out, args))
+        return out
+
+
+def pin_executable(prog) -> _PinnedExecutable:
+    """Wrap an AOT executable so every call keeps its host operands
+    alive until the outputs land (see ``_PinnedExecutable``)."""
+    return _PinnedExecutable(prog)
+
+
 def jax_build() -> str:
     """The jax build a serialized executable is valid for."""
     try:
@@ -211,7 +260,8 @@ class PersistentProgramCache:
             with open(path, "rb") as f:
                 payload, in_tree, out_tree = pickle.loads(f.read())
             from jax.experimental import serialize_executable as se
-            prog = se.deserialize_and_load(payload, in_tree, out_tree)
+            prog = pin_executable(
+                se.deserialize_and_load(payload, in_tree, out_tree))
         except Exception:
             # stale jax build, torn write, foreign blob: evict and miss
             self.errors += 1
@@ -242,7 +292,8 @@ class PersistentProgramCache:
         custom-call-bearing programs (see ``portable``) lean on the XLA
         compilation cache for cross-process relief instead.  Returns
         whether a disk entry was written."""
-        self._process_put(build, platform, fingerprint, compiled)
+        self._process_put(build, platform, fingerprint,
+                          pin_executable(compiled))
         if not self.portable(compiled):
             self.skipped_unportable += 1
             return False

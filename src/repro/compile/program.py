@@ -65,7 +65,7 @@ from repro.compile.buckets import (BucketKey, Entry, MegabatchPlan,
                                    pack_tail_blocks)
 from repro.compile.pages import PagePool
 from repro.compile.persist import (PersistentProgramCache, backend_platform,
-                                   default_persist, jax_build,
+                                   default_persist, jax_build, pin_executable,
                                    program_avals, program_fingerprint)
 from repro.learners import as_batched, get_batched_learner
 from repro.runtime import bounded_put
@@ -188,11 +188,15 @@ class ProgramCache:
         return prog
 
     def _compile_persistable(self, run, fp, key, b_pad, d_pad, g=None):
-        """AOT-compile at exact avals and serialize to disk."""
+        """AOT-compile at exact avals and serialize to disk.  The
+        returned executable is operand-pinned (``pin_executable``):
+        unlike jit dispatch, a direct AOT call does not keep the
+        caller's host operands alive while it reads them
+        asynchronously."""
         compiled = jax.jit(run, donate_argnums=(2,)).lower(
             *program_avals(key, b_pad, d_pad, g)).compile()
         self.persist.store(jax_build(), backend_platform(), fp, compiled)
-        return compiled
+        return pin_executable(compiled)
 
     # BucketKey pins the segment's (learner, params) and padded shapes,
     # which fully determine the batched fn the thunk builds — hence
@@ -532,6 +536,18 @@ class BucketDispatch:
                                 np.empty((blk.tpi, blk.n), np.float32)
                         buf[row] = outs[g, ofs + lane, :blk.n]
         return results
+
+    def discard(self) -> None:
+        """Retire a cancelled dispatch WITHOUT building results: block
+        until the launches land (freeing the runtime's stream in order)
+        and drop the handles.  Shares ``harvest``'s arm-once flag, so a
+        discarded dispatch can never also be booked — and vice versa:
+        the losing leg of a hedge race is structurally unbookable."""
+        from repro.serverless.sanitize import check_harvest_once
+        check_harvest_once(self)
+        for launch in self.launches:
+            jax.block_until_ready(launch.out)
+        self.launches = []
 
 
 # Structural cache of per-request block layouts: the canonical-block

@@ -46,11 +46,14 @@ bucket completion.
 """
 from __future__ import annotations
 
+import glob
+import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import msgpack
 import numpy as np
 
 from repro.core.aggregation import aggregate_thetas, confint
@@ -254,10 +257,22 @@ class DMLSession:
     incomplete requests stay queued with their partially-completed
     ledgers; a later ``run()`` resumes exactly the missing invocations —
     including after swapping ``self.backend`` for a healthier pool.
+
+    **Crash resume** (ISSUE 10): pass ``session_dir`` and the session
+    becomes durable — every ``submit()`` persists the request's full
+    (plan, data) spec (msgpack, atomic), and every admitted request's
+    ``TaskLedger`` is bound to a file the backends checkpoint after each
+    booking wave.  If the process dies mid-drain,
+    ``DMLSession.resume(session_dir)`` in a FRESH process re-submits the
+    saved specs in request-id order with their loaded ledgers: DONE
+    invocations are never re-executed, RUNNING rows re-dispatch, and the
+    determinism contract makes the resumed thetas bitwise-identical to
+    an uninterrupted run.
     """
 
     def __init__(self, backend: Union[str, ExecutionBackend] = "wave",
-                 pool: Optional[PoolConfig] = None):
+                 pool: Optional[PoolConfig] = None,
+                 session_dir: Optional[str] = None):
         # calibrate roofline launch-overhead and shard-overhead pricing
         # on THIS runtime (memoized no-op dispatch probes; constant
         # fallbacks on failure) — the analytic SHARD_OVERHEAD_FRAC
@@ -271,6 +286,9 @@ class DMLSession:
         except Exception:
             pass
         self.backend = make_backend(backend, pool)
+        self.session_dir = session_dir
+        if session_dir is not None:
+            os.makedirs(session_dir, exist_ok=True)
         self._queue: List[_Pending] = []
         self._results: Dict[int, DMLResult] = {}
         self._requests: Dict[int, WorkRequest] = {}
@@ -294,7 +312,55 @@ class DMLSession:
         self._next_id += 1
         self._queue.append(_Pending(rid, plan, data, ledger,
                                     on_complete=on_complete))
+        if self.session_dir is not None:
+            self._persist_spec(rid, plan, data)
         return rid
+
+    # ---- durability ---------------------------------------------------
+    def _spec_path(self, rid: int) -> str:
+        return os.path.join(self.session_dir, f"request_{rid:05d}.msgpack")
+
+    def _ledger_path(self, rid: int) -> str:
+        return os.path.join(self.session_dir, f"ledger_{rid:05d}.msgpack")
+
+    def _persist_spec(self, rid: int, plan: DMLPlan, data: DMLData):
+        """Durably record one admitted request (atomic, like the ledger:
+        a crash never leaves a half-written spec)."""
+        payload = {"rid": rid, "plan": plan.to_payload(),
+                   "data": data.to_payload()}
+        path = self._spec_path(rid)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+
+    @classmethod
+    def resume(cls, session_dir: str, *,
+               backend: Union[str, ExecutionBackend] = "wave",
+               pool: Optional[PoolConfig] = None) -> "DMLSession":
+        """Rebuild a durable session in a fresh process: re-submit every
+        persisted request spec in request-id order with its checkpointed
+        ledger, so the next ``run()``/``poll()`` re-dispatches exactly
+        the not-DONE invocations (RUNNING rows orphaned by the crash
+        included — ``TaskLedger.load`` resets them) and completes every
+        admitted request with bitwise-identical thetas."""
+        sess = cls(backend=backend, pool=pool, session_dir=session_dir)
+        for path in sorted(glob.glob(
+                os.path.join(session_dir, "request_*.msgpack"))):
+            with open(path, "rb") as f:
+                p = msgpack.unpackb(f.read(), raw=False)
+            ledger = None
+            lpath = os.path.join(
+                session_dir, f"ledger_{p['rid']:05d}.msgpack")
+            if os.path.exists(lpath):
+                ledger = TaskLedger.load(lpath)
+                ledger.path = lpath         # keep checkpointing here
+            rid = sess.submit(DMLPlan.from_payload(p["plan"]),
+                              DMLData.from_payload(p["data"]),
+                              ledger=ledger)
+            assert rid == p["rid"], \
+                f"resume id drift: re-submitted as {rid}, saved {p['rid']}"
+        return sess
 
     def _drain_state(self) -> DrainState:
         """The live drain, rebuilt if the backend was swapped (previously
@@ -318,6 +384,11 @@ class DMLSession:
                                   tag=p.request_id)
             p.ledger = req.ledger           # keep completed rows on failure
             p.req = req
+            if self.session_dir is not None and req.ledger.path is None:
+                # bind the durable checkpoint file: backends call
+                # ledger.checkpoint() after every booking wave
+                req.ledger.path = self._ledger_path(p.request_id)
+                req.ledger.checkpoint()
             self.backend.admit(state, req)
             p.admitted = True
         self.last_run_info = state.info

@@ -133,6 +133,34 @@ class DMLData:
         return {k: getattr(self, k) for k in ("y", "d", "z")
                 if getattr(self, k) is not None}
 
+    # ---- durability (crash-resumable sessions, ISSUE 10) -----------------
+    def to_payload(self) -> Dict:
+        """A msgpack-safe dict capturing every role array bit-exactly
+        (raw bytes + dtype + shape) — the durable half of a session's
+        admitted request spec.  Round-tripping through
+        ``from_payload`` reproduces identical fingerprints, so a resumed
+        drain hits the same pages, buckets, and compiled programs."""
+        out: Dict = {}
+        for r in _ROLES:
+            arr = getattr(self, r)
+            if arr is not None:
+                out[r] = {"data": arr.tobytes(), "dtype": str(arr.dtype),
+                          "shape": list(arr.shape)}
+        if self.theta0 is not None:
+            out["theta0"] = float(self.theta0)
+        return out
+
+    @classmethod
+    def from_payload(cls, p: Mapping) -> "DMLData":
+        kw = {}
+        for r in _ROLES:
+            ent = p.get(r)
+            if ent is not None:
+                kw[r] = np.frombuffer(ent["data"], dtype=ent["dtype"]) \
+                          .reshape(tuple(ent["shape"])).copy()
+        t0 = p.get("theta0")
+        return cls(theta0=float(t0) if t0 is not None else None, **kw)
+
 
 # ---------------------------------------------------------------------------
 # plan components
@@ -273,6 +301,46 @@ class DMLPlan:
 
     def replace(self, **kw) -> "DMLPlan":
         return replace(self, **kw)
+
+    # ---- durability (crash-resumable sessions, ISSUE 10) -----------------
+    def to_payload(self) -> Dict:
+        """A msgpack-safe dict of the full plan minus ``pool`` (execution
+        substrate knobs belong to the resuming process, not the durable
+        spec — a resume may deliberately swap in a healthier pool)."""
+        return {
+            "model": self.model,
+            "nuisances": [
+                {"name": ns.name, "target": ns.target,
+                 "learner": ns.learner,
+                 "params": [[k, v] for k, v in ns.params],
+                 "subset": ns.subset}
+                for ns in self.nuisances],
+            "resampling": [self.resampling.n_folds, self.resampling.n_rep,
+                           self.resampling.seed],
+            "score": self.score,
+            "inference": [self.inference.level, self.inference.n_boot,
+                          self.inference.aggregation],
+            "scaling": self.scaling,
+            "backend": self.backend,
+        }
+
+    @classmethod
+    def from_payload(cls, p: Mapping) -> "DMLPlan":
+        # NuisanceSpec.make re-canonicalizes params (msgpack turns the
+        # hashable tuples into lists on the way through)
+        nuisances = tuple(
+            NuisanceSpec.make(ns["name"], ns["target"], ns["learner"],
+                              {k: v for k, v in ns["params"]},
+                              ns["subset"])
+            for ns in p["nuisances"])
+        nf, nr, seed = p["resampling"]
+        level, n_boot, agg = p["inference"]
+        return cls(model=p["model"], nuisances=nuisances,
+                   resampling=ResamplingSpec(nf, nr, seed),
+                   score=p["score"],
+                   inference=InferenceSpec(level=level, n_boot=n_boot,
+                                           aggregation=agg),
+                   scaling=p["scaling"], backend=p["backend"])
 
     # ---- derived ---------------------------------------------------------
     @property

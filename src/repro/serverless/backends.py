@@ -23,8 +23,9 @@ admission from the session layer), with ``run_requests`` kept as the
 batch wrapper (admit everything, step until idle):
 
   WaveBackend     the serverless-analogue wave scheduler (paper §4):
-                  capacity-limited waves, fault injection + retries,
-                  straggler speculation, elastic worker schedules or the
+                  capacity-limited waves, identity-keyed fault injection
+                  + backoff retries (serverless/chaos.py), deadline-based
+                  hedged re-dispatch, elastic worker schedules or the
                   occupancy autoscaler (serverless/autoscale.py), Lambda
                   billing.  Waves are SHARED across requests — a wave's
                   lanes map onto bucket slices, so one warm program
@@ -69,9 +70,10 @@ from repro.analysis.registry import warm_cache
 from repro.runtime import bounded_put
 from repro.serverless import sanitize
 from repro.serverless.autoscale import AutoscaleDecision, OccupancyAutoscaler
+from repro.serverless.chaos import chaos_plan
 from repro.serverless.cost import Bill, BillingRecord, speedup_of
 from repro.serverless.dispatch import (
-    DispatchQueue, DispatchStats, PendingBucket,
+    DispatchQueue, DispatchStats, HedgePair, PendingBucket,
 )
 from repro.serverless.ledger import DONE, TaskLedger
 
@@ -148,7 +150,6 @@ class PoolConfig:
     failure_rate: float = 0.0           # fault injection (per invocation)
     straggler_rate: float = 0.0         # P(invocation is a straggler)
     straggler_slowdown: float = 4.0
-    speculative_after: float = 2.0      # duplicate if > x median duration
     simulate: bool = False              # model durations via the speed curve
     base_work_s: float = 0.0            # simulated seconds per task @1 vCPU
     dispatch_overhead_s: float = 0.005  # per-wave dispatch latency
@@ -188,12 +189,30 @@ class PoolConfig:
     # opt-out of bitwise reproducibility the jaxpr auditor reports
     coalesce: bool = True
     morph_tolerance: float = 0.0
-    # double-buffered dispatch (ISSUE 7): waves a fault-free drain may
-    # hold unsettled while filling/stacking the next one (wave k+1's
-    # host work overlaps wave k's device execution).  Chaos pools
-    # (simulate/failure/straggler) always run wave-synchronous so fault
-    # RNG draw order is preserved
+    # double-buffered dispatch (ISSUE 7): waves a drain may hold
+    # unsettled while filling/stacking the next one (wave k+1's host
+    # work overlaps wave k's device execution).  Since ISSUE 10 chaos
+    # pools pipeline too: fault verdicts are drawn per invocation
+    # identity (serverless/chaos.py), not from an order-pinned stream
     pipeline_depth: int = 2
+    # fault-tolerant drain (ISSUE 10): capped exponential backoff before
+    # a failed invocation is re-dispatched (0 retries immediately — the
+    # in-process default, where re-dispatch is the recovery)
+    retry_backoff_s: float = 0.0
+    retry_backoff_cap_s: float = 0.25
+    # synthetic straggler long tail: a bucket carrying a straggler
+    # verdict reports not-ready for this long after its launches land,
+    # so the deadline/hedge machinery has a real tail to cut (0: off)
+    straggler_hold_s: float = 0.0
+    # hedged re-dispatch: None arms hedging exactly when a fault plan is
+    # active (chaos pools / REPRO_CHAOS); True/False force it.  An
+    # overdue in-flight bucket gets a duplicate dispatch — on another
+    # host under the topology backend — and first-landing wins
+    hedge: Optional[bool] = None
+    # fixed overdue threshold override; None derives the deadline from
+    # the bucket's roofline (launch/roofline.py::bucket_deadline_s),
+    # capped by timeout_s
+    hedge_after_s: Optional[float] = None
 
     def lanes_per_worker(self) -> int:
         """Worker 'memory' buys lane width (DESIGN.md §2 mapping)."""
@@ -458,16 +477,19 @@ class DrainState:
     """Mutable state of one continuous drain.
 
     Owns the incremental ``MegabatchPlan`` (its request list is the
-    admission order), one lazily-created fault-injection Philox stream
-    per admitted slot (slot i reproduces the batch path's ``seed + i``
-    draw-for-draw; fault-free pools never create them), the in-flight
-    dispatch ``queue`` (non-blocking dispatch), and the cross-request
+    admission order), the pool's fault plan (``chaos``,
+    serverless/chaos.py — None for fault-free pools, whose hot path
+    then pays nothing), the retry-backoff gates, the in-flight dispatch
+    ``queue`` (non-blocking dispatch), and the cross-request
     ``BackendRunInfo``.  The session layer holds one of these per live
     drain and interleaves ``admit`` with ``step``.
     """
     plan: "MegabatchPlan"
     info: BackendRunInfo
-    rngs: List[np.random.Generator] = field(default_factory=list)
+    chaos: Optional[object] = None      # serverless/chaos.py::ChaosPlan
+    # (req slot, invocation) -> perf_counter time before which a failed
+    # row may not be re-dispatched (capped exponential backoff)
+    retry_at: Dict[Tuple[int, int], float] = field(default_factory=dict)
     wave: int = 0
     seen_buckets: set = field(default_factory=set)
     finalized: set = field(default_factory=set)
@@ -537,6 +559,7 @@ class _StreamBackend:
         if self.pages is not None:
             info.pages = self.pages.stats
         state = DrainState(plan=_compile().MegabatchPlan(), info=info)
+        state.chaos = chaos_plan(self.pool)
         state.queue = DispatchQueue(self.pool.max_inflight)
         info.dispatch = state.queue.stats
         return state
@@ -558,22 +581,15 @@ class _StreamBackend:
                 "morph_tolerance": self.pool.morph_tolerance}
 
     def admit(self, state: DrainState, req: WorkRequest) -> int:
-        """Lower one request into the live plan; its fault stream is keyed
-        by admission slot, so the batch path reproduces the old
-        per-request ``seed + i`` streams draw-for-draw.  Streams are
-        created lazily (``_slot_rng``): the fault-free hot path never
-        pays the per-slot Philox init."""
+        """Lower one request into the live plan.  The admission slot is
+        the request's identity in the drain's fault plan
+        (serverless/chaos.py): verdicts are drawn per
+        (slot, invocation, attempt), so no schedule — bucket-coherent
+        fill, pipelining, hedges, host loss, resume — can perturb the
+        fault pattern."""
         ri = state.plan.admit(req)
-        state.rngs.append(None)
         self._finalize_request(state, ri)   # resumed-complete ledgers
         return ri
-
-    def _slot_rng(self, state: DrainState, ri: int) -> np.random.Generator:
-        rng = state.rngs[ri]
-        if rng is None:
-            rng = state.rngs[ri] = np.random.Generator(
-                np.random.Philox(key=self.pool.seed + ri))
-        return rng
 
     def run_requests(self, requests: Sequence[WorkRequest]) -> BackendRunInfo:
         state = self.begin_drain()
@@ -604,6 +620,8 @@ class _StreamBackend:
                                      + self.pool.dispatch_overhead_s)
 
     def _checkpoint(self, state: DrainState):
+        for req in state.requests:
+            req.ledger.checkpoint()      # durable sessions bind a path
         if not self.pool.checkpoint_path:
             return
         for i, req in enumerate(state.requests):
@@ -612,7 +630,47 @@ class _StreamBackend:
             req.ledger.save(path)
 
     def _book_direct(self, state: DrainState, entries, results, wall: float):
-        """Record one bucket launch for the fault-free schedulers."""
+        """Record one bucket launch: ledger bookings, billing, retries.
+
+        Fault-free pools (``state.chaos is None``) batch-book everything
+        with zero per-invocation work — the hot path is unchanged.
+        Chaos pools consult the fault plan per entry: a failed verdict
+        books a failure (retry-budget checked) and arms a backoff gate
+        in ``state.retry_at`` so the row re-enters the pending view only
+        once its gate matures; survivors book normally.  Verdicts are
+        identity-keyed, so this booking is legal in ANY order — the
+        bucket-coherent fill and pipeline stay on under chaos."""
+        n_launch = max(len(entries), 1)
+        plan = state.chaos
+        exhausted: Optional[int] = None
+        if plan is not None:
+            now = time.perf_counter()
+            ok: List[Tuple[int, int]] = []
+            for ri, inv in entries:
+                req = state.requests[ri]
+                ledger = req.ledger
+                if ledger.status[inv] == DONE:
+                    continue             # lost a re-dispatch race (resume)
+                att = int(ledger.attempts[inv])
+                v = plan.verdict(ri, inv, att)
+                if v.straggler:
+                    req.report.stragglers += 1
+                if v.failed:
+                    if att >= self.pool.max_retries:
+                        # defer the abort: sibling successes in this
+                        # slice still book (the ledger philosophy —
+                        # completed work is durable, an abort never
+                        # discards it)
+                        exhausted = inv
+                        continue
+                    sanitize.check_booking(ledger, inv, "record_failure")
+                    ledger.record_failure(inv)
+                    req.report.failures += 1
+                    state.retry_at[(ri, inv)] = \
+                        now + plan.backoff_s(int(ledger.attempts[inv]))
+                    continue
+                ok.append((ri, inv))
+            entries = ok
         per_req: Dict[int, List[int]] = {}
         for ri, inv in entries:
             per_req.setdefault(ri, []).append(inv)
@@ -622,9 +680,12 @@ class _StreamBackend:
             req.ledger.record_successes(
                 invs, np.stack([results[(ri, inv)] for inv in invs]))
             _fill_rows(req, np.asarray(invs),
-                       wall * len(invs) / len(entries), self.pool)
+                       wall * len(invs) / n_launch, self.pool)
             req.report.waves += 1
             req.report.wave_sizes.append(len(invs))
+        if exhausted is not None:
+            raise RuntimeError(
+                f"invocation {exhausted} exceeded retry budget")
         return per_req
 
     def _note_wave(self, state: DrainState, ris, step_wall: float):
@@ -643,6 +704,134 @@ class _StreamBackend:
             state.requests[ri].report.fit_time_s += step_wall
             state.requests[ri].report.response_time_s += step_wall
             self._finalize_request(state, ri)
+
+    # ---- fault-tolerant dispatch (ISSUE 10) --------------------------
+    def _hedge_armed(self, state: DrainState) -> bool:
+        """Hedged re-dispatch is on when the pool says so, else exactly
+        when a fault plan is active (chaos is what makes tails long)."""
+        if self.pool.hedge is not None:
+            return self.pool.hedge
+        return state.chaos is not None
+
+    def _deadline_for(self, state: DrainState, bkey,
+                      entries) -> Optional[float]:
+        """Overdue threshold for one dispatched bucket slice: the pool's
+        fixed override, else the roofline-derived deadline capped by
+        timeout_s.  None disarms hedging for this bucket."""
+        if not self._hedge_armed(state) or not entries:
+            return None
+        pool = self.pool
+        if pool.hedge_after_s is not None:
+            return pool.hedge_after_s
+        ident = bkey.learner
+        if not (isinstance(ident, tuple) and len(ident) == 2
+                and isinstance(ident[0], str)) or ident[0] == "opaque":
+            # no analytic model: the Lambda cap is the only deadline
+            return pool.timeout_s
+        from repro.launch.roofline import bucket_deadline_s
+        learner, ptuple = ident
+        ri = entries[0][0]
+        req = state.requests[ri]
+        d = bucket_deadline_s(learner, dict(ptuple),
+                              req.grid.tasks_per_invocation(req.scaling),
+                              bkey.n_pad, bkey.p_pad, len(entries),
+                              n_workers=len(entries))
+        return min(d, pool.timeout_s)
+
+    def _hold_for(self, state: DrainState, entries) -> float:
+        """Synthetic straggler tail: when the pool opts in
+        (straggler_hold_s > 0) and any entry of the slice draws a
+        straggler verdict, the bucket reports not-ready for the hold —
+        the long tail a hedged duplicate then beats."""
+        plan = state.chaos
+        hold = self.pool.straggler_hold_s
+        if plan is None or hold <= 0:
+            return 0.0
+        for ri, inv in entries:
+            att = int(state.requests[ri].ledger.attempts[inv])
+            if plan.verdict(ri, inv, att).straggler:
+                return hold
+        return 0.0
+
+    def _push_bucket(self, state: DrainState, q: DispatchQueue, bd,
+                     book, host: int = -1) -> PendingBucket:
+        """Wrap one dispatched bucket with its fault-tolerance context
+        (deadline, straggler hold) and enqueue it."""
+        hold = self._hold_for(state, bd.entries)
+        pb = PendingBucket(
+            dispatch=bd, host=host,
+            deadline_s=self._deadline_for(state, bd.key, bd.entries),
+            not_ready_before=(time.perf_counter() + hold) if hold else 0.0)
+        q.push(pb, book)
+        return pb
+
+    def _hedge_dispatch_kwargs(self, state: DrainState, bkey,
+                               entries) -> Dict:
+        """Extra dispatch_bucket kwargs a hedge must replicate so both
+        legs run the identical compiled program (bitwise race)."""
+        return {}
+
+    def _maybe_hedge(self, state: DrainState) -> int:
+        """Duplicate-dispatch every overdue in-flight bucket (single
+        stream: the duplicate lands on the same queue — the topology
+        backend overrides placement to a different host)."""
+        q = state.queue
+        if q is None or not self._hedge_armed(state):
+            return 0
+        n = 0
+        for pb in q.overdue():
+            self._hedge_bucket(state, pb, q, q,
+                               compiler=self.compiler, pages=self.pages,
+                               host=pb.host)
+            n += 1
+        return n
+
+    def _hedge_bucket(self, state: DrainState, pb: PendingBucket,
+                      owner_q: DispatchQueue, push_q: DispatchQueue, *,
+                      compiler, pages, host: int = -1) -> PendingBucket:
+        """Launch the duplicate leg of an overdue bucket and wire the
+        race: same key, same entries, same per-task fold_in keys — so
+        whichever leg lands first books bitwise-identical results.  The
+        winner's harvest settles the pair (HedgePair.settle, the sole
+        cancel performer) and the loser is discarded unbooked."""
+        sanitize.check_hedge(pb)
+        running: Dict[int, List[int]] = {}
+        for ri, inv in pb.entries:
+            running.setdefault(ri, []).append(inv)
+        for ri, invs in running.items():
+            # RUNNING -> RUNNING (legal re-mark): a checkpoint taken
+            # mid-race must still re-queue these rows on restart
+            state.requests[ri].ledger.mark_running(invs)
+        bd = _compile().dispatch_bucket(
+            state.plan, compiler, pb.key, list(pb.entries), pages=pages,
+            **self._hedge_dispatch_kwargs(state, pb.key, pb.entries),
+            **self._dispatch_opts())
+        pair = HedgePair()
+        hpb = PendingBucket(dispatch=bd, host=host, book=pb.book,
+                            is_hedge=True, pair=pair)
+        pair.legs = [(pb, owner_q), (hpb, push_q)]
+        pb.state = "HEDGED"
+        pb.pair = pair
+        push_q.stats.hedges += 1
+        push_q.push(hpb)
+        return hpb
+
+    def _backoff_filter(self, state: DrainState,
+                        entries) -> Tuple[List, Optional[float]]:
+        """Drop entries whose retry gate has not matured; purge matured
+        gates.  Returns (dispatchable entries, seconds until the
+        earliest still-armed gate — None when nothing is gated)."""
+        if not state.retry_at:
+            return list(entries), None
+        now = time.perf_counter()
+        for e, t in list(state.retry_at.items()):
+            if t <= now:
+                del state.retry_at[e]
+        if not state.retry_at:
+            return list(entries), None
+        out = [e for e in entries if (e[0], int(e[1])) not in state.retry_at]
+        wait = min(state.retry_at.values()) - now
+        return out, max(wait, 0.0)
 
 
 class _BucketStreamBackend(_StreamBackend):
@@ -673,17 +862,46 @@ class _BucketStreamBackend(_StreamBackend):
         """Booking callback the queue fires at harvest: ledgers, bills,
         wave accounting, early finalization, checkpoint."""
         per_req = self._book_direct(state, pb.entries, results, elapsed)
-        self._note_wave(state, list(per_req), elapsed)
+        if per_req:     # chaos can fail a whole slice — nothing to book
+            self._note_wave(state, list(per_req), elapsed)
         self._checkpoint(state)
+
+    def _hedge_dispatch_kwargs(self, state: DrainState, bkey,
+                               entries) -> Dict:
+        return {"b_align": self._b_align(),
+                "axis_decision": self._plan_axis(state, bkey, entries),
+                "mesh": self._axis_mesh()}
 
     def step(self, state: DrainState) -> bool:
         q = state.queue
         book = lambda pb, res, el: self._book_harvest(state, pb, res, el)
         q.harvest_ready(book)               # opportunistic booking
+        self._maybe_hedge(state)
         groups = state.plan.pending_by_bucket(
             exclude=q.in_flight_entries())
+        gate_wait: Optional[float] = None
+        if groups and state.retry_at:
+            filtered = {}
+            for bkey, entries in groups.items():
+                ents, gate_wait = self._backoff_filter(state, entries)
+                if ents:
+                    filtered[bkey] = ents
+            groups = filtered
         if not groups:
+            if not q.empty and self._hedge_armed(state):
+                # poll instead of blocking: a held straggler leg must
+                # not stall the tail drain while its hedged duplicate
+                # can land first and win the race
+                self._maybe_hedge(state)
+                if q.harvest_ready(book) == 0:
+                    time.sleep(0.001)
+                return True
             if q.harvest_next(book):        # drain the in-flight tail
+                return True
+            if gate_wait is not None:
+                # every pending row is backoff-gated: wait the earliest
+                # gate out instead of spinning (or stalling the drain)
+                time.sleep(min(gate_wait, 0.05))
                 return True
             return False
         bkey, entries = next(iter(groups.items()))
@@ -698,7 +916,7 @@ class _BucketStreamBackend(_StreamBackend):
             b_align=self._b_align(), pages=self.pages,
             axis_decision=decision, mesh=self._axis_mesh(),
             **self._dispatch_opts())
-        q.push(PendingBucket(dispatch=bd), book)
+        self._push_bucket(state, q, bd, book)
         state.seen_buckets.add(bkey)
         state.info.buckets = len(state.seen_buckets)
         state.info.waves += 1
@@ -857,10 +1075,14 @@ class WaveBackend(_StreamBackend):
     bucket regardless of which request it came from.  Per wave the
     scheduler:
 
-      * injects faults (per-slot Philox streams) and re-queues failures
-        (Lambda retry, first-attempt only so retries converge),
-      * duplicates straggler suspects when capacity is spare (speculative
-        execution, first-result-wins),
+      * books fault verdicts from the drain's identity-keyed fault plan
+        (serverless/chaos.py) and re-queues failures with capped
+        exponential backoff (Lambda retry, injected failures
+        first-attempt-only so retries converge),
+      * hedges overdue in-flight buckets with a duplicate dispatch
+        (deadline from launch/roofline.py::bucket_deadline_s, capped by
+        timeout_s) — first-landing wins, the losing leg is cancelled
+        and never booked nor billed,
       * re-sizes the pool — static ``worker_schedule`` if given, else the
         occupancy autoscaler (queue depth x padding waste priced through
         the Lambda cost model) when ``pool.autoscale`` is set,
@@ -914,15 +1136,6 @@ class WaveBackend(_StreamBackend):
             return decision.n_workers
         return pool.n_workers
 
-    def _chaos(self) -> bool:
-        """Does this pool inject faults/stragglers or model durations?
-        Chaos pools run wave-synchronous (the legacy barrier) so the
-        per-slot Philox draw order — and with it every fault pattern —
-        is identical to the pre-pipelined scheduler."""
-        pool = self.pool
-        return pool.simulate or pool.straggler_rate > 0 \
-            or pool.failure_rate > 0
-
     def _fill_bucket_coherent(self, state: DrainState,
                               pendings: List[np.ndarray],
                               capacity: int) -> List[_Entry]:
@@ -971,63 +1184,68 @@ class WaveBackend(_StreamBackend):
         return batch
 
     def step(self, state: DrainState) -> bool:
-        """Dispatch one wave — and, fault-free, pipeline it: the wave's
-        buckets stay in flight while the next step fills and stacks
-        wave k+1, up to ``pool.pipeline_depth`` unsettled waves.  Books
-        via per-wave latches (book-at-push); False once nothing is
-        pending and the pipeline has drained."""
+        """Dispatch one wave and pipeline it: the wave's buckets stay in
+        flight while the next step fills and stacks wave k+1, up to
+        ``pool.pipeline_depth`` unsettled waves — under chaos too, since
+        fault verdicts are identity-keyed (serverless/chaos.py) and so
+        immune to dispatch order.  Books via per-wave latches
+        (book-at-push); False once nothing is pending and the pipeline
+        has drained."""
         pool = self.pool
         requests = state.requests
         q = state.queue
-        pipelined = not self._chaos()
-        if pipelined:
-            # opportunistic booking: settle any wave whose buckets all
-            # landed while the host was filling the previous wave
-            q.harvest_ready()
-            # ledger.pending() includes RUNNING rows, so the wave fill
-            # must exclude every entry still in flight: on the queue OR
-            # in an unsettled wave latch — a harvested bucket leaves the
-            # queue before its wave settles (and books), and re-dispatching
-            # its rows would double-book them
-            inflight = q.in_flight_entries()
-            for latch in state.waves_inflight:
-                inflight.update((e.req_idx, e.inv) for e in latch.dispatch)
-            pendings = [np.asarray([i for i in req.ledger.pending()
-                                    if (ri, int(i)) not in inflight],
-                                   np.int64)
-                        for ri, req in enumerate(requests)]
-        else:
-            pendings = [req.ledger.pending() for req in requests]
+        # opportunistic booking: settle any wave whose buckets all
+        # landed while the host was filling the previous wave; then
+        # duplicate-dispatch anything overdue
+        q.harvest_ready()
+        self._maybe_hedge(state)
+        # ledger.pending() includes RUNNING rows, so the wave fill
+        # must exclude every entry still in flight: on the queue OR
+        # in an unsettled wave latch — a harvested bucket leaves the
+        # queue before its wave settles (and books), and re-dispatching
+        # its rows would double-book them.  Failed rows under backoff
+        # stay out until their retry gate matures.
+        inflight = q.in_flight_entries()
+        for latch in state.waves_inflight:
+            inflight.update((e.req_idx, e.inv) for e in latch.dispatch)
+        gate_wait: Optional[float] = None
+        gated: set = set()
+        if state.retry_at:
+            now = time.perf_counter()
+            for e, t in list(state.retry_at.items()):
+                if t <= now:
+                    del state.retry_at[e]
+            if state.retry_at:
+                gated = set(state.retry_at)
+                gate_wait = max(min(state.retry_at.values()) - now, 0.0)
+        pendings = [np.asarray([i for i in req.ledger.pending()
+                                if (ri, int(i)) not in inflight
+                                and (ri, int(i)) not in gated],
+                               np.int64)
+                    for ri, req in enumerate(requests)]
         if all(len(p) == 0 for p in pendings):
-            if pipelined and q.harvest_next():
+            if not q.empty and self._hedge_armed(state):
+                # poll instead of blocking: a held straggler leg must
+                # not stall the tail drain while its hedged duplicate
+                # can land first and win the race
+                self._maybe_hedge(state)
+                if q.harvest_ready() == 0:
+                    time.sleep(0.001)
+                return True
+            if q.harvest_next():
                 return True         # drain the in-flight pipeline tail
+            if gate_wait is not None:
+                # everything pending is backoff-gated: wait the
+                # earliest gate out instead of stalling the drain
+                time.sleep(min(gate_wait, 0.05))
+                return True
             return False
-        t0 = time.perf_counter()
         n_workers = self._wave_workers(state, pendings)
         capacity = max(1, n_workers * pool.lanes_per_worker())
 
-        # ---- fill the wave ----------------------------------------------
-        if pipelined:
-            batch = self._fill_bucket_coherent(state, pendings, capacity)
-        else:
-            # legacy round-robin fill: chaos pools pin the per-slot
-            # Philox draw order, so the pre-pipelined order must not move
-            batch = []
-            cursors = [0] * len(requests)
-            while len(batch) < capacity:
-                progressed = False
-                for ri, p in enumerate(pendings):
-                    if cursors[ri] < len(p) and len(batch) < capacity:
-                        batch.append(_Entry(ri, int(p[cursors[ri]])))
-                        cursors[ri] += 1
-                        progressed = True
-                if not progressed:
-                    break
-        spare = capacity - len(batch)
+        # ---- fill the wave (whole-bucket units, ISSUE 8) ----------------
+        batch = self._fill_bucket_coherent(state, pendings, capacity)
         dispatch = list(batch)
-        if spare > 0 and pool.straggler_rate > 0 and batch:
-            dispatch += [_Entry(e.req_idx, e.inv, True)
-                         for e in batch[:min(spare, len(batch))]]
 
         # ---- execute: one compiled launch per bucket in the wave --------
         members: List[object] = []
@@ -1038,7 +1256,7 @@ class WaveBackend(_StreamBackend):
                 members.append(tag)
         state.info.wave_members.append(members)
         unique: Dict[Tuple[int, int], None] = {}
-        for e in dispatch:                  # speculative lanes share results
+        for e in dispatch:
             unique.setdefault((e.req_idx, e.inv))
         running: Dict[int, List[int]] = {}
         for ri, inv in unique:
@@ -1047,72 +1265,46 @@ class WaveBackend(_StreamBackend):
             requests[ri].ledger.mark_running(invs)
         # dispatch every bucket of the wave without blocking — all of a
         # wave's launches execute concurrently on device while the host
-        # stacks the next bucket's tensors
+        # stacks the next bucket's tensors.  The wave's buckets carry a
+        # latch that settles (books + bills) when its last bucket lands
+        # — possibly steps later, while wave k+1 is already filling
         groups = state.plan.group_entries(list(unique))
-        if pipelined:
-            # two-deep pipeline: the wave's buckets carry a latch that
-            # settles (books + bills) when its last bucket lands —
-            # possibly steps later, while wave k+1 is already filling
-            ctx = _WaveLatch(dispatch=dispatch, outstanding=len(groups))
-            state.waves_inflight.append(ctx)
+        ctx = _WaveLatch(dispatch=dispatch, outstanding=len(groups))
+        state.waves_inflight.append(ctx)
 
-            def book(pb, res, elapsed):
-                ctx.results.update(res)
-                per = elapsed / max(len(pb.entries), 1)
-                for ri, _ in pb.entries:
-                    ctx.wall_of_req[ri] = ctx.wall_of_req.get(ri, 0.0) + per
-                ctx.outstanding -= 1
-                if ctx.outstanding == 0:
-                    self._settle_wave(state, ctx)
-        else:
-            # legacy wave barrier: fault booking needs results in hand,
-            # in the exact per-wave order the fault RNG streams expect
-            results: Dict[Tuple[int, int], np.ndarray] = {}
-            wall_of_req: Dict[int, float] = {}
-
-            def book(pb, res, elapsed):
-                results.update(res)
-                per = elapsed / max(len(pb.entries), 1)
-                for ri, _ in pb.entries:
-                    wall_of_req[ri] = wall_of_req.get(ri, 0.0) + per
+        def book(pb, res, elapsed):
+            ctx.results.update(res)
+            per = elapsed / max(len(pb.entries), 1)
+            for ri, _ in pb.entries:
+                ctx.wall_of_req[ri] = ctx.wall_of_req.get(ri, 0.0) + per
+            ctx.outstanding -= 1
+            if ctx.outstanding == 0:
+                self._settle_wave(state, ctx)
 
         for bkey, ents in groups.items():
             state.seen_buckets.add(bkey)
             bd = _compile().dispatch_bucket(state.plan, self.compiler,
                                             bkey, ents, pages=self.pages,
                                             **self._dispatch_opts())
-            q.push(PendingBucket(dispatch=bd), book)
+            self._push_bucket(state, q, bd, book)
         state.wave += 1
         state.info.buckets = len(state.seen_buckets)
         state.info.waves = state.wave
-        if pipelined:
-            # bound the pipeline: block-harvest oldest buckets until at
-            # most pipeline_depth waves remain unsettled
-            depth = max(1, pool.pipeline_depth)
+        # bound the pipeline: block-harvest oldest buckets until at
+        # most pipeline_depth waves remain unsettled
+        depth = max(1, pool.pipeline_depth)
+        if self._hedge_armed(state):
+            # poll, don't block: a blocked harvest picks the held
+            # straggler and sleeps out the very hold the hedged
+            # duplicate exists to beat — every race would settle for
+            # the original
+            while len(state.waves_inflight) > depth and not q.empty:
+                self._maybe_hedge(state)
+                if q.harvest_ready() == 0:
+                    time.sleep(0.001)
+        else:
             while len(state.waves_inflight) > depth and q.harvest_next():
                 pass
-            return True
-        q.harvest_all(book)
-        touched = []
-        for ri, req in enumerate(requests):
-            entries = [e for e in dispatch if e.req_idx == ri]
-            if not entries:
-                continue
-            self._book_request_wave(req, ri, entries, results,
-                                    lambda: self._slot_rng(state, ri), pool,
-                                    wall_of_req.get(ri, 0.0))
-            touched.append(ri)
-        step_wall = time.perf_counter() - t0
-        if self.autoscaler is not None and dispatch and not pool.simulate:
-            self.autoscaler.observe(step_wall / len(dispatch))
-        for ri in touched:
-            if not pool.simulate:
-                # a request pays wall time only for waves it rode in, so
-                # early-completing requests report early latencies
-                requests[ri].report.response_time_s += step_wall
-                requests[ri].report.fit_time_s += step_wall
-            self._finalize_request(state, ri)
-        self._checkpoint(state)
         return True
 
     def _settle_wave(self, state: DrainState, ctx: _WaveLatch):
@@ -1129,9 +1321,8 @@ class WaveBackend(_StreamBackend):
             entries = [e for e in ctx.dispatch if e.req_idx == ri]
             if not entries:
                 continue
-            self._book_request_wave(req, ri, entries, ctx.results,
-                                    lambda: self._slot_rng(state, ri), pool,
-                                    ctx.wall_of_req.get(ri, 0.0))
+            self._book_request_wave(state, req, ri, entries, ctx.results,
+                                    pool, ctx.wall_of_req.get(ri, 0.0))
             touched.append(ri)
         if self.autoscaler is not None and ctx.dispatch:
             total = sum(ctx.wall_of_req.values())
@@ -1145,19 +1336,21 @@ class WaveBackend(_StreamBackend):
         self._checkpoint(state)
 
     # ------------------------------------------------------------------
-    def _book_request_wave(self, req: WorkRequest, ri: int,
-                           entries: List[_Entry], results: Dict,
-                           rng_fn, pool: PoolConfig, wall: float):
-        """Book one request's share of a wave: billing, fault injection,
-        retries, speculation.  Predictions were already computed by the
-        wave's bucket launches (``results``) — scheduling chaos can only
-        reorder work, never change an estimate.
+    def _book_request_wave(self, state: DrainState, req: WorkRequest,
+                           ri: int, entries: List[_Entry], results: Dict,
+                           pool: PoolConfig, wall: float):
+        """Book one request's share of a wave: billing, fault verdicts,
+        retries.  Predictions were already computed by the wave's bucket
+        launches (``results``) — chaos can only reorder or repeat work,
+        never change an estimate.
 
-        ``rng_fn`` resolves the slot's lazy Philox stream.  A fault-free
-        pool (no simulate/straggler/failure) consumes NO draws — the
-        stream is never even created, which keeps the warm serving path
-        free of per-wave RNG cost; chaotic pools draw in the exact
-        legacy order so fault patterns stay reproducible."""
+        Fault verdicts come from the drain's identity-keyed fault plan
+        (serverless/chaos.py).  A fault-free pool consults nothing and
+        batch-books (no draws, no per-invocation loop), keeping the warm
+        serving path free of per-wave RNG cost; a chaos pool sees the
+        same fault schedule whatever order waves, hedges, retries, or
+        resumes book in — which is what lets chaos pools ride the
+        pipelined bucket-coherent fill at all."""
         tpi = req.grid.tasks_per_invocation(req.scaling)
         n_obs = req.ledger.n_obs
         ledger, report = req.ledger, req.report
@@ -1167,10 +1360,8 @@ class WaveBackend(_StreamBackend):
         for i, e in enumerate(entries):
             preds_rows[i] = results[(ri, e.inv)]
 
-        chaos = pool.simulate or pool.straggler_rate > 0 \
-            or pool.failure_rate > 0
-        rng = rng_fn() if chaos else None
-        if rng is None:
+        plan = state.chaos
+        if plan is None:
             # fault-free fast path: batch-book everything (no draws, no
             # per-invocation loop) unless the measured wall tripped the
             # timeout cap — then fall through to the general machinery
@@ -1186,33 +1377,42 @@ class WaveBackend(_StreamBackend):
                 report.wave_sizes.append(len(entries))
                 report.waves += 1
                 return
-        # --- per-invocation durations (measured or simulated) ------------
-        if pool.simulate:
-            base = pool.base_work_s * tpi / speedup_of(pool.memory_mb)
-            noise = rng.lognormal(0.0, 0.08, len(entries))
-            durs = base * noise
+            durs = np.full(len(entries), per)
+            failed = durs > pool.timeout_s                # lambda cap
         else:
-            durs = np.full(len(entries), wall / max(len(entries), 1))
-        if chaos:
-            is_strag = rng.random(len(entries)) < pool.straggler_rate
+            # --- per-invocation verdicts and durations -------------------
+            atts = ledger.attempts[inv_arr]
+            verdicts = [plan.verdict(ri, int(e.inv), int(atts[i]))
+                        for i, e in enumerate(entries)]
+            if pool.simulate:
+                base = pool.base_work_s * tpi / speedup_of(pool.memory_mb)
+                durs = base * np.array([v.noise for v in verdicts])
+            else:
+                durs = np.full(len(entries), wall / max(len(entries), 1))
+            is_strag = np.array([v.straggler for v in verdicts], bool)
             durs = np.where(is_strag, durs * pool.straggler_slowdown, durs)
             report.stragglers += int(is_strag.sum())
-        # fault injection (first-attempt only so retries converge)
-        first_try = ledger.attempts[inv_arr] == 0
-        failed = (rng.random(len(entries)) < pool.failure_rate) & first_try \
-            if chaos else np.zeros(len(entries), bool)
-        failed |= durs > pool.timeout_s                   # lambda timeout cap
+            # injected failures fire on attempt 0 only (retries converge)
+            failed = np.array([v.failed for v in verdicts], bool)
+            failed |= durs > pool.timeout_s               # lambda cap
 
+        now = time.perf_counter()
+        exhausted = None
         for i, e in enumerate(entries):
-            if ledger.status[e.inv] == DONE:   # speculative lost the race
+            if ledger.status[e.inv] == DONE:   # duplicate lost the race
                 continue
             if failed[i]:
                 if ledger.attempts[e.inv] >= pool.max_retries:
-                    raise RuntimeError(
-                        f"invocation {e.inv} exceeded retry budget")
+                    # defer the abort until the wave's sibling
+                    # successes are booked (completed work is durable)
+                    exhausted = int(e.inv)
+                    continue
                 sanitize.check_booking(ledger, e.inv, "record_failure")
                 ledger.record_failure(e.inv)
                 report.failures += 1
+                if plan is not None:
+                    state.retry_at[(ri, int(e.inv))] = \
+                        now + plan.backoff_s(int(ledger.attempts[e.inv]))
                 continue
             sanitize.check_booking(ledger, e.inv, "record_success")
             ledger.record_success(int(e.inv), preds_rows[i])
@@ -1227,6 +1427,9 @@ class WaveBackend(_StreamBackend):
             # response time = slowest invocation in flight this wave
             report.response_time_s += float(np.max(durs)) \
                 + pool.dispatch_overhead_s
+        if exhausted is not None:
+            raise RuntimeError(
+                f"invocation {exhausted} exceeded retry budget")
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,21 @@ Accounting (``DispatchStats``) feeds BENCH_fusion.json: ``wait_s`` is
 host time spent blocked on the device, ``host_overlap_s`` is host work
 performed while launches were in flight — their ratio is the measured
 overlap of host booking with device execution.
+
+Fault tolerance (ISSUE 10) lives at this layer too.  An in-flight
+bucket carries an optional **deadline** (roofline-derived, capped by
+``PoolConfig.timeout_s``); once overdue, the backend dispatches a
+**hedged duplicate** — on a different host under the topology backend —
+and the two legs race.  First to land wins and is booked; ``HedgePair.
+settle`` (the protocol's SOLE cancel performer) cancels the loser, whose
+dispatch is discarded without booking and whose wall-clock span is
+charged to ``hedge_waste_s`` instead of the request bill, so the
+GB-second ``Bill`` and the autoscaler EMAs see exactly one span per
+completed bucket.  A host death abandons its whole queue
+(``abandon()``): the orphans transition to LOST and their invocations
+resurface in the ledger-driven pending view for re-dispatch elsewhere.
+Every transition is checked against ``analysis/protocol.py``'s
+``BUCKET_TRANSITIONS`` table when ``REPRO_SANITIZE`` is armed.
 """
 from __future__ import annotations
 
@@ -42,6 +57,11 @@ class DispatchStats:
     wait_s: float = 0.0                 # host blocked on the device
     host_overlap_s: float = 0.0         # host work while work in flight
     in_flight_peak: int = 0             # max concurrent pending buckets
+    hedges: int = 0                     # duplicate dispatches launched
+    hedge_wins: int = 0                 # races won by the duplicate
+    cancelled: int = 0                  # losing legs discarded unbooked
+    lost: int = 0                       # buckets abandoned to host loss
+    hedge_waste_s: float = 0.0          # wall attributed to losing legs
 
     @property
     def overlap_ratio(self) -> float:
@@ -58,7 +78,12 @@ class DispatchStats:
             self.ready_harvests + other.ready_harvests,
             self.wait_s + other.wait_s,
             self.host_overlap_s + other.host_overlap_s,
-            max(self.in_flight_peak, other.in_flight_peak))
+            max(self.in_flight_peak, other.in_flight_peak),
+            self.hedges + other.hedges,
+            self.hedge_wins + other.hedge_wins,
+            self.cancelled + other.cancelled,
+            self.lost + other.lost,
+            self.hedge_waste_s + other.hedge_waste_s)
 
     def summary(self) -> Dict:
         return {"buckets_dispatched": self.dispatched,
@@ -67,7 +92,12 @@ class DispatchStats:
                 "harvest_wait_s": self.wait_s,
                 "host_overlap_s": self.host_overlap_s,
                 "overlap_ratio": self.overlap_ratio,
-                "in_flight_peak": self.in_flight_peak}
+                "in_flight_peak": self.in_flight_peak,
+                "hedges": self.hedges,
+                "hedge_wins": self.hedge_wins,
+                "cancelled": self.cancelled,
+                "lost": self.lost,
+                "hedge_waste_s": self.hedge_waste_s}
 
 
 @dataclass(eq=False)
@@ -89,11 +119,24 @@ class PendingBucket:
     several waves after it was pushed, so its booking context must ride
     with the bucket instead of being supplied by whichever harvest call
     happens to drain it.
+
+    Lifecycle (``state``): DISPATCHED -> HARVESTED on the happy path;
+    an overdue bucket becomes HEDGED when its duplicate launches, the
+    race's loser becomes CANCELLED (discarded, never booked), and a
+    bucket orphaned by a host death becomes LOST.  ``deadline_s`` arms
+    the hedge check; ``not_ready_before`` models a synthetic straggler's
+    long tail (``ready()`` stays False until it matures, which is what
+    an armed deadline cuts short).
     """
     dispatch: object                    # compile/program.py::BucketDispatch
     host: int = -1                      # host stream (-1: single-stream)
     t_dispatch: float = field(default_factory=time.perf_counter)
     book: Optional["BookFn"] = None     # attached by DispatchQueue.push
+    state: str = "DISPATCHED"           # protocol.BUCKET_TRANSITIONS
+    deadline_s: Optional[float] = None  # hedge when overdue (None: never)
+    not_ready_before: float = 0.0       # straggler hold (perf_counter)
+    is_hedge: bool = False              # this leg IS the duplicate
+    pair: Optional["HedgePair"] = None  # set on both legs of a race
 
     @property
     def key(self):
@@ -104,11 +147,44 @@ class PendingBucket:
         return self.dispatch.entries
 
     def ready(self) -> bool:
+        if self.not_ready_before and time.perf_counter() < self.not_ready_before:
+            return False
         return self.dispatch.ready()
 
 
 # booking callback: (pending_bucket, results, elapsed_s_since_dispatch)
 BookFn = Callable[[PendingBucket, Dict[Entry, object], float], None]
+
+
+@dataclass(eq=False)
+class HedgePair:
+    """The two legs of a hedged re-dispatch race.
+
+    Both legs run the SAME compiled program over the SAME entries with
+    the SAME per-task fold_in PRNG keys, so whichever lands first books
+    bitwise-identical results — the race only decides latency, never
+    values.  ``settle`` is the protocol's **sole cancel performer**
+    (``analysis/protocol.py::CANCEL_PERFORMERS``): the winning leg's
+    harvest calls it exactly once, and it cancels every other live leg,
+    guaranteeing single-performer booking — a cancelled leg's dispatch
+    is discarded via the same harvest-once flag, so it can never also be
+    booked.
+    """
+    legs: List[Tuple[PendingBucket, "DispatchQueue"]] = field(
+        default_factory=list)
+    winner: Optional[PendingBucket] = None
+
+    def settle(self, winner: PendingBucket) -> None:
+        """Declare ``winner`` booked; cancel the remaining live legs.
+        Idempotent: a leg that lost to an already-settled race was
+        cancelled before it could harvest, so only the first call acts."""
+        if self.winner is not None:
+            return
+        self.winner = winner
+        for pb, q in self.legs:
+            if pb is winner or pb.state == "LOST":
+                continue
+            q.cancel(pb)
 
 
 class DispatchQueue:
@@ -179,7 +255,32 @@ class DispatchQueue:
 
     def _harvest(self, pb: PendingBucket, book: Optional[BookFn],
                  blocked: bool):
+        if pb.state == "CANCELLED":
+            # The losing leg of a hedge race: discard without booking.
+            # Its wall-clock span (beyond the attribution frontier) is
+            # charged to hedge_waste_s, NOT to the request bill — the
+            # winner already carried the bucket's one billable span, so
+            # billing the loser too would double-charge GB-seconds and
+            # skew the autoscaler EMA.
+            t0 = time.perf_counter()
+            pb.dispatch.discard()
+            t1 = time.perf_counter()
+            if blocked:
+                self.stats.wait_s += t1 - t0
+            self._mark = t1
+            sanitize.check_attribution(t1, self._t_attr)
+            waste = t1 - max(pb.t_dispatch, self._t_attr)
+            self._t_attr = t1
+            self.stats.hedge_waste_s += max(waste, 0.0)
+            self.stats.cancelled += 1
+            return
         t0 = time.perf_counter()
+        if blocked and pb.not_ready_before:
+            # blocking harvest of a held (synthetic-straggler) bucket:
+            # the long tail is part of the wall we are waiting out
+            hold = pb.not_ready_before - t0
+            if hold > 0:
+                time.sleep(hold)
         results = pb.dispatch.harvest()
         t1 = time.perf_counter()
         if blocked:
@@ -197,8 +298,16 @@ class DispatchQueue:
         sanitize.check_attribution(t1, self._t_attr)
         elapsed = t1 - max(pb.t_dispatch, self._t_attr)
         self._t_attr = t1
+        sanitize.check_bucket_bookable(pb)
+        pb.state = "HARVESTED"
         fn = pb.book if pb.book is not None else book
         fn(pb, results, max(elapsed, 0.0))
+        if pb.pair is not None:
+            # this leg won the race: record the outcome and cancel the
+            # loser (HedgePair.settle — the sole cancel performer)
+            if pb.is_hedge:
+                self.stats.hedge_wins += 1
+            pb.pair.settle(pb)
 
     def harvest_ready(self, book: Optional[BookFn] = None) -> int:
         """Book every bucket whose launches all report ready — the
@@ -209,10 +318,59 @@ class DispatchQueue:
         self._note_overlap()
         done = [pb for pb in self._pending if pb.ready()]
         for pb in done:
+            if pb not in self._pending:
+                # removed mid-loop: an earlier harvest settled a hedge
+                # race and cancelled-and-discarded this leg already
+                continue
             self._pending.remove(pb)
             self._harvest(pb, book, blocked=False)
             self.stats.ready_harvests += 1
         return len(done)
+
+    # ---- fault-tolerance lifecycle (ISSUE 10) -------------------------
+    def overdue(self, now: Optional[float] = None) -> List[PendingBucket]:
+        """In-flight buckets past their deadline and still not landed —
+        the hedge candidates.  Already-hedged legs and hedge duplicates
+        themselves are excluded (one duplicate per bucket, ever)."""
+        now = time.perf_counter() if now is None else now
+        return [pb for pb in self._pending
+                if pb.state == "DISPATCHED" and not pb.is_hedge
+                and pb.deadline_s is not None
+                and now - pb.t_dispatch > pb.deadline_s
+                and not pb.ready()]
+
+    def cancel(self, pb: PendingBucket) -> None:
+        """Transition a losing hedge leg to CANCELLED and discard it as
+        soon as its launches land.  Only ``HedgePair.settle`` may call
+        this (enforced statically by analysis/protocol.py)."""
+        sanitize.check_cancel(pb)
+        pb.state = "CANCELLED"
+        pb.not_ready_before = 0.0    # no point holding a discard
+        if pb in self._pending and pb.dispatch.ready():
+            self._pending.remove(pb)
+            self._harvest(pb, None, blocked=False)
+
+    def abandon(self) -> List[PendingBucket]:
+        """A host died: every in-flight bucket on its queue transitions
+        to LOST and is returned for ledger-driven re-dispatch.  The
+        dispatches are never harvested — their results lived on the dead
+        host.  Only ``TopologyBackend.kill_host`` may call this."""
+        pending, self._pending = self._pending, []
+        orphans: List[PendingBucket] = []
+        for pb in pending:
+            if pb.state == "CANCELLED":
+                # a hedge loser awaiting discard: its winner already
+                # booked the entries, so the host taking it down loses
+                # nothing — count the discard and drop the handles
+                self.stats.cancelled += 1
+                continue
+            sanitize.check_abandon(pb)
+            pb.state = "LOST"
+            pb.not_ready_before = 0.0
+            orphans.append(pb)
+        self.stats.lost += len(orphans)
+        self._mark = None
+        return orphans
 
     def harvest_next(self, book: Optional[BookFn] = None) -> bool:
         """Block for the oldest in-flight bucket (the drain has nothing

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
+from typing import Optional
 
 import msgpack
 import numpy as np
@@ -24,6 +25,7 @@ class TaskLedger:
     status: np.ndarray                   # (n_inv,) int8
     preds: np.ndarray                    # (n_inv, tasks_per_inv, N) f32
     attempts: np.ndarray                 # (n_inv,) int16
+    path: Optional[str] = None           # bound by durable sessions
 
     @classmethod
     def create(cls, n_invocations: int, n_obs: int,
@@ -89,6 +91,14 @@ class TaskLedger:
         with open(tmp, "wb") as f:
             f.write(msgpack.packb(payload, use_bin_type=True))
         os.replace(tmp, path)            # atomic — a crash never corrupts
+
+    def checkpoint(self) -> None:
+        """Persist to the bound ``path`` (no-op for in-memory ledgers).
+        Durable sessions bind the path at admission; backends call this
+        after every booking wave, so a crash loses at most one wave of
+        re-executable work and never a booked result."""
+        if self.path is not None:
+            self.save(self.path)
 
     @classmethod
     def load(cls, path: str) -> "TaskLedger":

@@ -8,8 +8,8 @@ the two cannot drift apart:
   * a bucket dispatch is harvested exactly once (a second harvest would
     re-book rows and double-bill the wave);
   * booking only lands on rows in a legal source state per
-    ``LEDGER_TRANSITIONS`` (a DONE row being re-booked outside the wave
-    backend's speculative path means a lost-race or double-harvest);
+    ``LEDGER_TRANSITIONS`` (a DONE row being re-booked means a
+    lost race or a double-harvest);
   * the duration-attribution frontier only moves forward (overlapping
     attribution double-charges GB-seconds and skews the autoscaler EMA);
   * every pushed bucket carries its booking continuation (book-at-push:
@@ -18,7 +18,11 @@ the two cannot drift apart:
     the void);
   * a drain never retires with buckets still in flight OR a pipelined
     wave still unsettled (a lost bucket/wave is work billed but never
-    booked).
+    booked);
+  * bucket lifecycle transitions (hedge, cancel, abandon, book) only
+    leave legal source states per ``BUCKET_TRANSITIONS`` — a
+    double-hedge, a cancel of an already-cancelled leg, or a booking of
+    a CANCELLED/LOST bucket each raise at the transition site.
 
 Checks are no-ops unless the environment variable is set — it is read
 per call so a test can flip it with ``monkeypatch.setenv``.  CI runs the
@@ -31,7 +35,8 @@ import os
 
 import numpy as np
 
-from repro.analysis.protocol import INVOCATION_STATES, LEDGER_TRANSITIONS
+from repro.analysis.protocol import (BUCKET_TRANSITIONS, INVOCATION_STATES,
+                                     LEDGER_TRANSITIONS)
 
 
 class ProtocolError(AssertionError):
@@ -100,6 +105,56 @@ def check_book_at_push(pb) -> None:
             f"bucket {pb.key} pushed without a booking continuation — "
             "book-at-push is required: a deferred harvest has no caller "
             "context to book against")
+
+
+def _check_bucket_transition(pb, action: str) -> None:
+    """Shared driver: ``pb.state`` must be a legal source of ``action``
+    per the protocol's BUCKET_TRANSITIONS table."""
+    legal = BUCKET_TRANSITIONS[action][0]
+    if pb.state not in legal:
+        raise ProtocolError(
+            f"{action} on bucket {pb.key} in state {pb.state} — legal "
+            f"sources are {list(legal)}")
+
+
+def check_hedge(pb) -> None:
+    """A bucket is hedged at most once, and only while plainly
+    DISPATCHED — hedging a HEDGED bucket would launch a third leg the
+    settle logic doesn't know about; hedging a CANCELLED/LOST one
+    duplicates work that is already accounted elsewhere."""
+    if not enabled():
+        return
+    _check_bucket_transition(pb, "hedge")
+
+
+def check_cancel(pb) -> None:
+    """Only a live racing leg (DISPATCHED duplicate or HEDGED original)
+    may be cancelled.  Cancelling a CANCELLED leg means two settle
+    sites fired; cancelling a HARVESTED one means the race was settled
+    after its loser already booked — both are double-performer bugs."""
+    if not enabled():
+        return
+    _check_bucket_transition(pb, "cancel")
+
+
+def check_abandon(pb) -> None:
+    """Host-loss recovery may only orphan in-flight (DISPATCHED/HEDGED)
+    buckets — a HARVESTED or CANCELLED bucket reaching abandon means the
+    queue's bookkeeping already retired it once."""
+    if not enabled():
+        return
+    _check_bucket_transition(pb, "abandon")
+
+
+def check_bucket_bookable(pb) -> None:
+    """A bucket being harvested-for-booking must be a live leg
+    (DISPATCHED or HEDGED).  Booking a CANCELLED bucket means a losing
+    hedge leg's results are entering the ledger alongside the winner's —
+    double-booking; booking a LOST one means a dead host's handles were
+    harvested."""
+    if not enabled():
+        return
+    _check_bucket_transition(pb, "harvest")
 
 
 def check_drained(state, where: str) -> None:

@@ -45,6 +45,16 @@ and one drain stream.  ``TopologyBackend`` is the scheduler over them:
     (``n_pad > DEVICE_PAGE_ROWS``) are routed — and stolen — only by
     hosts whose data axis can stream them.  Decisions land on
     ``BackendRunInfo.axis_plans`` like autoscale decisions.
+  * **fault tolerance** (ISSUE 10) — chaos pools draw identity-keyed
+    failure/straggler verdicts at booking (serverless/chaos.py) exactly
+    as the single-stream backends do; overdue buckets are hedged onto
+    the least-loaded *other* live host through the shared
+    bitwise-reference cache; and ``kill_host`` simulates losing a mesh
+    mid-drain — its page pool is invalidated (directory detach), its
+    in-flight buckets are abandoned (LOST), and their still-RUNNING
+    ledger rows resurface through the pending view to be re-routed
+    onto the survivors, whose pools re-materialize any orphaned pages
+    on first touch.
 
 Determinism: placement and stealing only decide *where* a bucket's
 fixed-shape program runs; per-task PRNG streams are fixed at compile
@@ -57,6 +67,7 @@ hosts (see the B_BLOCK caveat in compile/program.py).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -68,6 +79,7 @@ from repro.serverless.backends import (
     BackendRunInfo, DrainState, PoolConfig, _compile, _StreamBackend,
     make_sharded_compiler, roofline_pending_inv_s,
 )
+from repro.serverless.chaos import chaos_plan
 from repro.serverless.dispatch import (
     DispatchQueue, DispatchStats, PendingBucket,
 )
@@ -101,9 +113,27 @@ class Topology:
     def __init__(self, hosts: List[HostMesh], directory: PageDirectory):
         self.hosts = hosts
         self.directory = directory
+        self.dead: set = set()          # host_ids lost mid-flight
 
     def __len__(self) -> int:
         return len(self.hosts)
+
+    def alive(self) -> List[HostMesh]:
+        """The hosts still schedulable (host loss is permanent for the
+        topology's lifetime — pools persist across drains, corpses
+        don't come back)."""
+        return [h for h in self.hosts if h.host_id not in self.dead]
+
+    def kill(self, host_id: int) -> None:
+        """Lose one host: invalidate its page pool (every resident page
+        and stack dropped, directory withdrawn so no d2d fetch is ever
+        brokered against its device memory) and mark it dead for
+        routing/stealing.  In-flight work recovery is the backend's job
+        (``TopologyBackend.kill_host``)."""
+        if host_id in self.dead:
+            return
+        self.dead.add(host_id)
+        self.hosts[host_id].pool.invalidate()
 
     @classmethod
     def _from_meshes(cls, meshes, page_pool_bytes: int) -> "Topology":
@@ -166,6 +196,8 @@ class TopologyInfo:
     steals: int = 0
     placements: List[Tuple[object, int, float]] = field(
         default_factory=list)           # (bucket key, host, score)
+    host_losses: int = 0                # hosts killed mid-drain
+    lost_buckets: int = 0               # in-flight buckets abandoned
 
 
 @dataclass
@@ -193,9 +225,11 @@ class TopologyBackend(_StreamBackend):
 
     One ``step(state)`` advances one host stream by one wave: the
     session's event loop therefore steps all streams round-robin, and a
-    host's wave is sized by its own autoscaler lane.  Direct scheduler
-    (no fault injection — the wave backend models that); the reference
-    for its results is the single-host inline path, bitwise.
+    host's wave is sized by its own autoscaler lane.  Chaos pools draw
+    identity-keyed fault verdicts at booking (serverless/chaos.py);
+    overdue buckets hedge cross-host; ``kill_host`` loses a mesh
+    mid-drain and the survivors finish every admitted request.  The
+    reference for its results is the single-host inline path, bitwise.
     """
     name = "topology"
 
@@ -234,6 +268,7 @@ class TopologyBackend(_StreamBackend):
                    for h in self.topology.hosts])
         state = TopologyDrainState(plan=_compile().MegabatchPlan(),
                                    info=info)
+        state.chaos = chaos_plan(self.pool)
         # one in-flight queue per host mesh, all feeding one stats block
         info.dispatch = DispatchStats()
         state.queues = {
@@ -271,8 +306,9 @@ class TopologyBackend(_StreamBackend):
         (``n_pad > DEVICE_PAGE_ROWS``: no single device holds the page,
         so the drain must chunk-stream them data-parallel, ISSUE 9) go
         only to hosts whose mesh can stream them — the largest data-axis
-        size that divides ``n_pad``; every other bucket runs anywhere."""
-        hosts = list(range(len(self.topology)))
+        size that divides ``n_pad``; every other bucket runs anywhere.
+        Dead hosts are never eligible."""
+        hosts = [h.host_id for h in self.topology.alive()]
         from repro.compile.program import bucket_family
         from repro.launch.roofline import DEVICE_PAGE_ROWS, GRAM_FAMILIES
         if key.n_pad <= DEVICE_PAGE_ROWS \
@@ -411,7 +447,8 @@ class TopologyBackend(_StreamBackend):
         per_req = self._book_direct(state, pb.entries, results, elapsed)
         if self.autoscaler is not None and pb.entries:
             self.autoscaler.observe(pb.host, elapsed / len(pb.entries))
-        self._note_wave(state, list(per_req), elapsed)
+        if per_req:                     # a fully-failed slice books nothing
+            self._note_wave(state, list(per_req), elapsed)
         state.info.pages = self.topology.page_stats()
         self._checkpoint(state)
 
@@ -461,7 +498,7 @@ class TopologyBackend(_StreamBackend):
                 state.plan, compiler, key, ents, pages=host_pages,
                 b_align=b_align, axis_decision=decision, mesh=axis_mesh,
                 **opts)
-            q.push(PendingBucket(dispatch=bd, host=host_id), book)
+            self._push_bucket(state, q, bd, book, host=host_id)
             state.seen_buckets.add(key)
         lane.waves += 1
         lane.invocations += taken
@@ -469,36 +506,114 @@ class TopologyBackend(_StreamBackend):
         state.info.buckets = len(state.seen_buckets)
         state.info.pages = self.topology.page_stats()
 
+    # ---- fault tolerance ----------------------------------------------
+    def _maybe_hedge(self, state: TopologyDrainState) -> int:
+        """Cross-host hedging: the duplicate leg of an overdue bucket
+        lands on the least-loaded *other* live host and dispatches
+        through the shared single-device cache — the bitwise-reference
+        path — so whichever leg wins the booked rows are identical
+        regardless of either host's axis plan."""
+        if not self._hedge_armed(state):
+            return 0
+        ids = [h.host_id for h in self.topology.alive()
+               if h.host_id in state.queues]
+        n = 0
+        for hid in ids:
+            q = state.queues[hid]
+            for pb in q.overdue():
+                others = [i for i in ids if i != hid] or [hid]
+                target = min(
+                    others, key=lambda i: state.queues[i].in_flight)
+                tpool = self.topology.hosts[target].pool
+                self._hedge_bucket(
+                    state, pb, q, state.queues[target],
+                    compiler=self.compiler,
+                    pages=tpool if tpool.byte_budget > 0 else None,
+                    host=target)
+                n += 1
+        return n
+
+    def kill_host(self, state: TopologyDrainState, host_id: int) -> int:
+        """Lose one host mid-drain (the chaos suite's host-loss fault):
+        its pool is invalidated, its queue's in-flight buckets are
+        abandoned (sole abandon performer — their ledger rows stay
+        RUNNING, so once the dead queue stops shadowing them the
+        pending view resurfaces exactly the orphaned invocations), and
+        its bucket assignments are cleared so ``_route`` re-places them
+        on the survivors, whose pools re-materialize any orphaned pages
+        on first touch.  Returns the number of abandoned buckets."""
+        topo = self.topology
+        if host_id in topo.dead:
+            return 0
+        topo.kill(host_id)
+        q = state.queues.pop(host_id, None)
+        orphans = q.abandon() if q is not None else []
+        for key in [k for k, h in state.assignment.items()
+                    if h == host_id]:
+            del state.assignment[key]
+        info = state.info.topology
+        info.host_losses += 1
+        info.lost_buckets += len(orphans)
+        state.info.pages = topo.page_stats()
+        return len(orphans)
+
     # ---- the stream scheduler -----------------------------------------
     def step(self, state: TopologyDrainState) -> bool:
         """Advance ONE host stream by one wave (round-robin); False once
         no host has pending or in-flight work.  Every step first books
-        any landed buckets on any host (non-blocking), so harvest is
-        interleaved with — and overlapped by — dispatch on other hosts."""
+        any landed buckets on any host (non-blocking) and hedges any
+        overdue ones, so harvest is interleaved with — and overlapped
+        by — dispatch on other hosts."""
         book = lambda pb, res, el: self._book_harvest(state, pb, res, el)
         for q in state.queues.values():
             q.harvest_ready(book)
+        self._maybe_hedge(state)
         groups = state.plan.pending_by_bucket(
             exclude=state.in_flight_entries())
-        n = len(self.topology)
+        gate_wait = None
+        if state.retry_at:              # failed rows awaiting backoff
+            gated = {}
+            for key in list(groups):
+                ents, wait = self._backoff_filter(state, groups[key])
+                if wait is not None:
+                    gate_wait = wait if gate_wait is None \
+                        else min(gate_wait, wait)
+                if ents:
+                    gated[key] = ents
+            groups = gated
+        ids = [h.host_id for h in self.topology.alive()
+               if h.host_id in state.queues]
+        n = len(ids)
         if not groups:
-            # nothing dispatchable: block for the oldest in-flight
-            # bucket, round-robin from the cursor
+            if not n:
+                return False
+            # nothing dispatchable: drain in-flight work.  A blocking
+            # harvest would sleep out a held straggler's hold and
+            # defeat the hedge race, so with hedging armed poll instead
+            if self._hedge_armed(state) \
+                    and any(not state.queues[h].empty for h in ids):
+                if not sum(state.queues[h].harvest_ready(book)
+                           for h in ids):
+                    time.sleep(0.001)
+                return True
             for off in range(n):
-                h = (state.cursor + off) % n
+                h = ids[(state.cursor + off) % n]
                 if state.queues[h].harvest_next(book):
-                    state.cursor = (h + 1) % n
+                    state.cursor = (state.cursor + off + 1) % n
                     return True
+            if gate_wait is not None:   # only backoff gates remain
+                time.sleep(min(gate_wait, 0.05))
+                return True
             return False
         self._route(state, groups)      # retries may resurface buckets
         for off in range(n):
-            h = (state.cursor + off) % n
+            h = ids[(state.cursor + off) % n]
             mine = [k for k in groups if state.assignment[k] == h]
             if not mine and self.pool.steal:
                 mine = self._try_steal(state, groups, h)
             if not mine:
                 continue
             self._host_wave(state, h, mine, groups)
-            state.cursor = (h + 1) % n
+            state.cursor = (state.cursor + off + 1) % n
             return True
         return False

@@ -104,6 +104,32 @@ def test_rogue_booking_site_fails_protocol_pass(tmp_path):
     assert "booking-performer" in rules
 
 
+def test_rogue_cancel_site_fails_protocol_pass(tmp_path):
+    """A ``.cancel()`` outside HedgePair.settle could cancel BOTH legs
+    of a race (bucket never booked) or cancel after booking (double
+    accounting) — the single-cancel-performer rule must catch it."""
+    tmp = _mutated_tree(
+        tmp_path, "serverless/backends.py",
+        "    def _checkpoint(self, state: DrainState):",
+        "    def _checkpoint(self, state: DrainState):\n"
+        "        state.queue.cancel(state.queue._pending[0])")
+    rules = {f.rule for f in protocol.run(tmp)}
+    assert "cancel-performer" in rules
+
+
+def test_rogue_abandon_site_fails_protocol_pass(tmp_path):
+    """An ``.abandon()`` outside TopologyBackend.kill_host silently
+    drops in-flight work without the ledger/pending-view bookkeeping
+    that re-dispatches it."""
+    tmp = _mutated_tree(
+        tmp_path, "serverless/backends.py",
+        "    def _checkpoint(self, state: DrainState):",
+        "    def _checkpoint(self, state: DrainState):\n"
+        "        state.queue.abandon()")
+    rules = {f.rule for f in protocol.run(tmp)}
+    assert "abandon-performer" in rules
+
+
 def test_identity_equality_regression_fails_protocol_pass(tmp_path):
     tmp = _mutated_tree(
         tmp_path, "serverless/dispatch.py",
@@ -321,6 +347,40 @@ def test_sanitizer_trips_on_lost_bucket(monkeypatch):
     check_drained(_State, "test retire")     # empty queue passes
 
 
+def test_sanitizer_trips_on_double_hedge(monkeypatch):
+    """Hedging an already-HEDGED bucket would launch a third leg the
+    settle logic doesn't know about."""
+    from repro.serverless.dispatch import PendingBucket
+    from repro.serverless.sanitize import ProtocolError, check_hedge
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    _, bd = _dispatched_bucket()
+    pb = PendingBucket(dispatch=bd)
+    check_hedge(pb)                          # DISPATCHED: legal
+    pb.state = "HEDGED"
+    with pytest.raises(ProtocolError, match="hedge .* HEDGED"):
+        check_hedge(pb)
+
+
+def test_sanitizer_trips_on_booking_cancelled_bucket(monkeypatch):
+    """Booking a CANCELLED bucket means a losing hedge leg's results
+    are entering the ledger alongside the winner's — double-booking.
+    Cancelling it again means two settle sites fired."""
+    from repro.serverless.dispatch import PendingBucket
+    from repro.serverless.sanitize import (
+        ProtocolError, check_bucket_bookable, check_cancel,
+    )
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    _, bd = _dispatched_bucket()
+    pb = PendingBucket(dispatch=bd)
+    check_bucket_bookable(pb)                # DISPATCHED: legal
+    check_cancel(pb)
+    pb.state = "CANCELLED"
+    with pytest.raises(ProtocolError, match="harvest .* CANCELLED"):
+        check_bucket_bookable(pb)
+    with pytest.raises(ProtocolError, match="cancel .* CANCELLED"):
+        check_cancel(pb)
+
+
 def test_transition_table_matches_ledger():
     """The table the sanitizer and static checker share names real
     TaskLedger methods and the module's state constants."""
@@ -329,3 +389,11 @@ def test_transition_table_matches_ledger():
         assert callable(getattr(L.TaskLedger, name))
     for sname, code in protocol.INVOCATION_STATES.items():
         assert getattr(L, sname) == code
+    # the bucket lifecycle table only names declared states, and every
+    # non-initial state is reachable
+    reached = set()
+    for action, (srcs, dst) in protocol.BUCKET_TRANSITIONS.items():
+        assert set(srcs) <= set(protocol.BUCKET_STATES), action
+        assert dst in protocol.BUCKET_STATES, action
+        reached.add(dst)
+    assert reached == set(protocol.BUCKET_STATES) - {"PLANNED"}

@@ -188,10 +188,17 @@ def test_page_pool_shared_across_equal_data():
     assert sess.backend.pages.n_pages == 1
 
 
-def test_page_pool_eviction_accounting():
+def test_page_pool_eviction_accounting(monkeypatch):
     """A byte budget below the traffic's dataset set forces LRU evictions
     and re-transfers, all visible in the stats (pages needed by the
-    in-flight launch are never evicted)."""
+    in-flight launch are never evicted).
+
+    Runs chaos-free even under REPRO_CHAOS: injected retries re-touch
+    resident pages and legitimately add hits, which would smear the
+    exact transfer counts this test pins.  Estimate bitwise parity
+    under chaos is tests/test_chaos.py's job; this one is about LRU
+    byte accounting."""
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
     page_bytes = 104 * 8 * 4                       # N_pad=104, P_pad=8
     pool = PagePool(byte_budget=page_bytes)        # fits exactly one page
     backend = make_backend("inline")
@@ -231,10 +238,15 @@ def test_page_pool_disabled_by_budget_zero():
 # ---------------------------------------------------------------------------
 # non-blocking dispatch (ISSUE 5)
 # ---------------------------------------------------------------------------
-def test_inflight_entries_excluded_from_pending_and_harvested_later():
+def test_inflight_entries_excluded_from_pending_and_harvested_later(
+        monkeypatch):
     """A dispatched bucket's invocations leave the scheduler's pending
     view immediately (no double dispatch) but only reach the ledger at
-    harvest — a later step books them while new work dispatches."""
+    harvest — a later step books them while new work dispatches.
+
+    Chaos-free even under REPRO_CHAOS: injected failures retry and
+    inflate the exact dispatched/harvested counts pinned below."""
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
     backend = make_backend("inline")
     state = backend.begin_drain()
     for n, seed in ((100, 30), (300, 31)):        # two distinct buckets
@@ -307,8 +319,11 @@ def test_partial_ledger_resume_after_fault_abort():
     ledgers; swapping in a healthy pool resumes exactly the missing
     invocations and the result matches the clean path bitwise."""
     plan, data = _plr(110, seed=13, n_rep=4)
+    # seed chosen so the first wave under the identity-keyed fault plan
+    # (serverless/chaos.py) mixes a success with the budget-exhausting
+    # failure — the ledger is left genuinely partial
     doomed = PoolConfig(n_workers=2, memory_mb=256, failure_rate=0.5,
-                        max_retries=0, seed=2)
+                        max_retries=0, seed=3)
     sess = DMLSession(backend="wave", pool=doomed)
     rid = sess.submit(plan, data)
     with pytest.raises(RuntimeError, match="retry budget"):

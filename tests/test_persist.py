@@ -154,6 +154,61 @@ def test_custom_call_programs_are_not_persisted(tmp_path):
     assert cache.skipped_unportable == 1
     assert list(Path(cache.cache_dir).glob("*.prog")) == []   # no disk entry
     # ...but the IN-PROCESS tier still serves it (pointers are valid
-    # within the process — recycled-container reuse)
-    assert cache.lookup(jax_build(), backend_platform(), fp) is compiled
+    # within the process — recycled-container reuse), operand-pinned
+    # like every AOT executable the cache hands out
+    served = cache.lookup(jax_build(), backend_platform(), fp)
+    assert served._prog is compiled
     assert cache.loads == 0 and cache.process_hits == 1
+
+
+def test_aot_calls_pin_host_operands(tmp_path):
+    """Direct AOT executable calls (fresh or deserialized) read their
+    host operands asynchronously WITHOUT retaining them — a temp numpy
+    operand freed right after dispatch is a use-after-free the device
+    books as garbage predictions (caught as nondeterministic thetas on
+    disk-warm resumed drains).  Every executable the persistent cache
+    hands out must therefore be operand-pinned: each call's argument
+    tuple stays referenced until that call's outputs land."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compile.persist import (PersistentProgramCache,
+                                       _PinnedExecutable,
+                                       backend_platform, jax_build,
+                                       pin_executable)
+
+    cache = PersistentProgramCache(str(tmp_path / "store"))
+    build, platform = jax_build(), backend_platform()
+    fp = ("test-v1", "pin", 8, 8, 8, 8, None, (), False)
+    compiled = jax.jit(lambda x: x * 2.0).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+    cache.store(build, platform, fp, compiled)
+
+    # the process tier serves a pinned wrapper; so does a cold
+    # deserialize in a cleared process
+    assert isinstance(cache.lookup(build, platform, fp),
+                      _PinnedExecutable)
+    PersistentProgramCache._process_programs.clear()
+    loaded = cache.lookup(build, platform, fp)
+    assert isinstance(loaded, _PinnedExecutable)
+
+    # the pin itself: the operand tuple is held from dispatch until the
+    # outputs land, then released by the next call's lazy drain
+    x = np.arange(4, dtype=np.float32)
+    out = loaded(x)
+    assert any(a is x for (_, args) in loaded._inflight for a in args)
+    jax.block_until_ready(out)
+    np.testing.assert_array_equal(np.asarray(out), x * 2.0)
+    out2 = loaded(np.zeros(4, np.float32))       # drains the landed call
+    jax.block_until_ready(out2)
+    assert not any(a is x for (_, args) in loaded._inflight for a in args)
+
+    # a raw wrapper over a plain callable still pins and releases
+    pinned = pin_executable(lambda *a: np.float32(0.0))
+    y = np.ones(3, np.float32)
+    pinned(y)
+    ((_, args),) = pinned._inflight
+    assert args[0] is y
+    pinned(np.zeros(1, np.float32))              # landed (numpy: always
+    ((_, args2),) = pinned._inflight             # ready) -> released
+    assert args2[0] is not y
